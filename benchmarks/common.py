@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timing, CSV emission, synthetic skies."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters, out
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def make_sky_and_catalog(seed=0, num_sources=16, field=160, epochs=1):
+    from repro.core import heuristic, synthetic
+    from repro.core.priors import default_priors
+    priors = default_priors()
+    sky = synthetic.sample_sky(jax.random.PRNGKey(seed),
+                               num_sources=num_sources, field=field,
+                               epochs=epochs, priors=priors)
+    cand = sky.truth.pos + 0.6 * jax.random.normal(
+        jax.random.PRNGKey(seed + 1), sky.truth.pos.shape)
+    est = heuristic.measure_catalog(sky.images, sky.metas, cand)
+    return sky, est, priors

@@ -1,0 +1,54 @@
+"""Figure 3 reproduction: intra-node scaling of sources/second.
+
+The paper strong-scales 154 sources over 1–16 Julia threads and hits a
+serial-GC wall beyond 4 threads.  The TPU adaptation batches sources with
+``vmap`` — this benchmark sweeps the batch width and reports sources/sec.
+There is no GC term under jit (DESIGN.md §2.4); the analogous ceiling is
+the masked ``while_loop`` running until the *slowest* source in the batch
+converges, so sources/sec saturates (rather than degrades) once batches
+mix hard and easy sources.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit, make_sky_and_catalog
+from repro.core import elbo, infer, newton
+
+
+def main():
+    num = 32
+    sky, est_h, priors = make_sky_and_catalog(1, num_sources=num,
+                                              field=224)
+    x, corners = infer.extract_patches(sky.images, sky.metas, est_h.pos,
+                                       24)
+    from repro.core.synthetic import render_total
+    total = render_total(est_h, sky.metas, 224)
+    expd, _ = infer.extract_patches(total, sky.metas, est_h.pos, 24)
+    import jax.numpy as jnp
+    from repro.core.model import render_source_patch
+    own = jax.jit(jax.vmap(lambda s, cs: jax.vmap(
+        lambda m, c: render_source_patch(s, m, c, 24))(sky.metas, cs)))(
+            est_h, corners)
+    bg = jnp.maximum(expd - own, 1e-3)
+    thetas = jax.jit(jax.vmap(lambda s: elbo.init_theta(s, priors)))(est_h)
+    objective = infer.make_objective(sky.metas, priors)
+
+    for width in (1, 2, 4, 8, 16, 32):
+        idx = jnp.arange(width) % num
+        args = (thetas[idx], x[idx], bg[idx], corners[idx])
+        fit = lambda: newton.fit_batch(objective, *args, max_iters=50)
+        jax.block_until_ready(fit().theta)      # compile
+        t0 = time.perf_counter()
+        res = fit()
+        jax.block_until_ready(res.theta)
+        dt = time.perf_counter() - t0
+        sps = width / dt
+        emit(f"fig3.batch{width}", dt * 1e6,
+             f"sources_per_sec={sps:.2f};max_iters={int(res.iters.max())}")
+
+
+if __name__ == "__main__":
+    main()

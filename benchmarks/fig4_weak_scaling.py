@@ -1,0 +1,34 @@
+"""Figure 4 reproduction: weak scaling — runtime components vs node count
+(fixed per-node workload, the paper's 16→256-node sweep).
+
+Expectation from the paper: near-flat optimize time, imbalance ≤ ~7%,
+fetch (global-array) share growing with node count.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.scaling_sim import (clustered_positions, simulate,
+                                    synth_sky_costs)
+
+SOURCES_PER_NODE = 1024
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for nodes in (16, 32, 64, 128, 256):
+        n = SOURCES_PER_NODE * nodes
+        pos = clustered_positions(rng, n, extent=4096.0 * np.sqrt(nodes))
+        costs = synth_sky_costs(rng, n)
+        r = simulate(pos, costs, nodes)
+        emit(f"fig4.nodes{nodes}", r.total_time * 1e6,
+             f"srcs={n};opt={r.optimize_time:.1f}s;"
+             f"imb={r.imbalance_time:.1f}s;fetch={r.fetch_time:.1f}s;"
+             f"sched={r.sched_time:.2f}s;"
+             f"imb_frac={r.imbalance_time / r.total_time:.2%};"
+             f"sps={r.sources_per_sec:.1f}")
+
+
+if __name__ == "__main__":
+    main()

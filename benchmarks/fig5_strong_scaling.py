@@ -1,0 +1,31 @@
+"""Figure 5 reproduction: strong scaling — the paper's 332,631-source
+region over 16→256 nodes, runtime component breakdown."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.scaling_sim import (clustered_positions, simulate,
+                                    synth_sky_costs)
+
+TOTAL_SOURCES = 332_631     # paper §VI-C
+
+
+def main():
+    rng = np.random.default_rng(1)
+    pos = clustered_positions(rng, TOTAL_SOURCES, extent=65536.0)
+    costs = synth_sky_costs(rng, TOTAL_SOURCES)
+    base = None
+    for nodes in (16, 32, 64, 128, 256):
+        r = simulate(pos, costs, nodes)
+        if base is None:
+            base = r.total_time * nodes
+        eff = base / (r.total_time * nodes)
+        emit(f"fig5.nodes{nodes}", r.total_time * 1e6,
+             f"opt={r.optimize_time:.1f}s;imb={r.imbalance_time:.1f}s;"
+             f"fetch={r.fetch_time:.1f}s;sched={r.sched_time:.2f}s;"
+             f"parallel_eff={eff:.2%};sps={r.sources_per_sec:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Figure 6 reproduction: sources/second vs node count, and the §III-C
+decomposition comparison — source-level batches (chosen strategy) vs
+equal-area sky regions (rejected strategy), on a clustered sky."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.scaling_sim import (clustered_positions, simulate,
+                                    synth_sky_costs)
+
+
+def main():
+    rng = np.random.default_rng(2)
+    n = 65_536
+    pos = clustered_positions(rng, n, extent=32768.0)
+    costs = synth_sky_costs(rng, n)
+    for nodes in (16, 64, 256):
+        src = simulate(pos, costs, nodes, strategy="source")
+        reg = simulate(pos, costs, nodes, strategy="region")
+        emit(f"fig6.nodes{nodes}", src.total_time * 1e6,
+             f"sps_source={src.sources_per_sec:.1f};"
+             f"sps_region={reg.sources_per_sec:.1f};"
+             f"speedup={src.sources_per_sec / reg.sources_per_sec:.2f}x;"
+             f"imb_source={src.imbalance_time / src.total_time:.2%};"
+             f"imb_region={reg.imbalance_time / reg.total_time:.2%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Roofline analysis over the dry-run sweep results (requirement (g)).
+
+Reads results/dryrun/*.json (written by ``repro.launch.dryrun --all``) and
+derives, per (arch × shape × mesh):
+
+    compute    = FLOPs / (chips × 197 TFLOP/s bf16)
+    memory     = HBM bytes / (chips × 819 GB/s)
+    collective = per-device collective bytes / 50 GB/s per ICI link
+                 (+ DCN bytes / 25 GB/s for cross-pod traffic)
+
+FLOPs/HBM bytes come from the trip-count-aware jaxpr counter (global →
+divided by chips); collective bytes come from the per-device optimized
+HLO (already per-device), bf16-corrected for the CPU backend's f32
+normalization.  MODEL_FLOPS = 6·N(_active)·D for train, 2·N·D per token
+for serving.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 25e9
+
+ARCH_N = {     # total / active params (approx from configs)
+    "gemma3-4b": (4.5e9, 4.5e9),
+    "smollm-360m": (0.41e9, 0.41e9),
+    "qwen3-32b": (34.2e9, 34.2e9),
+    "deepseek-7b": (7.3e9, 7.3e9),
+    "mamba2-780m": (0.85e9, 0.85e9),
+    "llava-next-mistral-7b": (7.3e9, 7.3e9),
+    "zamba2-2.7b": (2.8e9, 2.8e9),
+    "musicgen-large": (1.6e9, 1.6e9),
+    "dbrx-132b": (132e9, 36e9),
+    "grok-1-314b": (314e9, 86e9),
+}
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,
+    "long_500k": 1,
+}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    tot, act = ARCH_N.get(arch, (0, 0))
+    toks = SHAPE_TOKENS[shape]
+    if shape == "train_4k":
+        return 6.0 * act * toks
+    return 2.0 * act * toks
+
+
+def analyze(result: dict) -> dict:
+    chips = result["chips"]
+    flops_dev = result["flops_global"] / chips
+    hbm_dev = result["hbm_bytes_global"] / chips
+    coll = result["collectives"]
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = hbm_dev / HBM_BW
+    ici = (coll["total"] - coll["dcn_total"]) / ICI_BW
+    dcn = coll["dcn_total"] / DCN_BW
+    t_x = ici + dcn
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])
+    mf = model_flops(result["arch"], result["shape"])
+    step = max(t_c, t_m, t_x)   # perfectly-overlapped lower bound
+    return {
+        "arch": result["arch"], "shape": result["shape"],
+        "mesh": result["mesh"], "chips": chips,
+        "t_compute_ms": t_c * 1e3, "t_memory_ms": t_m * 1e3,
+        "t_collective_ms": t_x * 1e3, "t_dcn_ms": dcn * 1e3,
+        "bottleneck": dom[0],
+        "model_flops": mf,
+        "useful_flops_ratio": mf / max(result["flops_global"], 1.0),
+        "roofline_fraction": (mf / chips / PEAK_FLOPS) / max(step, 1e-12),
+        "temp_gib": (result["memory"]["temp_bytes"] or 0) / 2**30,
+        "note": result.get("note", ""),
+    }
+
+
+def main(out_dir: str = "results/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(path))
+        if "skipped" in r:
+            print(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']},0,"
+                  f"SKIP:{r['skipped'][:60]}")
+            continue
+        if "flops_global" not in r:
+            continue
+        a = analyze(r)
+        rows.append(a)
+        print(f"roofline.{a['arch']}.{a['shape']}.{a['mesh']},"
+              f"{max(a['t_compute_ms'], a['t_memory_ms'], a['t_collective_ms']) * 1e3:.0f},"
+              f"compute={a['t_compute_ms']:.1f}ms;"
+              f"memory={a['t_memory_ms']:.1f}ms;"
+              f"collective={a['t_collective_ms']:.1f}ms;"
+              f"bottleneck={a['bottleneck']};"
+              f"useful_ratio={a['useful_flops_ratio']:.2f};"
+              f"roofline_frac={a['roofline_fraction']:.2%};"
+              f"temp={a['temp_gib']:.1f}GiB")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

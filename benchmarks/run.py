@@ -1,0 +1,38 @@
+"""Benchmark runner: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Roofline rows (from the
+dry-run sweep) are included when results/dryrun exists.
+"""
+from __future__ import annotations
+
+import os
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig3_batch_scaling, fig4_weak_scaling,
+                            fig5_strong_scaling, fig6_sources_per_sec,
+                            table1_accuracy)
+    suites = [
+        ("table1", table1_accuracy.main),
+        ("fig3", fig3_batch_scaling.main),
+        ("fig4", fig4_weak_scaling.main),
+        ("fig5", fig5_strong_scaling.main),
+        ("fig6", fig6_sources_per_sec.main),
+    ]
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception:
+            print(f"{name}.ERROR,0,{traceback.format_exc(limit=1)!r}")
+
+    if os.path.isdir("results/dryrun"):
+        from benchmarks import roofline
+        try:
+            roofline.main("results/dryrun")
+        except Exception:
+            print(f"roofline.ERROR,0,{traceback.format_exc(limit=1)!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Shared machinery for the weak/strong-scaling reproductions (Figs 4–6).
+
+Real per-source optimization costs are *measured* on this machine from
+batched Newton runs; the multi-node schedule is then simulated with the
+actual scheduler (core/decompose + runtime/scheduler) at paper scale.
+Runtime components mirror the paper's breakdown: optimization, load
+imbalance, image/global-array traffic (from the ImageStore fetch model),
+and scheduling overhead.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import decompose
+
+# measured on this host (benchmarks/fig3): per-Newton-iteration cost of a
+# single source at patch 24 × 5 bands, seconds.  The simulation scales
+# per-source cost = iters × SEC_PER_ITER.
+SEC_PER_ITER = 0.015
+IMAGE_FETCH_SEC = 0.002       # per unique (image tile, node) fetch
+SCHED_PER_ROUND = 0.002
+
+
+@dataclass
+class SimResult:
+    nodes: int
+    sources: int
+    total_time: float
+    optimize_time: float
+    imbalance_time: float
+    fetch_time: float
+    sched_time: float
+    sources_per_sec: float
+
+
+def synth_sky_costs(rng, n):
+    """Iteration counts with the paper's heavy tail (1 s – 2 min range)."""
+    base = rng.lognormal(mean=2.2, sigma=0.6, size=n)     # ~9 iters median
+    return np.clip(base, 3, 120)
+
+
+def clustered_positions(rng, n, extent):
+    """80/10 clustered sky (matches the paper's nonuniform density)."""
+    n_c = int(0.8 * n)
+    centers = rng.uniform(0, extent, (max(n // 200, 1), 2))
+    which = rng.integers(0, centers.shape[0], n_c)
+    cluster = centers[which] + rng.normal(0, extent * 0.02, (n_c, 2))
+    rest = rng.uniform(0, extent, (n - n_c, 2))
+    return np.clip(np.concatenate([cluster, rest]), 0, extent)
+
+
+def simulate(positions, iter_costs, nodes, batch=64, strategy="source",
+             tile=256.0):
+    """Simulate one inference job; returns the paper-style breakdown."""
+    n = positions.shape[0]
+    extent = float(positions.max() + 1)
+    costs_sec = iter_costs * SEC_PER_ITER
+    if strategy == "source":
+        plan = decompose.make_plan(positions, costs_sec, nodes, batch,
+                                   extent=extent)
+    else:
+        plan = decompose.make_region_plan(positions, costs_sec, nodes,
+                                          batch, extent=extent)
+
+    node_time = np.zeros(nodes)
+    fetch_time = np.zeros(nodes)
+    seen_tiles = [set() for _ in range(nodes)]
+    per_round_max = 0.0
+    for b in plan.batches:
+        round_time = np.zeros(nodes)
+        for sh in range(nodes):
+            idx = b[sh][b[sh] >= 0]
+            if idx.size == 0:
+                continue
+            # masked while_loop: a batch costs its slowest member × a
+            # utilization factor for the mixed batch
+            round_time[sh] = (costs_sec[idx].max()
+                              + 0.1 * costs_sec[idx].mean() * len(idx))
+            for s in idx:
+                t = (int(positions[s, 0] // tile),
+                     int(positions[s, 1] // tile))
+                if t not in seen_tiles[sh]:
+                    seen_tiles[sh].add(t)
+                    fetch_time[sh] += IMAGE_FETCH_SEC * 5  # 5 bands
+        node_time += round_time
+        per_round_max += round_time.max()
+
+    opt = node_time.mean()
+    imb = per_round_max - opt
+    fetch = fetch_time.mean()
+    sched = SCHED_PER_ROUND * len(plan.batches)
+    total = per_round_max + fetch + sched
+    return SimResult(
+        nodes=nodes, sources=n, total_time=total, optimize_time=opt,
+        imbalance_time=imb, fetch_time=fetch, sched_time=sched,
+        sources_per_sec=n / total)

@@ -1,0 +1,52 @@
+"""Quickstart: infer a small astronomical catalog from synthetic images.
+
+Samples a sky from the Celeste generative model, builds a candidate
+catalog with the Photo-style heuristic, runs variational inference with
+the trust-region Newton optimizer, and prints the error comparison —
+a miniature of the paper's Table I.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+
+from repro.core import heuristic, infer, synthetic
+from repro.core.priors import default_priors
+
+
+def main():
+    priors = default_priors()
+    print("sampling a synthetic sky (8 sources, 5 bands, 128px)...")
+    sky = synthetic.sample_sky(jax.random.PRNGKey(0), num_sources=8,
+                               field=128, priors=priors)
+
+    candidates = sky.truth.pos + 0.6 * jax.random.normal(
+        jax.random.PRNGKey(1), sky.truth.pos.shape)
+    photo = heuristic.measure_catalog(sky.images, sky.metas, candidates)
+
+    print("running Celeste variational inference (trust-region Newton)...")
+    t0 = time.time()
+    thetas, stats = infer.run_inference(
+        sky.images, sky.metas, photo, priors, patch=24, batch=8)
+    print(f"  {stats.total_sources} sources, {stats.converged} converged, "
+          f"max {stats.iters.max()} Newton iters, {time.time()-t0:.1f}s")
+
+    celeste = infer.infer_catalog(thetas)
+    err_p = heuristic.catalog_errors(photo, sky.truth)
+    err_c = heuristic.catalog_errors(celeste, sky.truth)
+    print(f"\n{'metric':14s} {'photo':>8s} {'celeste':>8s}")
+    for k in ("position", "brightness", "color_ug", "color_gr",
+              "color_ri", "color_iz"):
+        star = " *" if err_c[k] < err_p[k] else ""
+        print(f"{k:14s} {err_p[k]:8.3f} {err_c[k]:8.3f}{star}")
+
+    # Bayesian uncertainty — the paper's core motivation (§I)
+    from repro.core import elbo
+    sds = jax.vmap(elbo.posterior_sd)(thetas)
+    print("\nposterior sd of ref-band flux (first 4 sources):",
+          [round(float(s), 1) for s in sds["ref_flux"][:4]])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Serve a zoo model with batched requests: prefill + decode loop,
+optionally with an int8-quantized KV cache (the decode_32k memory fix).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-32b --reduced \
+        --batch 4 --prompt-len 64 --gen-len 32 --cache-dtype int8
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,348 @@
+"""Trip-count-aware cost accounting for the roofline analysis.
+
+XLA's ``compiled.cost_analysis()`` visits each HLO instruction once, so a
+``lax.scan`` over 64 layers contributes its body cost *once* — useless for
+a roofline.  This module provides:
+
+  * ``jaxpr_cost(fn, *args)`` — walks the jaxpr (scan lengths explicit,
+    remat recompute explicit after ``jax.grad`` tracing) and counts
+      - flops: dot_general/conv 2·M·K·N·batch; elementwise ≈ 1/elem
+      - hbm_bytes: a fusion-aware traffic model — matmul operands/outputs,
+        scan per-iteration xs/ys/carry, gather/scatter, top-level args and
+        results.  Pure elementwise intermediates are assumed fused (TPU
+        XLA fuses them into neighboring matmuls/loops).
+  * ``hlo_collectives(hlo_text)`` — per-collective byte totals from the
+    optimized HLO, with while-loop trip counts recovered from loop
+    condition constants and multiplied through, split ICI vs DCN.
+
+Both are *global* (all-device) totals for jaxpr costs; divide by chip
+count for per-device roofline terms (documented in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+from jax import core
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    detail: dict = field(default_factory=dict)
+
+    def add(self, kind: str, flops: float, bytes_: float):
+        self.flops += flops
+        self.hbm_bytes += bytes_
+        d = self.detail.setdefault(kind, [0.0, 0.0])
+        d[0] += flops
+        d[1] += bytes_
+
+
+def _size(aval) -> int:
+    return int(np.prod(aval.shape)) if aval.shape else 1
+
+
+def _bytes(aval) -> int:
+    return _size(aval) * aval.dtype.itemsize
+
+
+_ELEMWISE_FLOP = {
+    "add", "sub", "mul", "div", "max", "min", "neg", "abs", "floor",
+    "exp", "log", "tanh", "logistic", "rsqrt", "sqrt", "pow",
+    "integer_pow", "erf", "sin", "cos", "select_n", "ge", "gt", "le",
+    "lt", "eq", "ne", "and", "or", "not", "xor", "sign", "cumsum",
+    "cumlogsumexp", "cummax", "reduce_sum", "reduce_max", "reduce_min",
+    "reduce_prod", "clamp", "round", "nextafter", "rem", "atan2",
+    "logsumexp", "square",
+}
+
+
+def _count_eqn(eqn, mult: float, cost: Cost):
+    prim = eqn.primitive.name
+
+    if prim in ("dot_general",):
+        dnums = eqn.params["dimension_numbers"]
+        (lc, rc), (lb, rb) = dnums
+        lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+        out = eqn.outvars[0].aval
+        k = np.prod([lhs.shape[i] for i in lc]) if lc else 1
+        flops = 2.0 * _size(out) * float(k)
+        bytes_ = _bytes(lhs) + _bytes(rhs) + _bytes(out)
+        cost.add("dot", mult * flops, mult * bytes_)
+        return
+
+    if prim in ("conv_general_dilated",):
+        out = eqn.outvars[0].aval
+        rhs = eqn.invars[1].aval
+        flops = 2.0 * _size(out) * _size(rhs) / max(rhs.shape[0], 1)
+        bytes_ = sum(_bytes(v.aval) for v in eqn.invars) + _bytes(out)
+        cost.add("conv", mult * flops, mult * bytes_)
+        return
+
+    if prim in ("gather", "take", "dynamic_slice", "dynamic_update_slice",
+                "scatter", "scatter-add", "scatter_add"):
+        bytes_ = _bytes(eqn.outvars[0].aval)
+        if prim.startswith("scatter") or prim == "dynamic_update_slice":
+            bytes_ += sum(_bytes(v.aval) for v in eqn.invars[1:2])
+        cost.add("gather", 0.0, mult * bytes_)
+        return
+
+    if prim == "scan":
+        length = eqn.params["length"]
+        n_carry = eqn.params["num_carry"]
+        n_consts = eqn.params["num_consts"]
+        body = eqn.params["jaxpr"]
+        inner = Cost()
+        _count_jaxpr(body.jaxpr, 1.0, inner)
+        cost.flops += mult * length * inner.flops
+        cost.hbm_bytes += mult * length * inner.hbm_bytes
+        for k, (f, b) in inner.detail.items():
+            d = cost.detail.setdefault(k, [0.0, 0.0])
+            d[0] += mult * length * f
+            d[1] += mult * length * b
+        # per-iteration xs/ys slices are real HBM traffic
+        xs = eqn.invars[n_consts + n_carry:]
+        ys = eqn.outvars[n_carry:]
+        per_iter = sum(_bytes(v.aval) // max(length, 1) for v in xs)
+        per_iter += sum(_bytes(v.aval) // max(length, 1) for v in ys)
+        cost.add("scan_io", 0.0, mult * length * per_iter)
+        return
+
+    if prim == "while":
+        # bounded loops only (Newton ≤ max_iters); estimate with cond
+        body = eqn.params["body_jaxpr"]
+        inner = Cost()
+        _count_jaxpr(body.jaxpr, 1.0, inner)
+        trips = eqn.params.get("_trip_hint", 1)
+        cost.add("while", mult * trips * inner.flops,
+                 mult * trips * inner.hbm_bytes)
+        return
+
+    if prim in ("pjit", "closed_call", "core_call", "custom_jvp_call",
+                "custom_vjp_call", "custom_vjp_call_jaxpr", "remat2",
+                "checkpoint", "custom_partitioning", "shard_map"):
+        sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+        if sub is None:
+            return
+        jx = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+        m = mult
+        if prim == "shard_map":
+            # body shapes are PER-SHARD; the body runs on every device —
+            # scale to keep the counter's global-total convention
+            mesh = eqn.params.get("mesh")
+            if mesh is not None:
+                try:
+                    m = mult * float(np.prod(list(mesh.shape.values())))
+                except Exception:
+                    m = mult
+        _count_jaxpr(jx, m, cost)
+        return
+
+    if prim in ("psum", "all_gather", "reduce_scatter", "all_to_all",
+                "ppermute", "psum_invariant"):
+        bytes_ = sum(_bytes(v.aval) for v in eqn.invars)
+        cost.add("collective_explicit", 0.0, 0.0)
+        d = cost.detail.setdefault("explicit_collective_bytes", [0.0, 0.0])
+        d[1] += mult * bytes_
+        return
+
+    if prim in _ELEMWISE_FLOP:
+        out = eqn.outvars[0].aval
+        cost.add("elemwise", mult * _size(out), 0.0)
+        return
+
+    # default: free (reshapes, transposes, converts, broadcasts...)
+    cost.add("other", 0.0, 0.0)
+
+
+def _count_jaxpr(jaxpr, mult: float, cost: Cost):
+    for eqn in jaxpr.eqns:
+        _count_eqn(eqn, mult, cost)
+
+
+def jaxpr_cost(fn, *args, **kwargs) -> Cost:
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    cost = Cost()
+    _count_jaxpr(closed.jaxpr, 1.0, cost)
+    # top-level I/O (params read once, outputs written once)
+    io_bytes = sum(_bytes(v.aval) for v in closed.jaxpr.invars)
+    io_bytes += sum(_bytes(v.aval) for v in closed.jaxpr.outvars)
+    cost.add("top_io", 0.0, float(io_bytes))
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing with loop trip counts
+# ---------------------------------------------------------------------------
+
+_DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+             "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+             "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+
+def _split_computations(hlo: str) -> dict:
+    """name -> instruction lines.  Header lines look like
+    ``%name (args...) -> type {`` (args may nest parens)."""
+    comps = {}
+    cur, body = None, []
+    for line in hlo.splitlines():
+        ls = line.strip()
+        if ls.endswith("{") and " -> " in ls and "=" not in ls.split("(")[0]:
+            name = ls.split("(")[0].strip()
+            name = name.replace("ENTRY", "").strip().lstrip("%").strip()
+            cur = name
+            body = []
+            comps[cur] = body
+            continue
+        if cur is not None:
+            if ls == "}":
+                cur = None
+            else:
+                body.append(ls)
+    return comps
+
+
+def _iota_group_span(spec: str) -> int:
+    """Max(id) − min(id) of the first replica group.
+
+    Handles both explicit ``{{0,1},{2,3}}`` and iota
+    ``[g,s]<=[d0,d1,...]T(p0,p1,...)`` formats.
+    """
+    spec = spec.strip()
+    if spec.startswith("{"):
+        first = spec.split("}")[0].replace("{", "")
+        ids = [int(t) for t in first.split(",") if t.strip().isdigit()]
+        return (max(ids) - min(ids)) if ids else 0
+    m = re.match(r"\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", spec)
+    if not m:
+        return 0
+    g, s = int(m.group(1)), int(m.group(2))
+    dims = [int(d) for d in m.group(3).split(",")]
+    v = np.arange(int(np.prod(dims))).reshape(dims)
+    if m.group(4):
+        perm = [int(p) for p in m.group(4).split(",")]
+        v = np.transpose(v, perm)
+    v = v.reshape(g, s)
+    return int(v[0].max() - v[0].min())
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in re.findall(r"(\w+)\[([\d,]*)\]", text):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+def hlo_collectives(hlo: str, pod_stride: int = 256,
+                    bf16_model: bool = True) -> dict:
+    """Collective byte totals from optimized HLO, × while-loop trip counts.
+
+    Sizes are the *result* shape of each collective op (operands are
+    printed without types in scheduled HLO): exact for all-reduce /
+    all-to-all / collective-permute, the gathered size for all-gather.
+
+    ``bf16_model``: the CPU backend's float-normalization pass rewrites
+    every bf16 op to f32 before partitioning, so collectives that would
+    move bf16 on TPU appear as f32 here.  When set, f32 collective
+    elements are counted at 2 bytes (the TPU wire size); the uncorrected
+    number is returned as ``total_raw_f32``.
+    """
+    comps = _split_computations(hlo)
+
+    # map body computation -> trip count (max s32 constant in condition)
+    trip_of_comp: dict[str, float] = {}
+    for cname, lines in comps.items():
+        for ls in lines:
+            if " while(" not in ls:
+                continue
+            mc = re.search(r"condition=%?([\w.\-]+)", ls)
+            mb = re.search(r"body=%?([\w.\-]+)", ls)
+            if not (mc and mb):
+                continue
+            consts = []
+            for cl in comps.get(mc.group(1), []):
+                mk = re.match(r"%?[\w.\-]+ = s32\[\] constant\((\d+)\)", cl)
+                if mk:
+                    consts.append(int(mk.group(1)))
+            trip = float(max(consts)) if consts else 1.0
+            trip_of_comp[mb.group(1)] = max(
+                trip_of_comp.get(mb.group(1), 1.0), trip)
+
+    # caller graph: computation -> parent computations
+    parents: dict[str, set] = {c: set() for c in comps}
+    ref_re = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+    for parent, lines in comps.items():
+        for ls in lines:
+            for name in ref_re.findall(ls):
+                if name in parents:
+                    parents[name].add(parent)
+
+    mult_cache: dict[str, float] = {}
+
+    def multiplier(cname: str, seen=()) -> float:
+        if cname in mult_cache:
+            return mult_cache[cname]
+        if cname in seen:
+            return 1.0
+        base = trip_of_comp.get(cname, 1.0)
+        pmult = 1.0
+        for p in parents.get(cname, ()):
+            pmult = max(pmult, multiplier(p, seen + (cname,)))
+        mult_cache[cname] = base * pmult
+        return mult_cache[cname]
+
+    totals = {k: 0.0 for k in _KINDS}
+    dcn = {k: 0.0 for k in _KINDS}
+    counts = {k: 0 for k in _KINDS}
+    inst_re = re.compile(
+        r"(?:ROOT )?%?[\w.\-]+ = (\S+) (all-gather|all-reduce|"
+        r"reduce-scatter|all-to-all|collective-permute)(-start)?\(")
+    for cname, lines in comps.items():
+        mult = multiplier(cname)
+        for ls in lines:
+            m = inst_re.match(ls)
+            if not m:
+                continue
+            kind = m.group(2)
+            shape_txt = m.group(1)
+            if _shape_bytes(shape_txt) == 0:
+                shape_txt = ls.split(kind)[0]   # tuple result
+            op_bytes = _shape_bytes(shape_txt)
+            if bf16_model and "f32[" in shape_txt:
+                # CPU float-normalization: bf16 → f32; count TPU wire size
+                f32_bytes = _shape_bytes(
+                    "".join(re.findall(r"f32\[[\d,]*\]", shape_txt)))
+                op_bytes -= f32_bytes // 2
+            totals[kind] += mult * op_bytes
+            counts[kind] += 1
+            crosses = False
+            rg = re.search(r"replica_groups=([^,]+(?:,[^,=]+)*?)(?:, \w+=|$)",
+                           ls)
+            rg2 = re.search(r"replica_groups=(\{\{[\d,{} ]*\}\}|"
+                            r"\[\d+,\d+\]<=\[[\d,]+\](?:T\([\d,]+\))?)", ls)
+            if rg2:
+                crosses = _iota_group_span(rg2.group(1)) >= pod_stride
+            st = re.search(r"source_target_pairs=\{(.*?)\}\}", ls)
+            if st:
+                pairs = re.findall(r"\{(\d+),(\d+)\}", st.group(1))
+                if any(abs(int(a) - int(b)) >= pod_stride
+                       for a, b in pairs):
+                    crosses = True
+            if crosses:
+                dcn[kind] += mult * op_bytes
+    return {"per_kind": totals, "dcn_per_kind": dcn, "counts": counts,
+            "total": sum(totals.values()), "dcn_total": sum(dcn.values())}

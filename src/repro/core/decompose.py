@@ -1,0 +1,180 @@
+"""Problem decomposition and load balancing (paper §III-C).
+
+The paper's second (chosen) strategy makes *light sources* the task unit and
+schedules spatially contiguous batches dynamically via Dtree.  SPMD TPU
+execution forces the schedule to be decided up front, so the adaptation is:
+
+  1. **Spatial ordering** — sort sources along a Morton (Z-order) curve so
+     that contiguous batches touch contiguous image tiles (the paper's
+     "spatially aware batches" that cut global-array traffic).
+  2. **Cost model** — predict per-source Newton cost from catalog features
+     (brightness, galaxy probability, neighbor count); refit from measured
+     iteration counts between rounds (runtime/scheduler.py).
+  3. **LPT bin-packing** — greedily assign Morton-contiguous *chunks* to the
+     least-loaded device, minimizing the per-batch max that the masked
+     ``lax.while_loop`` in newton.py actually pays.
+
+Everything here is host-side numpy: it runs once per scheduling round,
+off the device critical path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Morton (Z-order) curve
+# --------------------------------------------------------------------------
+
+
+def _spread_bits(x: np.ndarray) -> np.ndarray:
+    """Interleave zeros between the low 16 bits of each element."""
+    x = x.astype(np.uint32) & 0xFFFF
+    x = (x | (x << 8)) & 0x00FF00FF
+    x = (x | (x << 4)) & 0x0F0F0F0F
+    x = (x | (x << 2)) & 0x33333333
+    x = (x | (x << 1)) & 0x55555555
+    return x
+
+
+def morton_order(positions: np.ndarray, extent: float) -> np.ndarray:
+    """Indices that sort sources along a Z-order curve. positions: [S, 2]."""
+    q = np.clip((positions / max(extent, 1e-9)) * 65535.0, 0, 65535)
+    code = _spread_bits(q[:, 0]) | (_spread_bits(q[:, 1]) << 1)
+    return np.argsort(code, kind="stable")
+
+
+# --------------------------------------------------------------------------
+# Cost model for irregular per-source work (1 s – 2 min in the paper)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class CostModel:
+    """Linear model of Newton iteration count over catalog features."""
+
+    coef: np.ndarray = field(
+        default_factory=lambda: np.array([8.0, 1.5, 6.0, 1.0]))
+
+    @staticmethod
+    def features(log_flux: np.ndarray, prob_gal: np.ndarray,
+                 n_neighbors: np.ndarray) -> np.ndarray:
+        ones = np.ones_like(log_flux)
+        return np.stack([ones, log_flux, prob_gal, n_neighbors], axis=-1)
+
+    def predict(self, feats: np.ndarray) -> np.ndarray:
+        return np.maximum(feats @ self.coef, 1.0)
+
+    def refit(self, feats: np.ndarray, measured_iters: np.ndarray,
+              blend: float = 0.5) -> "CostModel":
+        """Least-squares refit, blended with the current model (the Dtree
+        'adapt batch size as T is approached' idea at round granularity)."""
+        new, *_ = np.linalg.lstsq(feats, measured_iters, rcond=None)
+        return CostModel(coef=blend * self.coef + (1 - blend) * new)
+
+
+def neighbor_counts(positions: np.ndarray, radius: float) -> np.ndarray:
+    """#sources within ``radius`` of each source (grid-bucketed, O(S))."""
+    s = positions.shape[0]
+    cell = max(radius, 1e-6)
+    keys = np.floor(positions / cell).astype(np.int64)
+    buckets: dict[tuple, list] = {}
+    for i, k in enumerate(map(tuple, keys)):
+        buckets.setdefault(k, []).append(i)
+    counts = np.zeros(s, np.int64)
+    r2 = radius * radius
+    for i in range(s):
+        ki, kj = keys[i]
+        cand = []
+        for di in (-1, 0, 1):
+            for dj in (-1, 0, 1):
+                cand.extend(buckets.get((ki + di, kj + dj), ()))
+        d = positions[cand] - positions[i]
+        counts[i] = int(((d * d).sum(-1) <= r2).sum()) - 1
+    return counts
+
+
+# --------------------------------------------------------------------------
+# Plans
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class Plan:
+    """A full schedule: rounds × shards × batch of source indices.
+
+    ``batches[r]`` is an int array [num_shards, batch] of source indices
+    (−1 = padding, masked out downstream).  Every shard sees the same batch
+    size (SPMD requirement).
+    """
+
+    batches: list[np.ndarray]
+    predicted_max_cost: float
+    predicted_imbalance: float
+
+
+def make_plan(positions: np.ndarray, costs: np.ndarray, num_shards: int,
+              batch: int, extent: float | None = None,
+              chunk: int = 4) -> Plan:
+    """Morton-sort, chunk, LPT-pack into shards, slice into rounds."""
+    s = positions.shape[0]
+    extent = float(extent if extent is not None else positions.max() + 1)
+    order = morton_order(positions, extent)
+
+    # Morton-contiguous chunks preserve locality; LPT over chunk costs
+    # balances load.  Large chunks = more locality, less balance.
+    chunks = [order[i:i + chunk] for i in range(0, s, chunk)]
+    chunk_cost = np.array([costs[c].sum() for c in chunks])
+    shard_lists: list[list[int]] = [[] for _ in range(num_shards)]
+    shard_cost = np.zeros(num_shards)
+    for ci in np.argsort(-chunk_cost, kind="stable"):
+        tgt = int(np.argmin(shard_cost))
+        shard_lists[tgt].extend(chunks[ci].tolist())
+        shard_cost[tgt] += chunk_cost[ci]
+
+    rounds = int(np.ceil(max(len(l) for l in shard_lists) / batch))
+    batches = []
+    for r in range(rounds):
+        b = np.full((num_shards, batch), -1, np.int64)
+        for sh, lst in enumerate(shard_lists):
+            seg = lst[r * batch:(r + 1) * batch]
+            b[sh, :len(seg)] = seg
+        batches.append(b)
+
+    mean = shard_cost.mean() if num_shards else 0.0
+    return Plan(batches=batches,
+                predicted_max_cost=float(shard_cost.max(initial=0.0)),
+                predicted_imbalance=float(
+                    (shard_cost.max(initial=0.0) - mean)
+                    / max(mean, 1e-9)))
+
+
+def make_region_plan(positions: np.ndarray, costs: np.ndarray,
+                     num_shards: int, batch: int, extent: float) -> Plan:
+    """The paper's *first* (rejected) strategy: equal-area sky regions.
+
+    Kept as a baseline so benchmarks/fig6 can reproduce the comparison that
+    motivated the source-level decomposition.
+    """
+    grid = int(np.ceil(np.sqrt(num_shards)))
+    cell = extent / grid
+    region = (np.minimum(positions[:, 0] // cell, grid - 1) * grid
+              + np.minimum(positions[:, 1] // cell, grid - 1)).astype(int)
+    shard_lists = [np.where(region % num_shards == sh)[0].tolist()
+                   for sh in range(num_shards)]
+    shard_cost = np.array([costs[l].sum() for l in shard_lists])
+    rounds = int(np.ceil(max(max(len(l) for l in shard_lists), 1) / batch))
+    batches = []
+    for r in range(rounds):
+        b = np.full((num_shards, batch), -1, np.int64)
+        for sh, lst in enumerate(shard_lists):
+            seg = lst[r * batch:(r + 1) * batch]
+            b[sh, :len(seg)] = seg
+        batches.append(b)
+    mean = shard_cost.mean() if num_shards else 0.0
+    return Plan(batches=batches,
+                predicted_max_cost=float(shard_cost.max(initial=0.0)),
+                predicted_imbalance=float(
+                    (shard_cost.max(initial=0.0) - mean) / max(mean, 1e-9)))

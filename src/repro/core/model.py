@@ -1,0 +1,198 @@
+"""The Celeste generative model, in JAX.
+
+Implements the statistical model of Regier et al. (2016), §III-A:
+
+  * each of ``S`` light sources is a star or galaxy (Bernoulli ``a_s``),
+    with lognormal reference-band brightness ``r_s`` and multivariate-normal
+    colors ``c_s`` (log flux ratios of adjacent bands);
+  * stars render as the image PSF (a mixture of isotropic Gaussians);
+    galaxies render as a Gaussian-mixture profile (exp / de Vaucouleurs mix)
+    convolved with the PSF — still a Gaussian mixture;
+  * every pixel intensity is Poisson with rate = sky background + the summed
+    expected flux of nearby sources.
+
+Everything here is pure ``jnp`` and differentiable; it is both the oracle
+for the Pallas render kernel (kernels/render/ref.py delegates here) and the
+sampling path for synthetic skies.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Model constants
+# ---------------------------------------------------------------------------
+
+NUM_BANDS = 5          # SDSS ugriz
+REF_BAND = 2           # r band is the reference band
+NUM_COLORS = NUM_BANDS - 1
+
+# log flux(b) = log r + COLOR_COEF[b] @ c  (colors are adjacent-band ratios)
+# c_i := log(flux_{i+1} / flux_i)
+COLOR_COEF = jnp.array(
+    [
+        [-1.0, -1.0, 0.0, 0.0],
+        [0.0, -1.0, 0.0, 0.0],
+        [0.0, 0.0, 0.0, 0.0],
+        [0.0, 0.0, 1.0, 0.0],
+        [0.0, 0.0, 1.0, 1.0],
+    ],
+    dtype=jnp.float32,
+)  # [NUM_BANDS, NUM_COLORS]
+
+# Gaussian-mixture approximations of the exponential and de Vaucouleurs
+# galaxy radial profiles (amplitudes sum to 1; variances are in units of the
+# galaxy's squared effective radius).  Three components each, in the style of
+# the Celeste / Tractor MoG profile tables.
+GAL_EXP_AMP = jnp.array([0.59, 0.31, 0.10], dtype=jnp.float32)
+GAL_EXP_VAR = jnp.array([0.12, 0.50, 1.30], dtype=jnp.float32)
+GAL_DEV_AMP = jnp.array([0.40, 0.35, 0.25], dtype=jnp.float32)
+GAL_DEV_VAR = jnp.array([0.03, 0.25, 2.00], dtype=jnp.float32)
+
+NUM_PSF_COMP = 3       # PSF = mixture of 3 isotropic Gaussians per image
+NUM_GAL_COMP = 6       # 3 exp + 3 dev profile components
+STAR_GMM = NUM_PSF_COMP                 # star: PSF components only
+GAL_GMM = NUM_GAL_COMP * NUM_PSF_COMP   # galaxy: profile ⊛ PSF
+
+# ---------------------------------------------------------------------------
+# Point-estimate source parameterization (used for synthetic truth, for the
+# heuristic baseline output, and for rendering fixed neighbors).
+# ---------------------------------------------------------------------------
+
+
+class SourceParams(NamedTuple):
+    """A point catalog entry (no uncertainty) for one light source."""
+
+    is_gal: jnp.ndarray      # [] float in {0, 1} (or probability)
+    ref_flux: jnp.ndarray    # [] reference-band flux (photo-electrons)
+    colors: jnp.ndarray      # [NUM_COLORS] adjacent-band log flux ratios
+    pos: jnp.ndarray         # [2] (row, col) in global pixel coordinates
+    gal_scale: jnp.ndarray   # [] effective radius, pixels
+    gal_ratio: jnp.ndarray   # [] minor/major axis ratio in (0, 1]
+    gal_angle: jnp.ndarray   # [] position angle, radians
+    gal_frac_dev: jnp.ndarray  # [] de Vaucouleurs mixture weight in [0, 1]
+
+
+class ImageMeta(NamedTuple):
+    """Fixed per-image metadata Λ_n (paper §III-A)."""
+
+    band: jnp.ndarray        # [] int, which of the 5 bands
+    sky: jnp.ndarray         # [] Poisson background rate per pixel
+    psf_amp: jnp.ndarray     # [NUM_PSF_COMP] mixture weights (sum 1)
+    psf_var: jnp.ndarray     # [NUM_PSF_COMP] isotropic variances (px^2)
+    origin: jnp.ndarray      # [2] image (0,0) position in global pixels
+
+
+def band_fluxes(ref_flux: jnp.ndarray, colors: jnp.ndarray) -> jnp.ndarray:
+    """Fluxes in all NUM_BANDS bands from reference flux + colors."""
+    return ref_flux * jnp.exp(COLOR_COEF @ colors)
+
+
+# ---------------------------------------------------------------------------
+# Gaussian mixture construction
+# ---------------------------------------------------------------------------
+
+
+def galaxy_cov(scale: jnp.ndarray, ratio: jnp.ndarray,
+               angle: jnp.ndarray) -> jnp.ndarray:
+    """2x2 covariance of the galaxy's unit-profile ellipse."""
+    c, s = jnp.cos(angle), jnp.sin(angle)
+    rot = jnp.array([[c, -s], [s, c]])
+    d = jnp.diag(jnp.stack([scale**2, (ratio * scale) ** 2]))
+    return rot @ d @ rot.T
+
+
+def galaxy_mixture(scale, ratio, angle, frac_dev, psf_amp, psf_var):
+    """Galaxy profile ⊛ PSF as (amplitudes, covariances).
+
+    Returns (amp [GAL_GMM], cov [GAL_GMM, 2, 2]).
+    """
+    prof_amp = jnp.concatenate(
+        [(1.0 - frac_dev) * GAL_EXP_AMP, frac_dev * GAL_DEV_AMP])
+    prof_var = jnp.concatenate([GAL_EXP_VAR, GAL_DEV_VAR])  # [6]
+    base = galaxy_cov(scale, ratio, angle)                  # [2,2]
+    eye = jnp.eye(2, dtype=base.dtype)
+    # cov[j, k] = prof_var[j] * base + psf_var[k] * I
+    cov = (prof_var[:, None, None, None] * base[None, None]
+           + psf_var[None, :, None, None] * eye[None, None])
+    amp = prof_amp[:, None] * psf_amp[None, :]
+    return amp.reshape(-1), cov.reshape(-1, 2, 2)
+
+
+def star_mixture(psf_amp, psf_var):
+    """Star = the PSF itself: (amp [STAR_GMM], cov [STAR_GMM, 2, 2])."""
+    eye = jnp.eye(2, dtype=psf_var.dtype)
+    return psf_amp, psf_var[:, None, None] * eye[None]
+
+
+def gmm_density(points: jnp.ndarray, mu: jnp.ndarray, amp: jnp.ndarray,
+                cov: jnp.ndarray) -> jnp.ndarray:
+    """Evaluate a 2-D Gaussian mixture at ``points``.
+
+    points: [..., 2]; mu: [2]; amp: [K]; cov: [K, 2, 2] -> [...].
+    """
+    d = points - mu                                   # [..., 2]
+    a, b = cov[:, 0, 0], cov[:, 1, 1]
+    c = cov[:, 0, 1]
+    det = a * b - c * c                               # [K]
+    inv_det = 1.0 / det
+    dx, dy = d[..., 0], d[..., 1]
+    # quadratic form via explicit 2x2 inverse
+    quad = (b * dx[..., None] ** 2 - 2.0 * c * dx[..., None] * dy[..., None]
+            + a * dy[..., None] ** 2) * inv_det       # [..., K]
+    dens = amp * jnp.exp(-0.5 * quad) / (2.0 * math.pi) * jnp.sqrt(inv_det)
+    return jnp.sum(dens, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Rendering: expected photo-electron counts per pixel
+# ---------------------------------------------------------------------------
+
+
+def patch_grid(corner: jnp.ndarray, patch: int) -> jnp.ndarray:
+    """Pixel-center coordinates for a patch×patch window at ``corner``."""
+    rows = corner[0] + jnp.arange(patch, dtype=jnp.float32) + 0.5
+    cols = corner[1] + jnp.arange(patch, dtype=jnp.float32) + 0.5
+    return jnp.stack(jnp.meshgrid(rows, cols, indexing="ij"), axis=-1)
+
+
+def render_source_patch(src: SourceParams, meta: ImageMeta,
+                        corner: jnp.ndarray, patch: int) -> jnp.ndarray:
+    """Expected flux of one source over a patch of one image. [patch,patch]"""
+    pts = patch_grid(corner, patch) + meta.origin
+    flux = band_fluxes(src.ref_flux, src.colors)[meta.band]
+    s_amp, s_cov = star_mixture(meta.psf_amp, meta.psf_var)
+    g_amp, g_cov = galaxy_mixture(src.gal_scale, src.gal_ratio, src.gal_angle,
+                                  src.gal_frac_dev, meta.psf_amp, meta.psf_var)
+    star = gmm_density(pts, src.pos, s_amp, s_cov)
+    gal = gmm_density(pts, src.pos, g_amp, g_cov)
+    shape = (1.0 - src.is_gal) * star + src.is_gal * gal
+    return flux * shape
+
+
+def render_image(sources: SourceParams, meta: ImageMeta,
+                 height: int, width: int) -> jnp.ndarray:
+    """Expected counts for a full image: sky + every source. [H, W].
+
+    Reference implementation — O(S·H·W); synthetic.py uses the patch-based
+    scatter version for large skies.
+    """
+    pts = patch_grid(jnp.zeros(2, jnp.float32), max(height, width))
+    pts = pts[:height, :width] + meta.origin
+
+    def one(src):
+        flux = band_fluxes(src.ref_flux, src.colors)[meta.band]
+        s_amp, s_cov = star_mixture(meta.psf_amp, meta.psf_var)
+        g_amp, g_cov = galaxy_mixture(src.gal_scale, src.gal_ratio,
+                                      src.gal_angle, src.gal_frac_dev,
+                                      meta.psf_amp, meta.psf_var)
+        star = gmm_density(pts, src.pos, s_amp, s_cov)
+        gal = gmm_density(pts, src.pos, g_amp, g_cov)
+        return flux * ((1.0 - src.is_gal) * star + src.is_gal * gal)
+
+    total = jax.vmap(one)(sources).sum(axis=0)
+    return meta.sky + total

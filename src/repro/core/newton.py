@@ -1,0 +1,163 @@
+"""Batched trust-region Newton's method (paper §III-B).
+
+The paper replaces L-BFGS (thousands of iterations on hard sources) with a
+trust-region Newton method using explicit dense Hessians, which "consistently
+reaches machine tolerance within 50 iterations".  This module provides the
+TPU adaptation: a *batch* of sources is optimized simultaneously under
+``vmap`` + ``lax.while_loop``, with converged sources masked out so a batch
+costs its slowest member (the scheduler in runtime/scheduler.py minimizes
+that max via cost-model bin-packing).
+
+The trust-region subproblem  min_p  g·p + ½ pᵀHp  s.t. ‖p‖ ≤ Δ  is solved
+*exactly* via eigendecomposition of the (27×27) Hessian plus bisection on
+the Levenberg shift λ — branch-free and fixed-iteration, hence jit-able.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class NewtonResult(NamedTuple):
+    theta: jnp.ndarray       # [S, D] final parameters
+    value: jnp.ndarray       # [S] final objective (ELBO)
+    iters: jnp.ndarray       # [S] iterations used per source
+    converged: jnp.ndarray   # [S] bool
+    grad_norm: jnp.ndarray   # [S] final ‖∇‖∞
+
+
+def tr_subproblem(grad: jnp.ndarray, hess: jnp.ndarray, radius: jnp.ndarray,
+                  bisect_iters: int = 30) -> jnp.ndarray:
+    """Exact trust-region step for  min_p g·p + ½pᵀHp, ‖p‖≤Δ  (one source).
+
+    Eigendecompose H = QΛQᵀ; the minimizer is p(λ) = −Q (Λ+λI)⁻¹ Qᵀg for the
+    smallest λ ≥ max(0, −λ_min) with ‖p(λ)‖ ≤ Δ; ‖p(λ)‖ is decreasing in λ,
+    so bisection finds the boundary solution.
+    """
+    evals, q = jnp.linalg.eigh(hess)
+    ghat = q.T @ grad
+
+    lam_floor = jnp.maximum(0.0, -evals[0]) + 1e-6
+
+    def step_norm(lam):
+        p = -ghat / (evals + lam)
+        return p, jnp.linalg.norm(p)
+
+    # Interior Newton step if H ≻ 0 and within the region.
+    p0, n0 = step_norm(lam_floor)
+    interior = (evals[0] > 0.0) & (n0 <= radius)
+
+    # Otherwise bisect λ in [lam_floor, lam_hi]: grow hi until ‖p‖ ≤ Δ.
+    gnorm = jnp.linalg.norm(grad)
+    lam_hi0 = lam_floor + gnorm / jnp.maximum(radius, 1e-8) + 1e-3
+
+    def grow(carry):
+        hi, _ = carry
+        return hi * 2.0, step_norm(hi)[1]
+
+    def grow_cond(carry):
+        hi, n = carry
+        return n > radius
+
+    lam_hi, _ = jax.lax.while_loop(
+        grow_cond, grow, (lam_hi0, step_norm(lam_hi0)[1]))
+
+    def bisect(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        n = step_norm(mid)[1]
+        return jnp.where(n > radius, mid, lo), jnp.where(n > radius, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, bisect_iters, bisect, (lam_floor, lam_hi))
+    p_bound, _ = step_norm(0.5 * (lo + hi))
+
+    phat = jnp.where(interior, p0, p_bound)
+    return q @ phat
+
+
+def _predicted_increase(grad, hess, p):
+    """Predicted ELBO increase of step p under the quadratic model."""
+    return grad @ p + 0.5 * p @ (hess @ p)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("objective", "max_iters"))
+def fit_batch(objective, theta0: jnp.ndarray, *obj_args,
+              active: jnp.ndarray | None = None,
+              max_iters: int = 50, gtol: float = 1e-2,
+              init_radius: float = 1.0) -> NewtonResult:
+    """Maximize ``objective(theta, *args_s)`` for a batch of sources.
+
+    objective: callable (theta[D], *per-source args) -> scalar ELBO.
+    theta0: [S, D]; every entry of obj_args has leading dim S.
+    active: [S] bool; False entries are scheduler padding, never optimized.
+    """
+    val_grad_hess = jax.vmap(
+        lambda t, *a: (jax.value_and_grad(objective)(t, *a),
+                       jax.hessian(objective)(t, *a)))
+    value_only = jax.vmap(objective)
+
+    s = theta0.shape[0]
+
+    class _State(NamedTuple):
+        theta: jnp.ndarray
+        value: jnp.ndarray
+        radius: jnp.ndarray
+        done: jnp.ndarray
+        iters: jnp.ndarray
+        gnorm: jnp.ndarray
+        k: jnp.ndarray
+
+    if active is None:
+        active = jnp.ones((s,), bool)
+
+    (v0, _), _ = val_grad_hess(theta0, *obj_args)
+    state = _State(theta=theta0, value=v0,
+                   radius=jnp.full((s,), init_radius),
+                   done=~active,
+                   iters=jnp.zeros((s,), jnp.int32),
+                   gnorm=jnp.full((s,), jnp.inf),
+                   k=jnp.asarray(0, jnp.int32))
+
+    def cond(st: _State):
+        return (st.k < max_iters) & jnp.any(~st.done)
+
+    def body(st: _State):
+        (val, grad), hess = val_grad_hess(st.theta, *obj_args)
+        gnorm = jnp.max(jnp.abs(grad), axis=-1)
+        newly_done = gnorm < gtol
+        done = st.done | newly_done
+
+        # maximize ELBO == minimize −ELBO
+        p = jax.vmap(tr_subproblem)(-grad, -hess, st.radius)
+        pred = jax.vmap(_predicted_increase)(grad, hess, p)
+        cand = st.theta + p
+        new_val = value_only(cand, *obj_args)
+        actual = new_val - val
+        rho = actual / jnp.maximum(pred, 1e-12)
+
+        ok = jnp.isfinite(new_val) & (actual > 0.0) & (pred > 0.0)
+        accept = ok & (rho > 0.01) & ~done
+
+        pnorm = jnp.linalg.norm(p, axis=-1)
+        grow = ok & (rho > 0.75) & (pnorm > 0.8 * st.radius)
+        shrink = ~ok | (rho < 0.25)
+        radius = jnp.where(grow, st.radius * 2.0,
+                           jnp.where(shrink, st.radius * 0.25, st.radius))
+        radius = jnp.clip(radius, 1e-5, 32.0)
+
+        theta = jnp.where(accept[:, None], cand, st.theta)
+        value = jnp.where(accept, new_val, val)
+        # A source whose trust region collapsed is done (stalled).
+        done = done | (radius <= 1e-5)
+        iters = st.iters + (~st.done).astype(jnp.int32)
+        return _State(theta=theta, value=value, radius=radius, done=done,
+                      iters=iters, gnorm=gnorm, k=st.k + 1)
+
+    st = jax.lax.while_loop(cond, body, state)
+    return NewtonResult(theta=st.theta, value=st.value, iters=st.iters,
+                        converged=st.done & (st.gnorm < jnp.inf),
+                        grad_norm=st.gnorm)

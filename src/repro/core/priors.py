@@ -1,0 +1,63 @@
+"""Priors for the Celeste model.
+
+The paper (§III-A) learns the prior parameters Φ (star/galaxy rate),
+Υ (brightness) and Ξ (color) from pre-existing catalogs.  ``fit_priors``
+does exactly that from a (possibly heuristic) catalog; ``default_priors``
+gives literature-plausible values used before any catalog exists.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.model import NUM_COLORS
+
+
+class Priors(NamedTuple):
+    # Φ: prior probability that a source is a galaxy
+    prob_gal: jnp.ndarray          # []
+    # Υ: lognormal brightness prior per type [star, gal]
+    r_mu: jnp.ndarray              # [2] mean of log flux
+    r_var: jnp.ndarray             # [2] variance of log flux
+    # Ξ: normal color prior per type
+    c_mu: jnp.ndarray              # [2, NUM_COLORS]
+    c_var: jnp.ndarray             # [2, NUM_COLORS]
+
+
+def default_priors() -> Priors:
+    return Priors(
+        prob_gal=jnp.asarray(0.5, jnp.float32),
+        r_mu=jnp.array([6.0, 6.5], jnp.float32),
+        r_var=jnp.array([1.5, 1.5], jnp.float32),
+        c_mu=jnp.array(
+            [[0.7, 0.5, 0.2, 0.1],      # star colors
+             [1.0, 0.8, 0.4, 0.3]],     # galaxy colors
+            jnp.float32),
+        c_var=jnp.full((2, NUM_COLORS), 0.5, jnp.float32),
+    )
+
+
+def fit_priors(is_gal, ref_flux, colors, eps: float = 1e-3) -> Priors:
+    """Fit prior hyperparameters from a catalog (arrays over sources)."""
+    is_gal = jnp.asarray(is_gal, jnp.float32)
+    w_gal = is_gal / jnp.maximum(is_gal.sum(), 1.0)
+    w_star = (1.0 - is_gal) / jnp.maximum((1.0 - is_gal).sum(), 1.0)
+    log_r = jnp.log(jnp.maximum(ref_flux, 1e-6))
+
+    def wmean(w, x):
+        return jnp.sum(w[:, None] * x, axis=0) if x.ndim > 1 else jnp.sum(w * x)
+
+    def wvar(w, x, m):
+        if x.ndim > 1:
+            return jnp.sum(w[:, None] * (x - m) ** 2, axis=0) + eps
+        return jnp.sum(w * (x - m) ** 2) + eps
+
+    r_mu = jnp.stack([wmean(w_star, log_r), wmean(w_gal, log_r)])
+    r_var = jnp.stack([wvar(w_star, log_r, r_mu[0]),
+                       wvar(w_gal, log_r, r_mu[1])])
+    c_mu = jnp.stack([wmean(w_star, colors), wmean(w_gal, colors)])
+    c_var = jnp.stack([wvar(w_star, colors, c_mu[0]),
+                       wvar(w_gal, colors, c_mu[1])])
+    return Priors(prob_gal=jnp.clip(is_gal.mean(), 0.01, 0.99),
+                  r_mu=r_mu, r_var=r_var, c_mu=c_mu, c_var=c_var)

@@ -1,0 +1,61 @@
+"""Image store: the global-arrays (PGAS) analogue for Celeste (paper §III-F).
+
+On Cori, images live in a distributed global array and nodes fetch 60 MB
+files over the fabric; on a TPU pod the images are HBM-resident device
+arrays and per-source *patches* are gathered into batch layout.  The store
+tracks fetch statistics so benchmarks/fig4/fig5 can report the "global
+array retrieval" runtime component the paper measures.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.infer import extract_patches
+from repro.core.model import ImageMeta
+
+
+@dataclass
+class FetchStats:
+    patches_fetched: int = 0
+    bytes_fetched: int = 0
+    unique_tiles: set = field(default_factory=set)
+
+
+class ImageStore:
+    """All survey images for a field, resident as device arrays."""
+
+    def __init__(self, images: jnp.ndarray, metas: ImageMeta,
+                 tile: int = 64):
+        self.images = images          # [n_img, H, W]
+        self.metas = metas
+        self.tile = tile
+        self.stats = FetchStats()
+
+    @property
+    def field_size(self) -> int:
+        return int(self.images.shape[-1])
+
+    def gather_patches(self, positions: jnp.ndarray, patch: int):
+        """Patches for a batch of sources: (x [S,n,P,P], corners [S,n,2]).
+
+        Stats model the paper's I/O accounting: every (source, image tile)
+        touched counts as a fetch; re-used tiles (spatial batch locality)
+        are tracked via ``unique_tiles``.
+        """
+        x, corners = extract_patches(self.images, self.metas, positions,
+                                     patch)
+        pos_np = np.asarray(positions)
+        n_img = int(self.images.shape[0])
+        for s in range(pos_np.shape[0]):
+            for i in range(n_img):
+                t = (i, int(pos_np[s, 0]) // self.tile,
+                     int(pos_np[s, 1]) // self.tile)
+                self.stats.unique_tiles.add(t)
+        self.stats.patches_fetched += pos_np.shape[0] * n_img
+        self.stats.bytes_fetched += int(
+            pos_np.shape[0] * n_img * patch * patch * 4)
+        return x, corners

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: flash-decode (one query token, long KV cache).
+
+Decode attention is memory-bound: the whole KV cache streams HBM→VMEM once
+per token.  Grid: (B·KV, seq_blocks) with the seq axis innermost —
+online-softmax state lives in VMEM scratch across seq blocks; the kernel
+emits *partials* (acc, m, l) so a sequence-sharded cache (model axis) can
+be combined with one tiny psum (ops.py / serve path §Perf), instead of
+all-gathering the cache.
+
+``valid_len`` rides in SMEM ((1,1) block) and masks the tail block.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, acc_out, m_out, l_out,
+                   acc_ref, m_ref, l_ref, *, bk: int, scale: float):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid = valid_ref[pl.program_id(0)]
+    start = ki * bk
+
+    @pl.when(start < valid)
+    def _compute():
+        q = q_ref[0]                    # [R, hd]
+        k = k_ref[0]                    # [bk, hd]
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # [R, bk]
+        kpos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(kpos < valid, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v,
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        acc_out[0] = acc_ref[...]
+        m_out[0] = m_ref[...]
+        l_out[0] = l_ref[...]
+
+
+def decode_attention_pallas(q, k, v, valid_len, block_k: int = 512,
+                            interpret: bool = False):
+    """q: [B, H, hd]; k/v: [B, S, KV, hd]; valid_len: [B] int32.
+
+    Returns partials (acc [B, H, hd] f32, m [B, H], l [B, H]).
+    """
+    b, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    bk = min(block_k, s)
+    nk = s // bk
+    assert s % bk == 0
+
+    qg = q.reshape(b, kvh, rep, hd).reshape(b * kvh, rep, hd)
+    kg = k.transpose(0, 2, 1, 3).reshape(b * kvh, s, hd)
+    vg = v.transpose(0, 2, 1, 3).reshape(b * kvh, s, hd)
+    vl = jnp.repeat(valid_len.astype(jnp.int32), kvh)       # [B*KV]
+
+    kernel = functools.partial(_decode_kernel, bk=bk,
+                               scale=1.0 / math.sqrt(hd))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * kvh, nk),
+        in_specs=[
+            pl.BlockSpec((1, rep, hd), lambda g, j, vl_ref: (g, 0, 0)),
+            pl.BlockSpec((1, bk, hd), lambda g, j, vl_ref: (g, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda g, j, vl_ref: (g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rep, hd), lambda g, j, vl_ref: (g, 0, 0)),
+            pl.BlockSpec((1, rep), lambda g, j, vl_ref: (g, 0)),
+            pl.BlockSpec((1, rep), lambda g, j, vl_ref: (g, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rep, hd), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b * kvh, rep, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b * kvh, rep), jnp.float32),
+            jax.ShapeDtypeStruct((b * kvh, rep), jnp.float32),
+        ],
+        interpret=interpret,
+    )(vl, qg, kg, vg)
+    return (acc.reshape(b, h, hd), m.reshape(b, h), l.reshape(b, h))

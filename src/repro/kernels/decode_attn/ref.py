@@ -1,0 +1,46 @@
+"""Oracle for the flash-decode kernel: single-token attention partials.
+
+Given one query per sequence and a (possibly sequence-sharded) KV block,
+produce the *online-softmax partial* (acc, m, l) so shards can be combined
+exactly:  out = Σ_shards acc·e^{m−M} / Σ_shards l·e^{m−M},  M = max m.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_partial_ref(q, k, v, valid_len):
+    """q: [B, H, hd]; k/v: [B, S, KV, hd]; valid_len: [B] (#valid keys).
+
+    Returns (acc [B, H, hd] f32 — unnormalized, m [B, H], l [B, H]).
+    """
+    b, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    kf = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kf)
+    s = s / math.sqrt(hd)
+    pos = jnp.arange(k.shape[1])[None, None, :]
+    s = jnp.where(pos < valid_len[:, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(pos < valid_len[:, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhk,bkhd->bhd", p, vf)
+    return acc, m, l
+
+
+def combine_partials(parts):
+    """parts: list of (acc, m, l) → normalized output [B, H, hd]."""
+    import jax.numpy as jnp
+    m_glob = parts[0][1]
+    for _, m, _ in parts[1:]:
+        m_glob = jnp.maximum(m_glob, m)
+    acc = sum(a * jnp.exp(m - m_glob)[..., None] for a, m, _ in parts)
+    l = sum(l_ * jnp.exp(m - m_glob) for _, m, l_ in parts)
+    return acc / jnp.maximum(l, 1e-20)[..., None]

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: causal flash attention (forward), GQA + window.
+
+Grid: (batch·kv_heads, q_blocks, k_blocks) with the k-block axis innermost
+— TPU grids iterate sequentially over the trailing axis, so the online-
+softmax running state (m, l, acc) lives in VMEM scratch across k-block
+steps and the output block is written once, on the final k-block.
+
+BlockSpecs keep one q block [R·bq, hd] and one k/v block [bk, hd] in VMEM;
+the score tile is [R·bq, bk] f32 on the MXU.  Causal + sliding-window
+masking is applied with block-level early-out via ``pl.when`` (a k-block
+fully in the shadow skips its matmuls — the same static saving the
+pure-JAX path gets from its static block ranges).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, rep: int, window: int, sk: int,
+                  scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # causal/window block-level reachability
+    reachable = k_start <= q_start + bq - 1
+    if window:
+        reachable &= (k_start + bk - 1) > (q_start - window)
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, 0]                    # [R*bq, hd]
+        k = k_ref[0]                       # [bk, hd]
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [R*bq, bk]
+        # rows interleave rep query-head copies of each position
+        qpos = q_start + (jax.lax.broadcasted_iota(
+            jnp.int32, (rep * bq, bk), 0) % bq)
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (rep * bq, bk), 1)
+        mask = kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-20)[:, None]).astype(
+                           o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, window: int = 0, block_q: int = 512,
+                           block_k: int = 512, interpret: bool = False):
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd] → [B, Sq, H, hd].
+
+    Causal, positions aligned at zero (prefill/train).  The R query heads
+    sharing one kv head are folded into the q-block rows so the MXU tile
+    is [R·bq, bk].
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    bq = min(block_q, sq)
+    bk = min(block_k, k.shape[1])
+    nq, nk = sq // bq, k.shape[1] // bk
+    assert sq % bq == 0 and k.shape[1] % bk == 0
+
+    # layout: [B*KV, nq, R*bq, hd] for q; [B*KV, Sk, hd] for k/v
+    qg = (q.reshape(b, sq, kvh, rep, hd).transpose(0, 2, 3, 1, 4)
+          .reshape(b * kvh, rep, sq, hd))
+    kg = k.transpose(0, 2, 1, 3).reshape(b * kvh, k.shape[1], hd)
+    vg = v.transpose(0, 2, 1, 3).reshape(b * kvh, k.shape[1], hd)
+    # interleave rep into q blocks: [B*KV, nq, rep*bq, hd]
+    qg = (qg.reshape(b * kvh, rep, nq, bq, hd).transpose(0, 2, 1, 3, 4)
+          .reshape(b * kvh, nq, rep * bq, hd))
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, rep=rep, window=window,
+        sk=k.shape[1], scale=1.0 / math.sqrt(hd))
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kvh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep * bq, hd), lambda g, i, j: (g, i, 0, 0)),
+            pl.BlockSpec((1, bk, hd), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep * bq, hd),
+                               lambda g, i, j: (g, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kvh, nq, rep * bq, hd), q.dtype),
+        scratch_shapes=[
+            # acc, m, l live across the sequential k-block axis
+            pltpu.VMEM((rep * bq, hd), jnp.float32),
+            pltpu.VMEM((rep * bq,), jnp.float32),
+            pltpu.VMEM((rep * bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    # unpack: [B*KV, nq, rep*bq, hd] → [B, Sq, H, hd]
+    out = (out.reshape(b, kvh, nq, rep, bq, hd).transpose(0, 2, 4, 1, 3, 5)
+           .reshape(b, sq, h, hd))
+    return out

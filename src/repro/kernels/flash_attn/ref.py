@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel: naive causal attention.
+
+Deliberately the simplest possible correct implementation (materializes
+the S×S score matrix) — used only at test sizes to validate both the
+Pallas kernel and the blockwise pure-JAX path in models/layers.py.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, window: int = 0):
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd]; causal; positions aligned
+    at 0.  Returns [B, Sq, H, hd]."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.nan_to_num(jnp.exp(s - jnp.max(s, axis=-1, keepdims=True)))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vf.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,20 @@
+"""Jitted wrapper for the Poisson-ELBO reduction kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.poisson_elbo.poisson_elbo import poisson_elbo_pallas
+from repro.kernels.poisson_elbo.ref import poisson_elbo_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def poisson_elbo(x, bg, e1, var, impl: str = "pallas_interpret"):
+    if impl == "ref":
+        return poisson_elbo_ref(x, bg, e1, var)
+    flat = x.reshape((-1,) + x.shape[-2:])
+    out = poisson_elbo_pallas(
+        flat, bg.reshape(flat.shape), e1.reshape(flat.shape),
+        var.reshape(flat.shape), interpret=(impl == "pallas_interpret"))
+    return out.reshape(x.shape[:-2])

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused Poisson-ELBO pixel reduction.
+
+Per pixel, with observed count x, fixed background bg, source expectation
+e1 and source variance var (delta-method term):
+
+    f     = max(bg + e1, eps)
+    logf  = log f − var / (2 f²)
+    term  = x · (logf − log max(x, 1)) − (f − x)
+
+and the kernel reduces ``term`` over the patch, returning one scalar per
+(source, image).  This is the pixel part of core/elbo.elbo_patch.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+def poisson_elbo_ref(x, bg, e1, var):
+    """x, bg, e1, var: [..., P, P] → [...] (sum over last two dims)."""
+    f = jnp.maximum(bg + e1, EPS)
+    logf = jnp.log(f) - var / (2.0 * f * f)
+    term = x * (logf - jnp.log(jnp.maximum(x, 1.0))) - (f - x)
+    return jnp.sum(term, axis=(-2, -1))

@@ -1,0 +1,45 @@
+"""Jitted wrapper for the render kernel: Celeste sources → patch fluxes.
+
+``render_sources`` converts a batch of source catalog entries + image PSF
+metadata into the kernel's packed GMM inputs and dispatches to either the
+Pallas kernel (TPU; interpret=True on CPU for validation) or the pure-jnp
+oracle in ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import model as cmodel
+from repro.kernels.render import ref
+from repro.kernels.render.render import render_pallas
+
+
+def pack_star(meta: cmodel.ImageMeta, flux, mu_rel):
+    """Star GMM (PSF) inputs for the kernel.  flux: [S]; mu_rel: [S, 2]."""
+    amp, cov = cmodel.star_mixture(meta.psf_amp, meta.psf_var)
+    s = flux.shape[0]
+    amp = jnp.broadcast_to(amp[None], (s,) + amp.shape) * flux[:, None]
+    cov = jnp.broadcast_to(cov[None], (s,) + cov.shape)
+    return ref.gmm_to_kernel_inputs(amp, cov, mu_rel)
+
+
+def pack_galaxy(meta: cmodel.ImageMeta, flux, mu_rel, scale, ratio, angle,
+                frac_dev):
+    amp, cov = jax.vmap(
+        lambda sc, ra, an, fd: cmodel.galaxy_mixture(
+            sc, ra, an, fd, meta.psf_amp, meta.psf_var)
+    )(scale, ratio, angle, frac_dev)
+    amp = amp * flux[:, None]
+    return ref.gmm_to_kernel_inputs(amp, cov, mu_rel)
+
+
+@functools.partial(jax.jit, static_argnames=("patch", "impl"))
+def render_gmm(norm, covinv, mu_rel, patch: int, impl: str = "pallas_interpret"):
+    """Dispatch: 'pallas' (TPU), 'pallas_interpret' (CPU check), 'ref'."""
+    if impl == "ref":
+        return ref.render_ref(norm, covinv, mu_rel, patch)
+    return render_pallas(norm, covinv, mu_rel, patch,
+                         interpret=(impl == "pallas_interpret"))

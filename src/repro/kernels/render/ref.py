@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the GMM patch-render kernel.
+
+The kernel evaluates, for each source s, a 2-D Gaussian mixture over a
+patch of pixel centers:
+
+    out[s, i, j] = Σ_k norm[s,k] · exp(−½ qf_k(p_ij − mu_s))
+
+with qf the quadratic form of the k-th component's *inverse* covariance
+(packed [a, b, c] for [[a, c], [c, b]]) and ``norm`` the amplitude times
+the Gaussian normalizer (flux folded in by the caller).  Pixel (i, j) has
+center (i + 0.5, j + 0.5) relative to the patch corner; ``mu`` is given
+relative to the same corner.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def render_ref(norm: jnp.ndarray, covinv: jnp.ndarray, mu: jnp.ndarray,
+               patch: int) -> jnp.ndarray:
+    """norm: [S, K]; covinv: [S, K, 3] (a, b, c); mu: [S, 2] → [S, P, P]."""
+    i = jnp.arange(patch, dtype=jnp.float32) + 0.5
+    pts = jnp.stack(jnp.meshgrid(i, i, indexing="ij"), -1)    # [P, P, 2]
+    d = pts[None, :, :, None, :] - mu[:, None, None, None, :]  # [S,P,P,1,2]
+    a = covinv[:, None, None, :, 0]
+    b = covinv[:, None, None, :, 1]
+    c = covinv[:, None, None, :, 2]
+    dx, dy = d[..., 0], d[..., 1]
+    q = a * dx * dx + 2.0 * c * dx * dy + b * dy * dy          # [S,P,P,K]
+    return jnp.sum(norm[:, None, None, :] * jnp.exp(-0.5 * q), axis=-1)
+
+
+def gmm_to_kernel_inputs(amp, cov, mu_rel):
+    """Convert (amp [S,K], cov [S,K,2,2], mu_rel [S,2]) to kernel packing."""
+    a, b = cov[..., 0, 0], cov[..., 1, 1]
+    c = cov[..., 0, 1]
+    det = a * b - c * c
+    inv_det = 1.0 / det
+    covinv = jnp.stack([b * inv_det, a * inv_det, -c * inv_det], axis=-1)
+    norm = amp * jnp.sqrt(inv_det) / (2.0 * jnp.pi)
+    return norm, covinv, mu_rel

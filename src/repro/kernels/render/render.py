@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: Gaussian-mixture patch rendering.
+
+This is the Celeste hot loop (paper §III-B: per-pixel expected flux from a
+source's GMM).  TPU adaptation (DESIGN.md §2.3): the grid is (sources,);
+each program renders one source's full patch in VMEM.  The patch is laid
+out [P, P_pad] with the trailing dim padded to the 128-lane VPU width, and
+all K mixture components are evaluated with an unrolled VPU loop —
+exp/multiply-add over an (8, 128)-tiled block, no HBM round trips for
+intermediates.
+
+Per-source parameters (norm/covinv/mu) ride along as (1, ·)-blocked VMEM
+operands indexed by the grid; they are tiny compared to the pixel block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _render_kernel(norm_ref, covinv_ref, mu_ref, out_ref, *, patch: int,
+                   num_comp: int):
+    """One source per program.  out_ref: [1, P, P_pad]."""
+    p_pad = out_ref.shape[-1]
+    # pixel-center coordinate planes, [P, P_pad]
+    ri = jax.lax.broadcasted_iota(jnp.float32, (patch, p_pad), 0) + 0.5
+    ci = jax.lax.broadcasted_iota(jnp.float32, (patch, p_pad), 1) + 0.5
+    dx = ri - mu_ref[0, 0]
+    dy = ci - mu_ref[0, 1]
+    acc = jnp.zeros((patch, p_pad), jnp.float32)
+    for k in range(num_comp):        # static unroll over mixture components
+        a = covinv_ref[0, k, 0]
+        b = covinv_ref[0, k, 1]
+        c = covinv_ref[0, k, 2]
+        q = a * dx * dx + 2.0 * c * dx * dy + b * dy * dy
+        acc = acc + norm_ref[0, k] * jnp.exp(-0.5 * q)
+    out_ref[0] = acc
+
+
+def render_pallas(norm: jnp.ndarray, covinv: jnp.ndarray, mu: jnp.ndarray,
+                  patch: int, interpret: bool = False) -> jnp.ndarray:
+    """norm: [S, K]; covinv: [S, K, 3]; mu: [S, 2] → [S, patch, patch]."""
+    s, k = norm.shape
+    p_pad = max(128, -(-patch // 128) * 128)   # lane-align the minor dim
+    kernel = functools.partial(_render_kernel, patch=patch, num_comp=k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(s,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, patch, p_pad), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, patch, p_pad), jnp.float32),
+        interpret=interpret,
+    )(norm, covinv, mu)
+    return out[:, :, :patch]

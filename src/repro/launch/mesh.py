@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the ``pod``
+axis is pure data parallelism (gradient all-reduce over DCN only).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS *before* any jax initialization).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)}; run "
+            f"under XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for unit tests (requires forced host device count)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             devices=jax.devices()[:pod * data * model])
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:data * model])

@@ -1,0 +1,95 @@
+"""KV caches for decoding, with optional int8 quantization.
+
+A cache is a dict of arrays so it shards/checkpoints like any pytree:
+  {"k": [B, S_max, KV, hd], "v": ..., ("k_scale"/"v_scale": [B, S_max, KV])}
+
+int8 caches store a per-(batch, position, kv-head) absmax scale; the
+attention path dequantizes one k-block at a time inside its online-softmax
+scan (layers.causal_attention), so the float cache is never materialized.
+At 32k context × batch 128 this is the difference between a 21 GB/chip
+cache (doesn't fit v5e HBM) and 10.6 GB/chip (fits) — see EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(batch: int, max_seq: int, kv_heads: int, head_dim: int,
+         dtype=jnp.bfloat16, ring: bool = False) -> dict:
+    """A ring cache (sliding-window layers) stores only ``max_seq`` slots
+    (≥ window + new-token block) plus each slot's absolute position; the
+    attention mask keys off slot positions, so no rotation is needed."""
+    cache = {
+        "k": jnp.zeros((batch, max_seq, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_seq, kv_heads, head_dim), dtype),
+    }
+    if dtype == jnp.int8:
+        cache["k_scale"] = jnp.zeros((batch, max_seq, kv_heads), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, max_seq, kv_heads), jnp.float32)
+    if ring:
+        cache["pos"] = jnp.full((max_seq,), -(1 << 30), jnp.int32)
+    return cache
+
+
+def abstract(batch: int, max_seq: int, kv_heads: int, head_dim: int,
+             dtype=jnp.bfloat16, ring: bool = False) -> dict:
+    """ShapeDtypeStruct cache for dry-run lowering (no allocation)."""
+    return jax.eval_shape(
+        lambda: init(batch, max_seq, kv_heads, head_dim, dtype, ring))
+
+
+def _quantize(x):
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def update(cache: dict, k: jnp.ndarray, v: jnp.ndarray, pos) -> dict:
+    """Write new k/v ([B, S_new, KV, hd]) at sequence offset ``pos``.
+
+    Ring caches ("pos" present) write at slot ``(pos + i) mod W``; when the
+    new block is at least the ring size, only the trailing W tokens land.
+    """
+    quant = cache["k"].dtype == jnp.int8
+    ring = "pos" in cache
+    out = dict(cache)
+    s_new = k.shape[1]
+    w = cache["k"].shape[1]
+
+    if quant:
+        kq, ks = _quantize(k)
+        vq, vs = _quantize(v)
+        items = [("k", kq), ("v", vq), ("k_scale", ks), ("v_scale", vs)]
+    else:
+        items = [("k", k.astype(cache["k"].dtype)),
+                 ("v", v.astype(cache["v"].dtype))]
+
+    if not ring:
+        for name, val in items:
+            out[name] = jax.lax.dynamic_update_slice_in_dim(
+                cache[name], val, pos, 1)
+        return out
+
+    pos = jnp.asarray(pos)
+    if s_new >= w:
+        # keep only the trailing W tokens, scattered to their slots
+        tail_pos = pos + jnp.arange(s_new)[-w:]
+        slots = tail_pos % w
+        for name, val in items:
+            out[name] = cache[name].at[:, slots].set(val[:, -w:])
+        out["pos"] = cache["pos"].at[slots].set(tail_pos.astype(jnp.int32))
+    else:
+        new_pos = pos + jnp.arange(s_new)
+        slots = new_pos % w
+        for name, val in items:
+            out[name] = cache[name].at[:, slots].set(val)
+        out["pos"] = cache["pos"].at[slots].set(new_pos.astype(jnp.int32))
+    return out
+
+
+def read(cache: dict):
+    """Returns (k, v, k_scale, v_scale); scales are None for float caches."""
+    return (cache["k"], cache["v"],
+            cache.get("k_scale"), cache.get("v_scale"))

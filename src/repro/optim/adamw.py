@@ -1,0 +1,73 @@
+"""AdamW with configurable moment dtype (bf16 moments for ≥100B models).
+
+Moments stored in ``state_dtype`` and upcast to f32 for the update math —
+at grok-1 scale this is the difference between optimizer state fitting in
+HBM (2×2 bytes/param) or not (2×4).  Moment shardings inherit the parameter
+shardings so FSDP covers optimizer state too (ZeRO).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def init(params, state_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def abstract_state(params, state_dtype=jnp.float32):
+    """ShapeDtypeStruct state for dry-run lowering."""
+    return jax.eval_shape(lambda p: init(p, state_dtype), params)
+
+
+def update(grads, state: AdamWState, params, lr, *, b1=0.9, b2=0.95,
+           eps=1e-8, weight_decay=0.1, grad_clip=1.0):
+    step = state.step + 1
+
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def leaf(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        upd = (mf / c1) / (jnp.sqrt(vf / c2) + eps)
+        upd = upd + weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * upd
+        return new_p.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    out = jax.tree.map(leaf, grads, state.m, state.v, params)
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), gnorm
+
+
+def lr_schedule(step, base_lr=3e-4, warmup=100, total=10000,
+                min_ratio=0.1):
+    """Linear warmup → cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = step / max(warmup, 1)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return base_lr * jnp.where(step < warmup, warm, cos)

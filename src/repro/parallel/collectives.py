@@ -1,0 +1,91 @@
+"""Collective helpers: compressed gradient all-reduce with error feedback.
+
+The cross-pod ("pod" axis / DCN) gradient all-reduce is the bandwidth-
+critical collective at multi-pod scale.  ``compressed_psum`` implements an
+int8 reduce-scatter + all-gather ring with per-chunk scales: 4× fewer DCN
+bytes than a bf16 all-reduce at the cost of quantization error, which the
+caller cancels across steps with error feedback (see optim/compress.py).
+
+Implemented with ``jax.lax.ppermute`` inside ``shard_map`` — the schedule
+is explicit so the dry-run HLO shows exactly the collective bytes the
+roofline model charges.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_int8(x):
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """All-reduce-mean of ``x`` over ``axis_name`` moving int8 on the wire.
+
+    Ring reduce-scatter (each hop dequantizes, accumulates f32, requantizes)
+    followed by a ring all-gather of the reduced shards.  x's leading dim
+    must be divisible by the axis size.
+    """
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(n, -1).astype(jnp.float32)
+
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def chunk_at(off):
+        # chunk index this device accumulates at ring step with offset
+        return (idx - off) % n
+
+    # reduce-scatter: after n-1 hops, device i holds the full sum of
+    # chunk i (accumulated in f32, transported int8)
+    def rs_step(h, carry):
+        acc_q, acc_s = carry
+        acc_q = jax.lax.ppermute(acc_q, axis_name, perm)
+        acc_s = jax.lax.ppermute(acc_s, axis_name, perm)
+        own = chunks[chunk_at(h + 1)]
+        summed = own + acc_q.astype(jnp.float32) * acc_s
+        q, s = _quantize_int8(summed)
+        return q, s
+
+    q0, s0 = _quantize_int8(chunks[chunk_at(0)])
+    q, s = jax.lax.fori_loop(
+        0, n - 1, lambda h, c: rs_step(h, c), (q0, s0))
+    # after n−1 hops device ``idx`` holds the full sum of chunk (idx+1)%n
+    own_chunk = (idx + 1) % n
+    reduced = q.astype(jnp.float32) * s / n          # mean
+
+    # all-gather the reduced chunks (int8 on the wire)
+    qg, sg = _quantize_int8(reduced)
+
+    def ag_step(h, carry):
+        out, cur_q, cur_s = carry
+        cur_q = jax.lax.ppermute(cur_q, axis_name, perm)
+        cur_s = jax.lax.ppermute(cur_s, axis_name, perm)
+        # at hop h the carry originated at device idx−h−1, whose reduced
+        # chunk id is (idx − h) % n
+        pos = (idx - h) % n
+        out = jnp.where(
+            (jnp.arange(n) == pos)[:, None],
+            (cur_q.astype(jnp.float32) * cur_s)[None, :], out)
+        return out, cur_q, cur_s
+
+    out0 = jnp.where((jnp.arange(n) == own_chunk)[:, None],
+                     reduced[None, :], jnp.zeros_like(chunks))
+    out, _, _ = jax.lax.fori_loop(0, n - 1, lambda h, c: ag_step(h, c),
+                                  (out0, qg, sg))
+    flat_out = out.reshape(-1)
+    if pad:
+        flat_out = flat_out[:-pad]
+    return flat_out.reshape(x.shape).astype(x.dtype)
+
+
+def tree_compressed_psum(tree, axis_name: str):
+    return jax.tree.map(lambda x: compressed_psum(x, axis_name), tree)

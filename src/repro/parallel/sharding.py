@@ -1,0 +1,228 @@
+"""Logical sharding rules: parameter-name → PartitionSpec.
+
+The production mesh is (pod, data, model) — see launch/mesh.py.  Policy:
+
+  * **FSDP**: every large parameter is sharded over ``data`` on one
+    non-TP dimension (ZeRO-3 storage; XLA all-gathers layer-by-layer under
+    the layer scan and reduce-scatters gradients).
+  * **TP**: matmul output/input dims shard over ``model`` Megatron-style
+    (column-parallel in, row-parallel out → one psum per block).
+  * **EP**: expert weights keep experts replicated and shard the FFN dim
+    over ``model`` (dispatch stays data-local; see layers.moe_layer).
+  * ``pod`` is pure data parallelism: only gradient all-reduce crosses the
+    DCN, which is what the (2, 16, 16) multi-pod mesh is meant to prove.
+
+Rules are keyed on parameter leaf *names* (path suffixes), with the layer-
+stacking dimension (from ``lax.scan``) transparently prefixed.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# name → spec for the *unstacked* parameter (layer-stack dim prepended
+# automatically when the leaf has one more dim than the rule).
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed$",        ("model", "data")),     # [V, D]
+    (r"head$",         ("data", "model")),     # [D, V]
+    (r"codebook_embed$", (None, "model", "data")),   # [K, V, D]
+    (r"codebook_head$", (None, "data", "model")),    # [K, D, V]
+    (r"vision_proj$",  (None, "model")),       # [F_dim, D] (small)
+    (r"wq$",           ("data", "model")),
+    (r"wk$",           ("data", "model")),
+    (r"wv$",           ("data", "model")),
+    (r"wo$",           ("model", "data")),
+    (r"w_gate$",       ("data", "model")),
+    (r"w_up$",         ("data", "model")),
+    (r"w_down$",       ("model", "data")),
+    (r"router$",       ("data", None)),
+    (r"moe_w_gate$",   (None, "data", "model")),   # [E, D, F]
+    (r"moe_w_up$",     (None, "data", "model")),
+    (r"moe_w_down$",   (None, "model", "data")),   # [E, F, D]
+    (r"w_in$",         ("data", "model")),     # mamba in-proj
+    (r"w_out$",        ("model", "data")),     # mamba out-proj
+    (r"conv_w$",       (None, "model")),
+    (r"conv_b$",       ("model",)),
+    (r"(a_log|d_skip|dt_bias)$", (None,)),
+    (r"(norm_w|q_norm|k_norm|ln1|ln2|final_norm)$", (None,)),
+]
+
+
+def _apply_policy(axes: tuple, policy: str) -> tuple:
+    """"tp" = FSDP(data) × TP(model).  "fsdp" = pure data parallelism over
+    BOTH axes: params shard over (data, model) on the FSDP dim, no tensor
+    parallelism — zero activation collectives, only weight gathers.  The
+    right choice below ~13B dense models at batch 256 (see §Perf)."""
+    if policy == "tp":
+        return axes
+    out = []
+    for ax in axes:
+        if ax == "model":
+            out.append(None)
+        elif ax == "data":
+            out.append(("data", "model"))
+        else:
+            out.append(ax)
+    return tuple(out)
+
+
+def _spec_for(path: str, ndim: int, policy: str = "tp") -> P:
+    for pat, axes in _RULES:
+        if re.search(pat, path):
+            axes = _apply_policy(tuple(axes), policy)
+            if len(axes) < ndim:        # stacked under scan → None prefix
+                axes = (None,) * (ndim - len(axes)) + axes
+            elif len(axes) > ndim:      # rule broader than leaf (edge case)
+                axes = axes[-ndim:]
+            return P(*axes)
+    return P()                          # replicate by default
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def _mesh_axes(mesh: Mesh) -> set:
+    return set(mesh.axis_names)
+
+
+def _sanitize(spec: P, shape, mesh: Mesh) -> P:
+    """Drop axes the mesh lacks; drop shardings that don't divide evenly.
+
+    Handles tuple entries (e.g. ("pod", "data")) by dropping the whole
+    entry if the dim isn't divisible by the axes' product.
+    """
+    axes = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            axes.append(None)
+            continue
+        group = ax if isinstance(ax, tuple) else (ax,)
+        group = tuple(a for a in group if a in _mesh_axes(mesh))
+        size = 1
+        for a in group:
+            size *= int(mesh.shape[a])
+        if not group or dim % size != 0:
+            axes.append(None)           # e.g. 15 heads on a 16-way axis
+        else:
+            axes.append(ax if isinstance(ax, tuple) else group[0])
+    return P(*axes)
+
+
+def sanitize(spec: P, shape, mesh: Mesh) -> P:
+    return _sanitize(spec, shape, mesh)
+
+
+def param_specs(params, mesh: Mesh, policy: str = "tp"):
+    """PartitionSpec pytree for a parameter pytree (arrays or SDS)."""
+    def leaf(path, x):
+        spec = _spec_for(_path_str(path), x.ndim, policy)
+        return _sanitize(spec, x.shape, mesh)
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def param_shardings(params, mesh: Mesh, policy: str = "tp"):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh, policy))
+
+
+def batch_axes(mesh: Mesh, policy: str = "tp") -> tuple:
+    axes = ("pod", "data", "model") if policy == "fsdp" else ("pod", "data")
+    return tuple(a for a in axes if a in _mesh_axes(mesh))
+
+
+def act_spec(mesh: Mesh, *, seq_axis=None, policy: str = "tp") -> P:
+    """Activation spec [B, S, D]: batch over (pod, data), optional SP."""
+    return P(batch_axes(mesh, policy), seq_axis, None)
+
+
+def data_spec(mesh: Mesh, ndim: int, policy: str = "tp") -> P:
+    """Input batch spec: leading dim over (pod, data)."""
+    return P(batch_axes(mesh, policy), *(None,) * (ndim - 1))
+
+
+def constrain(x, mesh: Mesh | None, spec: P):
+    if mesh is None:
+        return x
+    spec = _sanitize(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def compute_spec(path: str, ndim: int, mesh: Mesh, shape,
+                 policy: str = "tp") -> P:
+    """The *compute* sharding of a parameter: its storage spec with the
+    FSDP ("data") axis dropped.  Constraining weights to this right before
+    use forces XLA to all-gather the (small) weights over ``data`` instead
+    of partial-summing the (large) activations — the canonical FSDP hint."""
+    spec = _sanitize(_spec_for(path, ndim, policy), shape, mesh)
+    axes = tuple(None if (ax == "data" or (isinstance(ax, tuple)
+                                           and "data" in ax)) else ax
+                 for ax in spec)
+    return P(*axes)
+
+
+def gather_for_compute(params, mesh: Mesh | None, policy: str = "tp"):
+    """Apply compute-sharding constraints to a parameter subtree."""
+    if mesh is None:
+        return params
+
+    def leaf(path, x):
+        spec = compute_spec(_path_str(path), x.ndim, mesh, x.shape, policy)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def cache_specs(cache, mesh: Mesh, seq_shard: bool = False,
+                policy: str = "tp"):
+    """KV/SSM cache specs: batch over (pod, data); optionally the sequence
+    dim over ``model`` (flash-decode sequence sharding, §Perf).
+
+    Leaves may carry leading layer-stack dims (dense: [L, ...]; hybrid ssm:
+    [nb, k, ...]) — rules anchor on the *trailing* dims and pad None.
+    """
+    ba = batch_axes(mesh, policy)
+
+    def right_anchor(ndim, tail):
+        return P(*((None,) * (ndim - len(tail)) + tail))
+
+    def leaf(path, x):
+        name = _path_str(path)
+        seq_ax = "model" if seq_shard else None
+        if name.endswith("pos") or x.ndim < 3:    # ring slot positions
+            return P()
+        def done(spec):
+            return _sanitize(spec, x.shape, mesh)
+        if "state" in name:                       # [..., B, H, Phd, N]
+            h = x.shape[-3]
+            h_ax = ("model" if (h % mesh.shape["model"] == 0
+                                and not seq_shard) else None)
+            return done(right_anchor(x.ndim, (ba, h_ax, None, None)))
+        if "conv" in name:                        # [..., B, K-1, C]
+            c_ax = ("model" if x.shape[-1] % mesh.shape["model"] == 0
+                    else None)
+            return done(right_anchor(x.ndim, (ba, None, c_ax)))
+        md = int(mesh.shape["model"]) if "model" in _mesh_axes(mesh) else 1
+        kv, hd = (x.shape[-2], x.shape[-1]) if x.ndim >= 2 else (1, 1)
+        kv_ax = "model" if (not seq_shard and kv % md == 0) else None
+        hd_ax = ("model" if (not seq_shard and kv_ax is None
+                             and hd % md == 0) else None)
+        if "scale" in name:                       # [..., B, S, KV]
+            kvs = x.shape[-1]
+            return done(right_anchor(
+                x.ndim,
+                (ba, seq_ax,
+                 "model" if (not seq_shard and kvs % md == 0) else None)))
+        # k/v [..., B, S, KV, hd] — shard the model axis on KV heads when
+        # divisible, else on head_dim; never together with seq sharding
+        return done(right_anchor(x.ndim, (ba, seq_ax, kv_ax, hd_ax)))
+    return jax.tree_util.tree_map_with_path(leaf, cache)

@@ -1,0 +1,106 @@
+"""Fault-tolerant execution loop: checkpoint/restart, retry, preemption.
+
+At thousands of nodes, *something* is always failing; the loop's contract:
+
+  * checkpoint every ``ckpt_every`` steps (async; never blocks compute);
+  * on any step failure (device error, injected fault, preemption signal)
+    restore the latest committed checkpoint and replay — the data pipeline
+    is deterministic per (step, host), so replayed steps are bit-identical;
+  * bounded retries guard against deterministic poison steps;
+  * SIGTERM (preemption notice) triggers a final synchronous save.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+class StepFailure(RuntimeError):
+    """Raised by step functions (or fault injectors) to simulate/flag a
+    node failure."""
+
+
+@dataclass
+class LoopStats:
+    steps_run: int = 0
+    failures: int = 0
+    restores: int = 0
+    checkpoints: int = 0
+    losses: list = field(default_factory=list)
+
+
+def run_loop(state: Any,
+             step_fn: Callable[[Any, int], tuple[Any, float]],
+             *, num_steps: int, checkpointer: Checkpointer,
+             ckpt_every: int = 50, max_retries: int = 3,
+             start_step: int | None = None,
+             fault_injector: Callable[[int], bool] | None = None,
+             log: Callable[[str], None] = lambda s: None) -> tuple[Any,
+                                                                   LoopStats]:
+    """Run ``step_fn(state, step) -> (state, loss)`` with restart-on-failure.
+
+    If ``start_step`` is None, resumes from the latest committed checkpoint
+    (restoring into ``state``'s shardings) — a fresh process after a crash
+    picks up where the last commit left off.
+    """
+    stats = LoopStats()
+    step = start_step
+    if step is None:
+        latest = checkpointer.latest_step()
+        if latest is not None:
+            state = checkpointer.restore(latest, state)
+            step = latest
+            stats.restores += 1
+            log(f"resumed from checkpoint step {latest}")
+        else:
+            step = 0
+
+    preempted = {"flag": False}
+
+    def on_sigterm(signum, frame):
+        preempted["flag"] = True
+
+    old = signal.signal(signal.SIGTERM, on_sigterm)
+    retries = 0
+    try:
+        while step < num_steps:
+            try:
+                if fault_injector is not None and fault_injector(step):
+                    raise StepFailure(f"injected fault at step {step}")
+                state, loss = step_fn(state, step)
+                stats.losses.append(float(loss))
+                stats.steps_run += 1
+                step += 1
+                retries = 0
+                if step % ckpt_every == 0 or step == num_steps:
+                    checkpointer.save(step, state)
+                    stats.checkpoints += 1
+                if preempted["flag"]:
+                    log(f"preempted; final save at step {step}")
+                    checkpointer.save(step, state, blocking=True)
+                    stats.checkpoints += 1
+                    break
+            except StepFailure as e:
+                stats.failures += 1
+                retries += 1
+                if retries > max_retries:
+                    raise RuntimeError(
+                        f"step {step} failed {retries} times") from e
+                latest = checkpointer.latest_step()
+                if latest is not None:
+                    checkpointer.wait()
+                    state = checkpointer.restore(latest, state)
+                    step = latest
+                    stats.restores += 1
+                    log(f"failure at step {step}: {e}; restored {latest}")
+                else:
+                    log(f"failure before first checkpoint: {e}; retrying")
+                time.sleep(0.01)
+    finally:
+        signal.signal(signal.SIGTERM, old)
+        checkpointer.wait()
+    return state, stats

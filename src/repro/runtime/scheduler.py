@@ -1,0 +1,75 @@
+"""Dtree-inspired dynamic scheduling for SPMD (paper §III-G).
+
+Dtree distributes shrinking batches of task indices at runtime; under SPMD
+the equivalent degrees of freedom are (a) *which* sources share a device
+batch (decided per round from the cost model) and (b) *rebalancing between
+rounds* from measured costs.  This module owns the adaptive loop:
+
+    plan round → measure per-task cost → refit cost model →
+    re-pack remaining tasks → repeat
+
+and the straggler-mitigation policy: a shard whose measured round time
+exceeds ``straggler_factor``× the median gets its next-round predicted
+capacity discounted (persistent slow hosts — thermal throttling, flaky
+HBM — receive less work, the paper's "minimal scheduling overhead" goal).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import decompose
+
+
+@dataclass
+class RoundRecord:
+    round_idx: int
+    shard_times: np.ndarray          # [num_shards] seconds (or iters)
+    imbalance: float                 # (max - mean) / mean
+    predicted_imbalance: float
+
+
+@dataclass
+class DynamicScheduler:
+    num_shards: int
+    batch: int
+    cost_model: decompose.CostModel = field(
+        default_factory=decompose.CostModel)
+    straggler_factor: float = 1.5
+    history: list = field(default_factory=list)
+    shard_speed: np.ndarray | None = None     # relative speed per shard
+
+    def __post_init__(self):
+        if self.shard_speed is None:
+            self.shard_speed = np.ones(self.num_shards)
+
+    def plan(self, positions: np.ndarray, feats: np.ndarray,
+             extent: float) -> decompose.Plan:
+        costs = self.cost_model.predict(feats) / np.maximum(
+            self.shard_speed.mean(), 1e-9)
+        return decompose.make_plan(positions, costs, self.num_shards,
+                                   self.batch, extent=extent)
+
+    def record(self, round_idx: int, feats: np.ndarray,
+               measured: np.ndarray, shard_of_task: np.ndarray):
+        """Feed back measured per-task cost (e.g. Newton iterations)."""
+        self.cost_model = self.cost_model.refit(feats, measured)
+        shard_times = np.zeros(self.num_shards)
+        for sh in range(self.num_shards):
+            shard_times[sh] = measured[shard_of_task == sh].sum()
+        mean = max(shard_times.mean(), 1e-9)
+        rec = RoundRecord(
+            round_idx=round_idx, shard_times=shard_times,
+            imbalance=float((shard_times.max() - mean) / mean),
+            predicted_imbalance=0.0)
+        self.history.append(rec)
+        # straggler detection: persistently slow shards get discounted
+        med = max(np.median(shard_times), 1e-9)
+        slow = shard_times > self.straggler_factor * med
+        self.shard_speed = np.where(
+            slow, 0.9 * self.shard_speed, np.minimum(
+                1.0, 1.02 * self.shard_speed))
+
+    def imbalance_history(self) -> np.ndarray:
+        return np.array([r.imbalance for r in self.history])

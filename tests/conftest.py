@@ -1,0 +1,9 @@
+import os
+
+# Tests run single-device (the dry-run forces 512 devices in its own
+# process); keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

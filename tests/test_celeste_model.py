@@ -1,0 +1,85 @@
+"""Unit tests for the Celeste generative model (core/model.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import model
+from repro.core.model import ImageMeta, SourceParams
+
+
+def _meta(band=2, sky=100.0):
+    return ImageMeta(
+        band=jnp.asarray(band),
+        sky=jnp.asarray(sky, jnp.float32),
+        psf_amp=jnp.array([0.8, 0.15, 0.05], jnp.float32),
+        psf_var=jnp.array([1.0, 2.5, 6.0], jnp.float32),
+        origin=jnp.zeros(2, jnp.float32))
+
+
+def _src(is_gal=0.0, flux=1000.0, pos=(16.0, 16.0)):
+    return SourceParams(
+        is_gal=jnp.asarray(is_gal, jnp.float32),
+        ref_flux=jnp.asarray(flux, jnp.float32),
+        colors=jnp.zeros(4, jnp.float32),
+        pos=jnp.asarray(pos, jnp.float32),
+        gal_scale=jnp.asarray(1.5, jnp.float32),
+        gal_ratio=jnp.asarray(0.7, jnp.float32),
+        gal_angle=jnp.asarray(0.4, jnp.float32),
+        gal_frac_dev=jnp.asarray(0.5, jnp.float32))
+
+
+def test_band_fluxes_reference_band_identity():
+    flux = model.band_fluxes(jnp.asarray(500.0), jnp.array([0.1, -0.2,
+                                                            0.3, 0.0]))
+    assert np.isclose(float(flux[model.REF_BAND]), 500.0)
+    # adjacent-band ratios recover the colors
+    ratios = jnp.log(flux[1:] / flux[:-1])
+    np.testing.assert_allclose(np.asarray(ratios), [0.1, -0.2, 0.3, 0.0],
+                               rtol=1e-5)
+
+
+def test_star_patch_flux_conserved():
+    """The PSF is a density: a big patch sums to ≈ the total flux."""
+    src = _src(flux=2000.0)
+    tile = model.render_source_patch(src, _meta(), jnp.zeros(2), 32)
+    assert np.isclose(float(tile.sum()), 2000.0, rtol=0.02)
+
+
+def test_galaxy_patch_flux_conserved():
+    src = _src(is_gal=1.0, flux=3000.0)
+    tile = model.render_source_patch(src, _meta(), jnp.zeros(2), 32)
+    # galaxy profiles have wider tails; allow 10%
+    assert np.isclose(float(tile.sum()), 3000.0, rtol=0.10)
+
+
+def test_gmm_density_nonnegative_and_peaked_at_center():
+    src = _src(pos=(16.0, 16.0))
+    tile = model.render_source_patch(src, _meta(), jnp.zeros(2), 32)
+    assert float(tile.min()) >= 0.0
+    peak = np.unravel_index(int(jnp.argmax(tile)), tile.shape)
+    assert abs(peak[0] - 15.5) <= 1 and abs(peak[1] - 15.5) <= 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(0.5, 4.0), ratio=st.floats(0.2, 1.0),
+       angle=st.floats(0.0, 3.1), fdev=st.floats(0.0, 1.0))
+def test_galaxy_cov_psd(scale, ratio, angle, fdev):
+    """Every galaxy mixture covariance is positive definite."""
+    amp, cov = model.galaxy_mixture(
+        jnp.asarray(scale, jnp.float32), jnp.asarray(ratio, jnp.float32),
+        jnp.asarray(angle, jnp.float32), jnp.asarray(fdev, jnp.float32),
+        jnp.array([0.8, 0.15, 0.05]), jnp.array([1.0, 2.5, 6.0]))
+    det = cov[:, 0, 0] * cov[:, 1, 1] - cov[:, 0, 1] ** 2
+    assert float(det.min()) > 0.0
+    assert float(cov[:, 0, 0].min()) > 0.0
+    assert np.isclose(float(amp.sum()), 1.0, rtol=1e-5)
+
+
+def test_render_image_includes_sky():
+    src = jax.tree.map(lambda a: a[None], _src())
+    metas = jax.tree.map(lambda a: a[None], _meta())
+    img = model.render_image(src, jax.tree.map(lambda a: a[0], metas),
+                             32, 32)
+    assert float(img.min()) >= 100.0 - 1e-3

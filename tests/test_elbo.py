@@ -1,0 +1,102 @@
+"""Variational-family and ELBO tests (core/elbo.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import elbo, model, synthetic
+from repro.core.priors import default_priors
+
+
+def _setup(key=0, num=3):
+    sky = synthetic.sample_sky(jax.random.PRNGKey(key), num_sources=num,
+                               field=96)
+    return sky
+
+
+def test_pack_unpack_roundtrip():
+    priors = default_priors()
+    sky = _setup()
+    src = jax.tree.map(lambda a: a[0], sky.truth)
+    theta = elbo.init_theta(src, priors)
+    v = elbo.unpack(theta)
+    theta2 = elbo.pack(v)
+    np.testing.assert_allclose(np.asarray(theta), np.asarray(theta2),
+                               atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_kl_nonnegative(seed):
+    priors = default_priors()
+    theta = jax.random.normal(jax.random.PRNGKey(seed),
+                              (elbo.THETA_DIM,)) * 0.5
+    v = elbo.unpack(theta)
+    assert float(elbo.kl_source(v, priors)) >= -1e-5
+
+
+def test_kl_zero_at_prior():
+    priors = default_priors()
+    v = elbo.VarParams(
+        prob_gal=priors.prob_gal, r_mu=priors.r_mu, r_var=priors.r_var,
+        c_mu=priors.c_mu, c_var=priors.c_var,
+        pos=jnp.zeros(2), gal_scale=jnp.asarray(1.5),
+        gal_ratio=jnp.asarray(0.7), gal_angle=jnp.asarray(0.0),
+        gal_frac_dev=jnp.asarray(0.5))
+    assert abs(float(elbo.kl_source(v, priors))) < 1e-5
+
+
+def test_flux_moments_match_lognormal():
+    """E[ℓ] and E[ℓ²] against Monte Carlo for the variational family."""
+    v = elbo.unpack(jnp.zeros(elbo.THETA_DIM).at[1].set(3.0).at[3].set(
+        np.log(0.25)))
+    m1, m2 = elbo.flux_moments(v)
+    key = jax.random.PRNGKey(0)
+    z = jax.random.normal(key, (200_000,))
+    samp = jnp.exp(3.0 + 0.5 * z)           # lognormal(3, 0.25)
+    assert np.isclose(float(m1[0, model.REF_BAND]), float(samp.mean()),
+                      rtol=0.02)
+    assert np.isclose(float(m2[0, model.REF_BAND]),
+                      float((samp**2).mean()), rtol=0.05)
+
+
+def test_elbo_increases_with_truth_vs_perturbed():
+    """ELBO at the generating parameters beats a badly perturbed point."""
+    priors = default_priors()
+    sky = _setup(num=1)
+    src = jax.tree.map(lambda a: a[0], sky.truth)
+    from repro.core.infer import extract_patches
+    x, corners = extract_patches(sky.images, sky.metas,
+                                 sky.truth.pos[:1], 24)
+    bg = jnp.broadcast_to(sky.metas.sky[:, None, None], x[0].shape)
+    theta_true = elbo.init_theta(src, priors)
+    theta_bad = theta_true.at[elbo.I_POS].add(4.0)
+    e_true = elbo.elbo_patch(theta_true, x[0], bg, sky.metas, corners[0],
+                             priors)
+    e_bad = elbo.elbo_patch(theta_bad, x[0], bg, sky.metas, corners[0],
+                            priors)
+    assert float(e_true) > float(e_bad)
+
+
+def test_grad_hess_shapes_and_symmetry():
+    priors = default_priors()
+    sky = _setup(num=1)
+    src = jax.tree.map(lambda a: a[0], sky.truth)
+    from repro.core.infer import extract_patches
+    x, corners = extract_patches(sky.images, sky.metas,
+                                 sky.truth.pos[:1], 24)
+    bg = jnp.broadcast_to(sky.metas.sky[:, None, None], x[0].shape)
+    theta = elbo.init_theta(src, priors)
+    val, g, h = elbo.elbo_grad_hess(theta, x[0], bg, sky.metas,
+                                    corners[0], priors)
+    assert g.shape == (elbo.THETA_DIM,)
+    assert h.shape == (elbo.THETA_DIM, elbo.THETA_DIM)
+    assert bool(jnp.isfinite(val)) and bool(jnp.isfinite(g).all())
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h.T), atol=1e-2)
+
+
+def test_posterior_sd_positive():
+    theta = jnp.zeros(elbo.THETA_DIM).at[1:3].set(4.0)
+    sd = elbo.posterior_sd(theta)
+    assert float(sd["ref_flux"]) > 0
+    assert float(sd["is_gal"]) > 0

@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests (assignment requirement (f)): every one of
+the 10 assigned architectures instantiates a REDUCED config of the same
+family and runs one forward/train step on CPU — output shapes + no NaNs —
+plus prefill/decode cache consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_NAMES, get_config, reduced
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    if cfg.num_codebooks:
+        return {"tokens": jax.random.randint(
+            KEY, (b, cfg.num_codebooks, s), 0, cfg.vocab)}
+    if cfg.frontend == "vision":
+        return {
+            "tokens": jax.random.randint(KEY, (b, s - cfg.frontend_len),
+                                         0, cfg.vocab),
+            "patches": jax.random.normal(
+                KEY, (b, cfg.frontend_len, cfg.frontend_dim)),
+        }
+    return {"tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_forward_loss(arch):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, KEY)
+    loss = M.loss_fn(params, cfg, _batch(cfg))
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    # near ln(vocab) at random init
+    assert 0.5 * np.log(cfg.vocab) < float(loss) < 2.5 * np.log(cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_train_step(arch):
+    from repro.launch.train import make_train_step
+    from repro.optim import adamw
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, KEY)
+    opt = adamw.init(params)
+    err = jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params)
+    step, _, _ = make_train_step(cfg, mesh=None, microbatches=2)
+    batch = _batch(cfg, b=4)
+    p2, o2, _, metrics = step(params, opt, err, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # parameters actually moved
+    moved = jax.tree.map(
+        lambda a, b_: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                            - b_.astype(jnp.float32)))),
+        params, p2)
+    assert max(jax.tree.leaves(moved)) > 0
+    # shapes preserved, no NaNs anywhere
+    for leaf in jax.tree.leaves(p2):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_prefill_decode_consistency(arch):
+    cfg = reduced(get_config(arch))
+    if cfg.num_experts:
+        # capacity dropping must not confound the cache-consistency check
+        import dataclasses
+        cfg = dataclasses.replace(cfg, capacity_factor=float(
+            cfg.num_experts))
+    params = M.init_params(cfg, KEY)
+    b, s = 2, 32
+    batch = _batch(cfg, b, s)
+    toks = batch["tokens"]
+    caches = M.init_caches(cfg, b, s + 8, cache_dtype=jnp.float32,
+                           block_k=16)
+    lg_full, _ = M.prefill(params, cfg, batch, caches)
+
+    part = dict(batch)
+    if cfg.num_codebooks:
+        part["tokens"] = toks[:, :, :-1]
+        last = toks[:, :, -1:]
+        pos = toks.shape[2] - 1
+    else:
+        part["tokens"] = toks[:, :-1]
+        last = toks[:, -1:]
+        pos = (toks.shape[1] - 1 if cfg.frontend != "vision"
+               else toks.shape[1] - 1 + cfg.frontend_len)
+    caches_b = M.init_caches(cfg, b, s + 8, cache_dtype=jnp.float32,
+                             block_k=16)
+    _, caches_b = M.prefill(params, cfg, part, caches_b)
+    lg_d, _ = M.decode_step(params, cfg, last, caches_b, jnp.asarray(pos))
+    np.testing.assert_allclose(np.asarray(lg_d), np.asarray(lg_full),
+                               atol=5e-3, rtol=1e-3)
+
+
+def test_train_loss_decreases_smollm():
+    """~200-step training sanity on the smallest arch: loss decreases."""
+    from repro.launch.train import make_train_step
+    from repro.optim import adamw
+    from repro.data.tokens import PipelineConfig, _batch_for
+    cfg = reduced(get_config("smollm_360m"), num_layers=2, d_model=64,
+                  d_ff=128, vocab=256)
+    params = M.init_params(cfg, KEY)
+    opt = adamw.init(params)
+    err = jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params)
+    step, _, _ = make_train_step(cfg, mesh=None, lr=3e-3, total_steps=60)
+    step = jax.jit(step)
+    pc = PipelineConfig(vocab=cfg.vocab, seq_len=64, global_batch=8)
+    losses = []
+    for i in range(60):
+        batch = jax.tree.map(jnp.asarray, _batch_for(pc, i))
+        params, opt, err, m = step(params, opt, err, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.3

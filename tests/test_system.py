@@ -1,0 +1,115 @@
+"""End-to-end system behaviour tests: the paper's full pipeline — load
+images, load catalog, optimize sources (paper §III-D) — plus KV-cache and
+analysis-layer invariants used by the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import heuristic, infer, synthetic
+from repro.core.priors import Priors, default_priors, fit_priors
+
+
+def test_full_pipeline_three_phases():
+    """Phase 1 load images → phase 2 load catalog → phase 3 optimize."""
+    priors = default_priors()
+    sky = synthetic.sample_sky(jax.random.PRNGKey(2), num_sources=6,
+                               field=128, priors=priors, epochs=2)
+    # multi-epoch: 10 images (5 bands × 2 epochs) — the overlapping-image
+    # setting the paper says co-adding destroys
+    assert sky.images.shape[0] == 10
+    cand = sky.truth.pos + 0.5 * jax.random.normal(
+        jax.random.PRNGKey(3), sky.truth.pos.shape)
+    est = heuristic.measure_catalog(sky.images, sky.metas, cand)
+    thetas, stats = infer.run_inference(sky.images, sky.metas, est,
+                                        priors, patch=24, batch=6)
+    assert stats.converged == 6
+    cat = infer.infer_catalog(thetas)
+    err = heuristic.catalog_errors(cat, sky.truth)
+    assert err["position"] < 0.75
+
+
+def test_fit_priors_recovers_population():
+    key = jax.random.PRNGKey(0)
+    n = 4000
+    is_gal = jax.random.bernoulli(key, 0.3, (n,)).astype(jnp.float32)
+    log_r = jnp.where(is_gal > 0, 5.0, 4.0) + 0.5 * jax.random.normal(
+        jax.random.PRNGKey(1), (n,))
+    colors = jnp.where(is_gal[:, None] > 0, 1.0, 0.3) + \
+        0.4 * jax.random.normal(jax.random.PRNGKey(2), (n, 4))
+    pri = fit_priors(is_gal, jnp.exp(log_r), colors)
+    assert np.isclose(float(pri.prob_gal), 0.3, atol=0.03)
+    assert np.isclose(float(pri.r_mu[1]), 5.0, atol=0.1)
+    assert np.isclose(float(pri.r_mu[0]), 4.0, atol=0.1)
+    assert np.isclose(float(pri.c_var[0, 0]), 0.16, rtol=0.3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(w=st.integers(4, 64), s_new=st.integers(1, 8),
+       pos=st.integers(0, 200))
+def test_ring_cache_keeps_last_window(w, s_new, pos):
+    """Ring-cache invariant: after writing s_new tokens at ``pos``, the
+    live slots hold exactly the last min(w, ·) positions written."""
+    from repro.models import kvcache
+    cache = kvcache.init(1, w, 1, 4, ring=True)
+    k = jnp.arange(s_new, dtype=jnp.float32).reshape(1, s_new, 1, 1) \
+        * jnp.ones((1, s_new, 1, 4))
+    cache = kvcache.update(cache, k, k, jnp.asarray(pos))
+    got = sorted(int(p) for p in cache["pos"] if int(p) >= 0)
+    lo = pos + s_new - min(w, s_new)
+    want = list(range(lo, pos + s_new))
+    assert got == want
+
+
+def test_int8_cache_quantization_error_bounded():
+    from repro.models import kvcache
+    key = jax.random.PRNGKey(0)
+    k = jax.random.normal(key, (2, 16, 4, 32))
+    cache = kvcache.init(2, 16, 4, 32, dtype=jnp.int8)
+    cache = kvcache.update(cache, k, k, jnp.asarray(0))
+    kq, vq, ks, vs = kvcache.read(cache)
+    deq = kq.astype(jnp.float32) * ks[..., None]
+    rel = float(jnp.max(jnp.abs(deq - k)) / jnp.max(jnp.abs(k)))
+    assert rel < 0.02           # 1/127 per-row quantization
+
+
+def test_jaxpr_cost_counts_scan_trips():
+    """The analysis layer must multiply scan bodies by trip count —
+    the exact failure mode of XLA's cost_analysis it exists to fix."""
+    from repro.analysis.cost import jaxpr_cost
+
+    def f(w, x):
+        def body(h, _):
+            return jnp.tanh(h @ w), ()
+        h, _ = jax.lax.scan(body, x, None, length=10)
+        return h.sum()
+
+    w = jnp.zeros((64, 64))
+    x = jnp.zeros((8, 64))
+    cost = jaxpr_cost(f, w, x)
+    dot_flops = 2 * 8 * 64 * 64 * 10
+    assert cost.flops >= dot_flops
+    assert cost.flops < dot_flops * 3
+
+
+def test_hlo_collectives_parser_on_synthetic_text():
+    from repro.analysis.cost import hlo_collectives
+    hlo = """
+HloModule test
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar = f32[8]{0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%sum
+}
+%cond (p: (s32[], f32[8])) -> pred[] {
+  %c = s32[] constant(5)
+  %cmp = pred[] compare(%i, %c), direction=LT
+}
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %w = (s32[], f32[8]) while(%t), condition=%cond, body=%body
+  ROOT %ag = f32[64]{0} all-gather(%a), replica_groups=[1,8]<=[8], dimensions={0}
+}
+"""
+    r = hlo_collectives(hlo, pod_stride=256)
+    # all-reduce: 8 f32 = 32B → bf16-corrected 16B × trip 5 = 80
+    assert r["per_kind"]["all-reduce"] == 80.0
+    assert r["per_kind"]["all-gather"] == 128.0   # 64 f32 → bf16 = 128B
+    assert r["counts"]["all-reduce"] == 1
