@@ -1,0 +1,92 @@
+"""Backend comparison for the batched ELBO hot path.
+
+Measures sources/sec of ``BatchedObjective.value_and_grad`` — the
+per-iteration evaluation the trust-region Newton loop pays — for each
+ELBO backend (``core/backends.py``) across patch sizes and batch sizes,
+and emits a JSON comparison.
+
+CPU note: ``pallas_interpret`` runs the kernels in the Pallas interpreter
+and is orders of magnitude slower than compiled code — on CPU it
+validates the pipeline, it does not represent TPU performance.  On a TPU
+host add ``--backends jax,pallas`` for the real comparison.
+
+Run:
+    PYTHONPATH=src python benchmarks/elbo_backends.py \
+        --backends jax,pallas_interpret --patches 16,24 --batches 4,8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from benchmarks.common import timeit
+except ImportError:        # invoked as `python benchmarks/elbo_backends.py`
+    from common import timeit
+from repro.core import elbo, infer, synthetic
+from repro.core.priors import default_priors
+
+
+def _problem(patch: int, batch: int, seed: int = 0):
+    priors = default_priors()
+    sky = synthetic.sample_sky(jax.random.PRNGKey(seed), num_sources=batch,
+                               field=max(96, 4 * patch), priors=priors)
+    x, corners = infer.extract_patches(sky.images, sky.metas,
+                                       sky.truth.pos, patch)
+    bg = jnp.broadcast_to(sky.metas.sky[None, :, None, None], x.shape)
+    thetas = jax.vmap(lambda s: elbo.init_theta(s, priors))(sky.truth)
+    return sky.metas, priors, thetas, x, bg, corners
+
+
+def run(backends_list, patches, batches, iters=3):
+    results = []
+    for patch in patches:
+        for batch in batches:
+            metas, priors, thetas, x, bg, corners = _problem(patch, batch)
+            for name in backends_list:
+                obj = infer.make_objective(metas, priors, backend=name)
+                fn = jax.jit(obj.value_and_grad)
+                secs, _ = timeit(fn, thetas, x, bg, corners, warmup=1,
+                                 iters=iters)
+                results.append({
+                    "backend": name,
+                    "patch": patch,
+                    "batch": batch,
+                    "n_img": int(x.shape[1]),
+                    "seconds_per_call": secs,
+                    "sources_per_sec": batch / secs,
+                })
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backends", default="jax,pallas_interpret")
+    ap.add_argument("--patches", default="16,24")
+    ap.add_argument("--batches", default="4,8")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args()
+
+    results = run([b.strip() for b in args.backends.split(",")],
+                  [int(p) for p in args.patches.split(",")],
+                  [int(b) for b in args.batches.split(",")],
+                  iters=args.iters)
+    report = {
+        "benchmark": "elbo_backends",
+        "metric": "sources_per_sec of value_and_grad (Newton hot path)",
+        "device": jax.devices()[0].platform,
+        "results": results,
+    }
+    text = json.dumps(report, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,9 @@ def main():
     ap.add_argument("--epochs", type=int, default=2)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--passes", type=int, default=1)
+    ap.add_argument("--backend", default=None,
+                    help="ELBO backend: jax | pallas | pallas_interpret | "
+                         "ref (default: REPRO_ELBO_BACKEND env or jax)")
     ap.add_argument("--out", default="/tmp/celeste_catalog.json")
     args = ap.parse_args()
 
@@ -58,7 +61,7 @@ def main():
 
     thetas, stats = infer.run_inference(
         sky.images, sky.metas, photo, priors, patch=24, batch=args.batch,
-        passes=args.passes)
+        passes=args.passes, backend=args.backend)
     print(f"[{time.time()-t0:6.1f}s] optimization: {stats.rounds} rounds, "
           f"{stats.converged}/{stats.total_sources} converged, "
           f"mean iters {stats.iters.mean():.1f}, "

@@ -1,0 +1,61 @@
+"""ELBO-evaluation backend registry.
+
+The Newton hot path evaluates the per-source pixel term either with pure
+JAX (portable, CPU CI) or with the fused Pallas kernels
+(``kernels/render`` + ``kernels/poisson_elbo``).  Backends are selected by
+name, threaded through ``infer.make_objective`` / ``infer.run_inference``:
+
+  * ``"jax"``               — per-source ``elbo.elbo_patch`` under ``vmap``
+                              (the original path; default).
+  * ``"pallas"``            — fused Pallas kernels, compiled for TPU.
+  * ``"pallas_interpret"``  — same kernels in interpreter mode; runs on CPU
+                              and is the CI stand-in for ``"pallas"``.
+  * ``"ref"``               — the batched pipeline with the pure-jnp kernel
+                              oracles; the parity midpoint between ``jax``
+                              and the kernels.
+
+Selection precedence: explicit argument > ``REPRO_ELBO_BACKEND`` env var >
+``"jax"``.  Registration happens when ``core/batched_elbo.py`` is imported;
+``get`` imports it lazily so there is no import cycle.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable
+
+ENV_VAR = "REPRO_ELBO_BACKEND"
+DEFAULT = "jax"
+
+# name -> factory(metas, priors) -> newton.BatchedObjective
+_REGISTRY: dict[str, Callable] = {}
+
+
+def register(name: str, factory: Callable) -> None:
+    _REGISTRY[name] = factory
+
+
+def available() -> tuple[str, ...]:
+    _ensure_registered()
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve(name: str | None = None) -> str:
+    """Apply the selection precedence; validates the resolved name."""
+    name = name or os.environ.get(ENV_VAR) or DEFAULT
+    _ensure_registered()
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown ELBO backend {name!r}; available: {available()}")
+    return name
+
+
+def get(name: str | None = None) -> Callable:
+    """Factory for the resolved backend: f(metas, priors) -> objective."""
+    return _REGISTRY[resolve(name)]
+
+
+def _ensure_registered() -> None:
+    # import is cached after the first time; keying on it (rather than on
+    # the registry being non-empty) keeps early external register() calls
+    # from suppressing the built-in backends
+    from repro.core import batched_elbo  # noqa: F401  (registers built-ins)

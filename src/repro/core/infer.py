@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import decompose, elbo, newton, synthetic
+from repro.core import backends, decompose, elbo, newton, synthetic
 from repro.core.model import ImageMeta, SourceParams
 from repro.core.priors import Priors
 
@@ -59,11 +59,14 @@ def extract_patches(images: jnp.ndarray, metas: ImageMeta,
     return jax.vmap(per_source)(positions)
 
 
-def make_objective(metas: ImageMeta, priors: Priors):
-    """The per-source local ELBO with image metadata closed over."""
-    def objective(theta, x, bg, corners):
-        return elbo.elbo_patch(theta, x, bg, metas, corners, priors)
-    return objective
+def make_objective(metas: ImageMeta, priors: Priors,
+                   backend: str | None = None) -> newton.BatchedObjective:
+    """The batched local-ELBO objective for the resolved backend.
+
+    ``backend`` is one of ``core/backends.available()``; ``None`` defers to
+    the ``REPRO_ELBO_BACKEND`` env var and then the ``"jax"`` default.
+    """
+    return backends.get(backend)(metas, priors)
 
 
 def _gather_batch(idx: np.ndarray, x, bg, corners, thetas):
@@ -79,6 +82,7 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
                   max_iters: int = 50, gtol: float = 1.0,
                   cost_model: decompose.CostModel | None = None,
                   passes: int = 1,
+                  backend: str | None = None,
                   progress: Any = None):
     """Run Celeste VI over a full field.  Returns (thetas [S, D], stats).
 
@@ -86,6 +90,11 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
     fitted catalog and refits — the iterated-conditional refinement the
     paper lists as future work (§IX, "optimizing all light sources
     jointly"); pass 1 alone is the paper-faithful procedure.
+
+    ``backend`` selects the ELBO evaluation backend (``core/backends.py``):
+    ``"jax"`` (default) for the portable path, ``"pallas"`` for the fused
+    TPU kernels, ``"pallas_interpret"`` / ``"ref"`` for CPU validation of
+    the kernel pipeline.
     """
     field = int(images.shape[-1])
     s = int(init_catalog.pos.shape[0])
@@ -123,7 +132,7 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
     plan = decompose.make_plan(pos_np, cm.predict(feats), num_shards,
                                batch, extent=field)
 
-    objective = make_objective(metas, priors)
+    objective = make_objective(metas, priors, backend=backend)
 
     if mesh is None:
         def fit(tb, xb, bgb, cb, act):
@@ -131,7 +140,7 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
                                     active=act, max_iters=max_iters,
                                     gtol=gtol)
     else:
-        from jax import shard_map
+        from repro.parallel.sharding import shard_map
         spec = P(data_axis)
         def _sharded(tb, xb, bgb, cb, act):
             def local(t, xx, bb, cc, aa):

@@ -15,7 +15,7 @@ the Levenberg shift λ — branch-free and fixed-iteration, hence jit-able.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +25,31 @@ class NewtonResult(NamedTuple):
     theta: jnp.ndarray       # [S, D] final parameters
     value: jnp.ndarray       # [S] final objective (ELBO)
     iters: jnp.ndarray       # [S] iterations used per source
-    converged: jnp.ndarray   # [S] bool
-    grad_norm: jnp.ndarray   # [S] final ‖∇‖∞
+    converged: jnp.ndarray   # [S] bool; active sources that reached gtol
+    grad_norm: jnp.ndarray   # [S] final ‖∇‖∞ (inf if never evaluated)
+
+
+class BatchedObjective(NamedTuple):
+    """Batch-level evaluation API for ``fit_batch``.
+
+    All three callables take ``(thetas [S, D], *obj_args)`` with every
+    entry of ``obj_args`` carrying a leading ``S`` dim, and sources must be
+    independent (``value[i]`` depends on ``thetas[i]`` only).  Backends
+    that fuse the batch into kernels (``core/batched_elbo.py``) implement
+    this directly; plain per-source callables are adapted with
+    ``batched_from_scalar``.
+    """
+    value: Callable           # -> [S]
+    value_and_grad: Callable  # -> ([S], [S, D])
+    hessian: Callable         # -> [S, D, D]
+
+
+def batched_from_scalar(objective: Callable) -> BatchedObjective:
+    """Lift a per-source scalar objective to the batched API via vmap."""
+    return BatchedObjective(
+        value=jax.vmap(objective),
+        value_and_grad=jax.vmap(jax.value_and_grad(objective)),
+        hessian=jax.vmap(jax.hessian(objective)))
 
 
 def tr_subproblem(grad: jnp.ndarray, hess: jnp.ndarray, radius: jnp.ndarray,
@@ -91,14 +114,16 @@ def fit_batch(objective, theta0: jnp.ndarray, *obj_args,
               init_radius: float = 1.0) -> NewtonResult:
     """Maximize ``objective(theta, *args_s)`` for a batch of sources.
 
-    objective: callable (theta[D], *per-source args) -> scalar ELBO.
+    objective: a ``BatchedObjective`` (backend-dispatched batch evaluation,
+        see ``core/batched_elbo.py``), or a legacy per-source callable
+        ``(theta[D], *per-source args) -> scalar ELBO`` lifted via vmap.
     theta0: [S, D]; every entry of obj_args has leading dim S.
-    active: [S] bool; False entries are scheduler padding, never optimized.
+    active: [S] bool; False entries are scheduler padding, never optimized
+        (and never reported as converged).
     """
-    val_grad_hess = jax.vmap(
-        lambda t, *a: (jax.value_and_grad(objective)(t, *a),
-                       jax.hessian(objective)(t, *a)))
-    value_only = jax.vmap(objective)
+    bobj = (objective if isinstance(objective, BatchedObjective)
+            else batched_from_scalar(objective))
+    value_only = bobj.value
 
     s = theta0.shape[0]
 
@@ -107,6 +132,7 @@ def fit_batch(objective, theta0: jnp.ndarray, *obj_args,
         value: jnp.ndarray
         radius: jnp.ndarray
         done: jnp.ndarray
+        conv: jnp.ndarray
         iters: jnp.ndarray
         gnorm: jnp.ndarray
         k: jnp.ndarray
@@ -114,10 +140,11 @@ def fit_batch(objective, theta0: jnp.ndarray, *obj_args,
     if active is None:
         active = jnp.ones((s,), bool)
 
-    (v0, _), _ = val_grad_hess(theta0, *obj_args)
+    v0 = value_only(theta0, *obj_args)
     state = _State(theta=theta0, value=v0,
                    radius=jnp.full((s,), init_radius),
                    done=~active,
+                   conv=jnp.zeros((s,), bool),
                    iters=jnp.zeros((s,), jnp.int32),
                    gnorm=jnp.full((s,), jnp.inf),
                    k=jnp.asarray(0, jnp.int32))
@@ -126,9 +153,11 @@ def fit_batch(objective, theta0: jnp.ndarray, *obj_args,
         return (st.k < max_iters) & jnp.any(~st.done)
 
     def body(st: _State):
-        (val, grad), hess = val_grad_hess(st.theta, *obj_args)
+        val, grad = bobj.value_and_grad(st.theta, *obj_args)
+        hess = bobj.hessian(st.theta, *obj_args)
         gnorm = jnp.max(jnp.abs(grad), axis=-1)
         newly_done = gnorm < gtol
+        conv = st.conv | (newly_done & active)
         done = st.done | newly_done
 
         # maximize ELBO == minimize −ELBO
@@ -151,13 +180,13 @@ def fit_batch(objective, theta0: jnp.ndarray, *obj_args,
 
         theta = jnp.where(accept[:, None], cand, st.theta)
         value = jnp.where(accept, new_val, val)
-        # A source whose trust region collapsed is done (stalled).
+        # A source whose trust region collapsed is done (stalled, but NOT
+        # converged — only active sources that hit gtol count as converged).
         done = done | (radius <= 1e-5)
         iters = st.iters + (~st.done).astype(jnp.int32)
         return _State(theta=theta, value=value, radius=radius, done=done,
-                      iters=iters, gnorm=gnorm, k=st.k + 1)
+                      conv=conv, iters=iters, gnorm=gnorm, k=st.k + 1)
 
     st = jax.lax.while_loop(cond, body, state)
     return NewtonResult(theta=st.theta, value=st.value, iters=st.iters,
-                        converged=st.done & (st.gnorm < jnp.inf),
-                        grad_norm=st.gnorm)
+                        converged=st.conv, grad_norm=st.gnorm)

@@ -5,8 +5,10 @@ import functools
 
 import jax
 
-from repro.kernels.poisson_elbo.poisson_elbo import poisson_elbo_pallas
-from repro.kernels.poisson_elbo.ref import poisson_elbo_ref
+from repro.kernels.poisson_elbo.poisson_elbo import (
+    poisson_elbo_grad_pallas, poisson_elbo_pallas)
+from repro.kernels.poisson_elbo.ref import (
+    poisson_elbo_grad_ref, poisson_elbo_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))
@@ -18,3 +20,21 @@ def poisson_elbo(x, bg, e1, var, impl: str = "pallas_interpret"):
         flat, bg.reshape(flat.shape), e1.reshape(flat.shape),
         var.reshape(flat.shape), interpret=(impl == "pallas_interpret"))
     return out.reshape(x.shape[:-2])
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def poisson_elbo_grad(x, bg, e1, var, impl: str = "pallas_interpret"):
+    """Fused value + per-pixel gradient residuals.
+
+    Returns (value [...], d_e1 [..., P, P], d_var [..., P, P]); leading
+    batch dims are flattened into the kernel grid exactly like
+    ``poisson_elbo``.
+    """
+    if impl == "ref":
+        return poisson_elbo_grad_ref(x, bg, e1, var)
+    flat = x.reshape((-1,) + x.shape[-2:])
+    val, de1, dvar = poisson_elbo_grad_pallas(
+        flat, bg.reshape(flat.shape), e1.reshape(flat.shape),
+        var.reshape(flat.shape), interpret=(impl == "pallas_interpret"))
+    return (val.reshape(x.shape[:-2]), de1.reshape(x.shape),
+            dvar.reshape(x.shape))

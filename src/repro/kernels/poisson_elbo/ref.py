@@ -23,3 +23,21 @@ def poisson_elbo_ref(x, bg, e1, var):
     logf = jnp.log(f) - var / (2.0 * f * f)
     term = x * (logf - jnp.log(jnp.maximum(x, 1.0))) - (f - x)
     return jnp.sum(term, axis=(-2, -1))
+
+
+def poisson_elbo_grad_ref(x, bg, e1, var):
+    """Oracle for the gradient-residual kernel: analytic ∂/∂e1 and ∂/∂var.
+
+    Returns (value [...], d_e1 [..., P, P], d_var [..., P, P]) where the
+    residuals are the derivatives of the patch sum with respect to each
+    pixel's e1 / var (zero where the EPS clamp is active).
+    """
+    raw = bg + e1
+    f = jnp.maximum(raw, EPS)
+    f2 = f * f
+    logf = jnp.log(f) - var / (2.0 * f2)
+    term = x * (logf - jnp.log(jnp.maximum(x, 1.0))) - (f - x)
+    d_f = x * (1.0 / f + var / (f2 * f)) - 1.0
+    d_e1 = jnp.where(raw > EPS, d_f, 0.0)
+    d_var = -x / (2.0 * f2)
+    return jnp.sum(term, axis=(-2, -1)), d_e1, d_var

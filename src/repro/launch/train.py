@@ -133,7 +133,7 @@ def make_ddp_compressed_step(cfg: ModelConfig, mesh, axis: str = "data",
     """Classic DDP with the int8 ring all-reduce of parallel/collectives:
     params replicated, per-shard grads, compressed cross-shard reduce.
     Demonstrates (and tests) the wire-compression path end-to-end."""
-    from jax import shard_map
+    from repro.parallel.sharding import shard_map
 
     def local_grads(params, batch):
         return jax.value_and_grad(

@@ -369,7 +369,7 @@ def moe_layer(p, x, cfg, mesh=None, batch_axes=("pod", "data"),
                               p["w_up"], p["w_down"], cfg, capacity(n))
         return out.reshape(b, s, d), aux
 
-    from jax import shard_map
+    from repro.parallel.sharding import shard_map
     from jax.sharding import PartitionSpec as P
     axes = tuple(a for a in batch_axes if a in mesh.shape)
     n_batch = 1

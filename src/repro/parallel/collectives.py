@@ -16,6 +16,16 @@ import jax
 import jax.numpy as jnp
 
 
+def _axis_size(axis_name: str) -> int:
+    """Static mesh-axis size; ``jax.lax.axis_size`` only exists on newer
+    releases, and ``psum`` of a Python scalar is the classic static
+    equivalent."""
+    try:
+        return jax.lax.axis_size(axis_name)
+    except AttributeError:   # pragma: no cover - depends on jax version
+        return jax.lax.psum(1, axis_name)
+
+
 def _quantize_int8(x):
     scale = jnp.max(jnp.abs(x)) / 127.0
     scale = jnp.maximum(scale, 1e-20)
@@ -30,7 +40,7 @@ def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     followed by a ring all-gather of the reduced shards.  x's leading dim
     must be divisible by the axis size.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % n

@@ -23,6 +23,21 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                                  # newer jax exports it at top level
+    from jax import shard_map as _shard_map
+except ImportError:                   # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *args, **kwargs):
+    """Version-portable ``shard_map``: older releases live under
+    ``jax.experimental`` and spell the ``check_vma`` kwarg ``check_rep``."""
+    import inspect
+    if "check_vma" in kwargs and (
+            "check_vma" not in inspect.signature(_shard_map).parameters):
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(f, *args, **kwargs)
+
 # name → spec for the *unstacked* parameter (layer-stack dim prepended
 # automatically when the leaf has one more dim than the rule).
 _RULES: list[tuple[str, tuple]] = [

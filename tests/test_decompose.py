@@ -1,6 +1,9 @@
 """Decomposition & scheduling tests (core/decompose.py, runtime/scheduler)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - tiny deterministic fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import decompose
 from repro.runtime.scheduler import DynamicScheduler

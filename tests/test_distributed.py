@@ -11,7 +11,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.parallel.sharding import shard_map
 from repro.launch.mesh import make_test_mesh
 """
 
@@ -82,12 +82,15 @@ t2, s2 = infer.run_inference(sky.images, sky.metas, est, priors, patch=24, batch
 d = float(jnp.max(jnp.abs(t1 - t2)))
 print("THETA_DIFF", d, s1.converged, s2.converged)
 assert s2.converged == s2.total_sources
-# per-shard while_loops stop at different (all-converged) points; compare
-# at catalog precision rather than raw-theta exactness
-assert d < 0.15, d
+# per-shard while_loops stop at different (all-converged) points and
+# weakly-identified raw coordinates (e.g. the galaxy shape of a
+# near-certain star) drift freely between trajectories; compare at
+# catalog precision rather than raw-theta exactness
 c1 = infer.infer_catalog(t1); c2 = infer.infer_catalog(t2)
 pd = float(jnp.max(jnp.abs(c1.pos - c2.pos)))
 assert pd < 0.05, pd
+fd = float(jnp.max(jnp.abs(c1.ref_flux - c2.ref_flux) / c1.ref_flux))
+assert fd < 1e-3, fd
 """)
     assert "THETA_DIFF" in out
 

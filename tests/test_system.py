@@ -4,7 +4,10 @@ analysis-layer invariants used by the dry-run."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - tiny deterministic fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import heuristic, infer, synthetic
 from repro.core.priors import Priors, default_priors, fit_priors
