@@ -10,7 +10,9 @@ import numpy as np
 
 from benchmarks.common import emit
 from benchmarks.scaling_sim import (clustered_positions, simulate,
-                                    synth_sky_costs)
+                                    simulate_adaptive, synth_sky_costs,
+                                    synth_sky_workload)
+from repro.core.decompose import CostModel
 
 SOURCES_PER_NODE = 1024
 
@@ -19,7 +21,8 @@ def main():
     rng = np.random.default_rng(0)
     for nodes in (16, 32, 64, 128, 256):
         n = SOURCES_PER_NODE * nodes
-        pos = clustered_positions(rng, n, extent=4096.0 * np.sqrt(nodes))
+        extent = 4096.0 * np.sqrt(nodes)
+        pos = clustered_positions(rng, n, extent=extent)
         costs = synth_sky_costs(rng, n)
         r = simulate(pos, costs, nodes)
         emit(f"fig4.nodes{nodes}", r.total_time * 1e6,
@@ -28,6 +31,18 @@ def main():
              f"sched={r.sched_time:.2f}s;"
              f"imb_frac={r.imbalance_time / r.total_time:.2%};"
              f"sps={r.sources_per_sec:.1f}")
+        # static vs adaptive on a feature-driven workload: both plan from
+        # the default cost model's knowledge; only adaptive learns
+        feats, lcosts = synth_sky_workload(rng, n, positions=pos,
+                                           extent=extent)
+        st = simulate(pos, lcosts, nodes,
+                      plan_costs=CostModel().predict(feats))
+        ad = simulate_adaptive(pos, feats, lcosts, nodes)
+        emit(f"fig4.nodes{nodes}.adaptive", ad.total_time * 1e6,
+             f"static_imb={st.imbalance_time / st.total_time:.2%};"
+             f"adaptive_imb={ad.imbalance_time / ad.total_time:.2%};"
+             f"static_sps={st.sources_per_sec:.1f};"
+             f"adaptive_sps={ad.sources_per_sec:.1f}")
 
 
 if __name__ == "__main__":

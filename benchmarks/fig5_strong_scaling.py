@@ -6,7 +6,9 @@ import numpy as np
 
 from benchmarks.common import emit
 from benchmarks.scaling_sim import (clustered_positions, simulate,
-                                    synth_sky_costs)
+                                    simulate_adaptive, synth_sky_costs,
+                                    synth_sky_workload)
+from repro.core.decompose import CostModel
 
 TOTAL_SOURCES = 332_631     # paper §VI-C
 
@@ -15,6 +17,8 @@ def main():
     rng = np.random.default_rng(1)
     pos = clustered_positions(rng, TOTAL_SOURCES, extent=65536.0)
     costs = synth_sky_costs(rng, TOTAL_SOURCES)
+    feats, lcosts = synth_sky_workload(rng, TOTAL_SOURCES, positions=pos,
+                                       extent=65536.0)
     base = None
     for nodes in (16, 32, 64, 128, 256):
         r = simulate(pos, costs, nodes)
@@ -25,6 +29,14 @@ def main():
              f"opt={r.optimize_time:.1f}s;imb={r.imbalance_time:.1f}s;"
              f"fetch={r.fetch_time:.1f}s;sched={r.sched_time:.2f}s;"
              f"parallel_eff={eff:.2%};sps={r.sources_per_sec:.1f}")
+        st = simulate(pos, lcosts, nodes,
+                      plan_costs=CostModel().predict(feats))
+        ad = simulate_adaptive(pos, feats, lcosts, nodes)
+        emit(f"fig5.nodes{nodes}.adaptive", ad.total_time * 1e6,
+             f"static_imb={st.imbalance_time / st.total_time:.2%};"
+             f"adaptive_imb={ad.imbalance_time / ad.total_time:.2%};"
+             f"static_sps={st.sources_per_sec:.1f};"
+             f"adaptive_sps={ad.sources_per_sec:.1f}")
 
 
 if __name__ == "__main__":

@@ -12,13 +12,14 @@ import traceback
 def main() -> None:
     from benchmarks import (fig3_batch_scaling, fig4_weak_scaling,
                             fig5_strong_scaling, fig6_sources_per_sec,
-                            table1_accuracy)
+                            scheduler_adaptive, table1_accuracy)
     suites = [
         ("table1", table1_accuracy.main),
         ("fig3", fig3_batch_scaling.main),
         ("fig4", fig4_weak_scaling.main),
         ("fig5", fig5_strong_scaling.main),
         ("fig6", fig6_sources_per_sec.main),
+        ("scheduler", scheduler_adaptive.main_csv),
     ]
     for name, fn in suites:
         try:

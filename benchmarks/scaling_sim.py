@@ -14,6 +14,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core import decompose
+from repro.runtime.scheduler import DynamicScheduler
 
 # measured on this host (benchmarks/fig3): per-Newton-iteration cost of a
 # single source at patch 24 × 5 bands, seconds.  The simulation scales
@@ -33,12 +34,39 @@ class SimResult:
     fetch_time: float
     sched_time: float
     sources_per_sec: float
+    imbalance_history: np.ndarray | None = None   # per-round (max-mean)/mean
 
 
 def synth_sky_costs(rng, n):
     """Iteration counts with the paper's heavy tail (1 s – 2 min range)."""
     base = rng.lognormal(mean=2.2, sigma=0.6, size=n)     # ~9 iters median
     return np.clip(base, 3, 120)
+
+
+def synth_sky_workload(rng, n, positions=None, extent=None,
+                       blend_corner_frac=0.15):
+    """Catalog features + iteration costs that actually *follow* them.
+
+    Costs are linear in the (brightness, galaxy, neighbor) features with a
+    heavy multiplicative tail, so a refit cost model can learn them —
+    unlike ``synth_sky_costs`` which draws costs independent of any
+    feature.  If ``positions`` is given, sources inside the corner region
+    (the paper's bright-blended-cluster pathology) get boosted neighbor
+    counts and flux, concentrating expensive sources spatially.
+    Returns (feats [n, 4], iter_costs [n]).
+    """
+    log_flux = rng.normal(3.0, 1.0, n)
+    prob_gal = rng.uniform(0, 1, n)
+    n_neighbors = rng.poisson(0.5, n).astype(float)
+    if positions is not None and extent is not None:
+        corner = ((positions[:, 0] < extent * blend_corner_frac)
+                  & (positions[:, 1] < extent * blend_corner_frac))
+        log_flux = np.where(corner, log_flux + 2.0, log_flux)
+        n_neighbors = np.where(corner, n_neighbors + 4.0, n_neighbors)
+    feats = decompose.CostModel.features(log_flux, prob_gal, n_neighbors)
+    true_coef = np.array([2.0, 3.5, 4.0, 6.0])
+    costs = (feats @ true_coef) * rng.lognormal(0.0, 0.15, n)
+    return feats, np.clip(costs, 3, 240)
 
 
 def clustered_positions(rng, n, extent):
@@ -51,48 +79,124 @@ def clustered_positions(rng, n, extent):
     return np.clip(np.concatenate([cluster, rest]), 0, extent)
 
 
+def _round_node_time(b, costs_sec, node_speed, positions, tile,
+                     seen_tiles, fetch_time):
+    """Wall time per node for one round [nodes] + fetch accounting."""
+    nodes = b.shape[0]
+    round_time = np.zeros(nodes)
+    for sh in range(nodes):
+        idx = b[sh][b[sh] >= 0]
+        if idx.size == 0:
+            continue
+        # masked while_loop: a batch costs its slowest member × a
+        # utilization factor for the mixed batch
+        round_time[sh] = (costs_sec[idx].max()
+                          + 0.1 * costs_sec[idx].mean() * len(idx))
+        round_time[sh] /= node_speed[sh]
+        for s in idx:
+            t = (int(positions[s, 0] // tile),
+                 int(positions[s, 1] // tile))
+            if t not in seen_tiles[sh]:
+                seen_tiles[sh].add(t)
+                fetch_time[sh] += IMAGE_FETCH_SEC * 5  # 5 bands
+    return round_time
+
+
+def _finish(nodes, n, node_time, per_round_max, fetch_time, num_rounds,
+            imb_hist):
+    opt = node_time.mean()
+    imb = per_round_max - opt
+    fetch = fetch_time.mean()
+    sched = SCHED_PER_ROUND * num_rounds
+    total = per_round_max + fetch + sched
+    return SimResult(
+        nodes=nodes, sources=n, total_time=total, optimize_time=opt,
+        imbalance_time=imb, fetch_time=fetch, sched_time=sched,
+        sources_per_sec=n / total,
+        imbalance_history=np.asarray(imb_hist))
+
+
 def simulate(positions, iter_costs, nodes, batch=64, strategy="source",
-             tile=256.0):
-    """Simulate one inference job; returns the paper-style breakdown."""
+             tile=256.0, node_speed=None, plan_costs=None):
+    """Simulate one statically-planned inference job (paper breakdown).
+
+    The plan is built once and never revised.  By default it is planned
+    from the *true* costs (an oracle — the most favorable static case);
+    pass ``plan_costs`` (e.g. default cost-model predictions) to plan
+    from what a real static run actually knows while still *executing*
+    the true costs.
+    """
     n = positions.shape[0]
     extent = float(positions.max() + 1)
     costs_sec = iter_costs * SEC_PER_ITER
+    node_speed = (np.ones(nodes) if node_speed is None
+                  else np.asarray(node_speed, float))
+    planning = costs_sec if plan_costs is None else plan_costs
     if strategy == "source":
-        plan = decompose.make_plan(positions, costs_sec, nodes, batch,
+        plan = decompose.make_plan(positions, planning, nodes, batch,
                                    extent=extent)
     else:
-        plan = decompose.make_region_plan(positions, costs_sec, nodes,
+        plan = decompose.make_region_plan(positions, planning, nodes,
                                           batch, extent=extent)
 
     node_time = np.zeros(nodes)
     fetch_time = np.zeros(nodes)
     seen_tiles = [set() for _ in range(nodes)]
     per_round_max = 0.0
+    imb_hist = []
     for b in plan.batches:
-        round_time = np.zeros(nodes)
-        for sh in range(nodes):
-            idx = b[sh][b[sh] >= 0]
-            if idx.size == 0:
-                continue
-            # masked while_loop: a batch costs its slowest member × a
-            # utilization factor for the mixed batch
-            round_time[sh] = (costs_sec[idx].max()
-                              + 0.1 * costs_sec[idx].mean() * len(idx))
-            for s in idx:
-                t = (int(positions[s, 0] // tile),
-                     int(positions[s, 1] // tile))
-                if t not in seen_tiles[sh]:
-                    seen_tiles[sh].add(t)
-                    fetch_time[sh] += IMAGE_FETCH_SEC * 5  # 5 bands
+        round_time = _round_node_time(b, costs_sec, node_speed, positions,
+                                      tile, seen_tiles, fetch_time)
         node_time += round_time
         per_round_max += round_time.max()
+        mean = max(round_time.mean(), 1e-12)
+        imb_hist.append((round_time.max() - mean) / mean)
 
-    opt = node_time.mean()
-    imb = per_round_max - opt
-    fetch = fetch_time.mean()
-    sched = SCHED_PER_ROUND * len(plan.batches)
-    total = per_round_max + fetch + sched
-    return SimResult(
-        nodes=nodes, sources=n, total_time=total, optimize_time=opt,
-        imbalance_time=imb, fetch_time=fetch, sched_time=sched,
-        sources_per_sec=n / total)
+    return _finish(nodes, n, node_time, per_round_max, fetch_time,
+                   len(plan.batches), imb_hist)
+
+
+def simulate_adaptive(positions, feats, iter_costs, nodes, batch=64,
+                      tile=256.0, node_speed=None):
+    """Simulate the closed adaptive loop (runtime/scheduler.py) at scale.
+
+    Starts from the *default* cost model (no oracle costs), plans one
+    round at a time, "measures" the true per-source wall time, feeds it
+    back through ``DynamicScheduler.record`` (refit + straggler
+    discounting) and re-packs the remainder — the same loop
+    ``run_inference(adaptive=True)`` runs with real Newton measurements.
+    """
+    n = positions.shape[0]
+    costs_sec = iter_costs * SEC_PER_ITER
+    node_speed = (np.ones(nodes) if node_speed is None
+                  else np.asarray(node_speed, float))
+    sched = DynamicScheduler(num_shards=nodes, batch=batch)
+
+    node_time = np.zeros(nodes)
+    fetch_time = np.zeros(nodes)
+    seen_tiles = [set() for _ in range(nodes)]
+    per_round_max = 0.0
+    imb_hist = []
+    remaining = np.arange(n)
+    extent = float(positions.max() + 1)
+    r = 0
+    while remaining.size:
+        plan = sched.plan_round(positions[remaining], feats[remaining],
+                                extent=extent)
+        b = decompose.globalize(plan.batches[0], remaining)
+        round_time = _round_node_time(b, costs_sec, node_speed, positions,
+                                      tile, seen_tiles, fetch_time)
+        node_time += round_time
+        per_round_max += round_time.max()
+        mean = max(round_time.mean(), 1e-12)
+        imb_hist.append((round_time.max() - mean) / mean)
+
+        tgt, shard_of, _ = decompose.round_tasks(b)
+        # measured per-task wall seconds, inflated by the shard's slowness
+        measured = costs_sec[tgt] / node_speed[shard_of]
+        sched.record(r, feats[tgt], measured, shard_of, plan=plan)
+        remaining = np.setdiff1d(remaining, tgt, assume_unique=True)
+        r += 1
+
+    return _finish(nodes, n, node_time, per_round_max, fetch_time, r,
+                   imb_hist)

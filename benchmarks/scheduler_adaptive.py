@@ -1,0 +1,202 @@
+"""Static vs adaptive scheduling on a synthetic skewed workload (§III-C/G).
+
+The workload is the paper's pathological case: bright blended galaxies
+clustered in one corner of the field, so true per-source cost is heavily
+skewed in a way the *default* cost model mispredicts.  Optionally one
+shard is a straggler (relative speed < 1).
+
+Both schedulers see identical information at the start — catalog features
+and the default cost model, exactly what ``run_inference`` has:
+
+  * **static**: one ``decompose.make_plan`` up front, executed to the end
+    (the pre-adaptive ``run_inference`` behavior);
+  * **adaptive**: the ``DynamicScheduler`` loop — plan the next round,
+    measure true per-task cost, ``record`` it (cost-model refit +
+    straggler discounting), re-pack the remainder.
+
+Shard wall time per round is Σ task cost ÷ shard speed (the same sum
+semantics ``DynamicScheduler.record`` uses for measured shard times).
+Emits a JSON comparison: per-round measured/predicted imbalance history,
+total time, and sources/sec for both paths.
+
+    PYTHONPATH=src python benchmarks/scheduler_adaptive.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core import decompose
+from repro.runtime.scheduler import DynamicScheduler
+
+
+def make_skewed_workload(seed=0, n=2048, extent=4096.0, corner_frac=0.3,
+                         corner_area=0.15):
+    """Positions + features + true costs with a bright blended corner.
+
+    ``corner_frac`` of the sources sit in the ``corner_area``-sided corner
+    square, are ~e²× brighter and heavily blended; true cost is linear in
+    the features (so it is *learnable*) with a multiplicative noise tail.
+    Returns (positions [n,2], feats [n,4], true_costs [n]).
+    """
+    rng = np.random.default_rng(seed)
+    n_corner = int(n * corner_frac)
+    corner = rng.uniform(0, extent * corner_area, (n_corner, 2))
+    rest = rng.uniform(0, extent, (n - n_corner, 2))
+    pos = np.concatenate([corner, rest])
+    in_corner = np.arange(n) < n_corner
+
+    log_flux = rng.normal(3.0, 0.8, n) + np.where(in_corner, 2.0, 0.0)
+    prob_gal = np.where(in_corner, rng.uniform(0.6, 1.0, n),
+                        rng.uniform(0.0, 1.0, n))
+    n_neighbors = (rng.poisson(0.4, n)
+                   + np.where(in_corner, rng.poisson(4.0, n), 0)).astype(
+                       float)
+    feats = decompose.CostModel.features(log_flux, prob_gal, n_neighbors)
+    true_coef = np.array([2.0, 3.0, 5.0, 7.0])
+    costs = (feats @ true_coef) * rng.lognormal(0.0, 0.1, n)
+    return pos, feats, np.maximum(costs, 1.0)
+
+
+def _measure_round(b, true_costs, node_speed):
+    """(shard_times [shards], scheduled idx, per-task measured, shard_of)."""
+    tgt, shard_of, _ = decompose.round_tasks(b)
+    measured = true_costs[tgt] / node_speed[shard_of]
+    shard_times = np.bincount(shard_of, weights=measured,
+                              minlength=b.shape[0])
+    return shard_times, tgt, measured, shard_of
+
+
+def _imb(t):
+    mean = max(t.mean(), 1e-12)
+    return float((t.max() - mean) / mean)
+
+
+def _summarize(name, imb_hist, pred_hist, round_max, n):
+    total = float(sum(round_max))
+    return {
+        "strategy": name,
+        "rounds": len(imb_hist),
+        "imbalance_history": [round(v, 4) for v in imb_hist],
+        "predicted_imbalance_history": [round(v, 4) for v in pred_hist],
+        "final_round_imbalance": imb_hist[-1] if imb_hist else 0.0,
+        "mean_imbalance": float(np.mean(imb_hist)) if imb_hist else 0.0,
+        "total_time": total,
+        "sources_per_sec": n / total if total else 0.0,
+    }
+
+
+def run_static(pos, feats, true_costs, shards, batch, node_speed,
+               extent):
+    """One up-front plan from the default cost model, speed-unaware."""
+    cm = decompose.CostModel()
+    plan = decompose.make_plan(pos, cm.predict(feats), shards, batch,
+                               extent=extent)
+    imb_hist, pred_hist, round_max = [], [], []
+    for r, b in enumerate(plan.batches):
+        shard_times, *_ = _measure_round(b, true_costs, node_speed)
+        imb_hist.append(_imb(shard_times))
+        pred_hist.append(plan.round_imbalance(r))
+        round_max.append(shard_times.max())
+    return _summarize("static", imb_hist, pred_hist, round_max,
+                      pos.shape[0])
+
+
+def run_adaptive(pos, feats, true_costs, shards, batch, node_speed,
+                 extent):
+    """The closed loop: plan next round → measure → record → re-pack."""
+    sched = DynamicScheduler(num_shards=shards, batch=batch)
+    imb_hist, pred_hist, round_max = [], [], []
+    remaining = np.arange(pos.shape[0])
+    r = 0
+    while remaining.size:
+        plan = sched.plan_round(pos[remaining], feats[remaining],
+                                extent=extent)
+        b = decompose.globalize(plan.batches[0], remaining)
+        shard_times, tgt, measured, shard_of = _measure_round(
+            b, true_costs, node_speed)
+        sched.record(r, feats[tgt], measured, shard_of, plan=plan)
+        imb_hist.append(_imb(shard_times))
+        pred_hist.append(plan.round_imbalance(0))
+        round_max.append(shard_times.max())
+        remaining = np.setdiff1d(remaining, tgt, assume_unique=True)
+        r += 1
+    out = _summarize("adaptive", imb_hist, pred_hist, round_max,
+                     pos.shape[0])
+    out["final_shard_speed"] = [round(v, 3) for v in sched.shard_speed]
+    out["cost_model_coef"] = [round(v, 3)
+                              for v in sched.cost_model.coef]
+    return out
+
+
+def compare(seed=0, n=2048, shards=8, batch=16, extent=4096.0,
+            straggler_speed=0.6):
+    pos, feats, true_costs = make_skewed_workload(seed=seed, n=n,
+                                                  extent=extent)
+    node_speed = np.ones(shards)
+    if straggler_speed is not None:
+        node_speed[-1] = straggler_speed
+    args = (pos, feats, true_costs, shards, batch, node_speed, extent)
+    st, ad = run_static(*args), run_adaptive(*args)
+    return {
+        "config": {"seed": seed, "sources": n, "shards": shards,
+                   "batch": batch, "straggler_speed": straggler_speed},
+        "static": st,
+        "adaptive": ad,
+        "improvement": {
+            "final_round_imbalance": (st["final_round_imbalance"]
+                                      - ad["final_round_imbalance"]),
+            "mean_imbalance": st["mean_imbalance"] - ad["mean_imbalance"],
+            "speedup": st["total_time"] / max(ad["total_time"], 1e-12),
+        },
+    }
+
+
+def main_csv():
+    """Suite-runner entry (benchmarks/run.py): one CSV row, no argparse
+    (run.py's argv must not leak into this benchmark's parser)."""
+    out = compare()
+    st, ad = out["static"], out["adaptive"]
+    print(f"scheduler.adaptive,{ad['total_time'] * 1e6:.1f},"
+          f"static_imb={st['mean_imbalance']:.3f};"
+          f"adaptive_imb={ad['mean_imbalance']:.3f};"
+          f"static_sps={st['sources_per_sec']:.2f};"
+          f"adaptive_sps={ad['sources_per_sec']:.2f};"
+          f"speedup={out['improvement']['speedup']:.2f}x")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sources", type=int, default=2048)
+    ap.add_argument("--shards", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--straggler-speed", type=float, default=0.6)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + assert the adaptive loop wins "
+                         "(CI guard that the scheduler path stays live)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        out = compare(seed=args.seed, n=512, shards=4, batch=16)
+    else:
+        out = compare(seed=args.seed, n=args.sources, shards=args.shards,
+                      batch=args.batch,
+                      straggler_speed=args.straggler_speed)
+    print(json.dumps(out, indent=1))
+
+    if args.smoke:
+        imp = out["improvement"]
+        assert imp["final_round_imbalance"] > 0.0, \
+            "adaptive final-round imbalance should beat static"
+        assert imp["mean_imbalance"] > 0.0, \
+            "adaptive mean imbalance should beat static"
+        assert imp["speedup"] > 1.0, \
+            "adaptive total time should beat static"
+        print("smoke OK: adaptive beats static on imbalance and time")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,6 @@ import numpy as np
 from repro.core import decompose, elbo, heuristic, infer, synthetic
 from repro.core.priors import default_priors, fit_priors
 from repro.data.images import ImageStore
-from repro.runtime.scheduler import DynamicScheduler
 
 
 def main():
@@ -38,6 +37,10 @@ def main():
     ap.add_argument("--backend", default=None,
                     help="ELBO backend: jax | pallas | pallas_interpret | "
                          "ref (default: REPRO_ELBO_BACKEND env or jax)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="close the Dtree loop: replan each round from "
+                         "measured Newton iteration counts "
+                         "(docs/scheduling.md)")
     ap.add_argument("--out", default="/tmp/celeste_catalog.json")
     args = ap.parse_args()
 
@@ -61,11 +64,17 @@ def main():
 
     thetas, stats = infer.run_inference(
         sky.images, sky.metas, photo, priors, patch=24, batch=args.batch,
-        passes=args.passes, backend=args.backend)
-    print(f"[{time.time()-t0:6.1f}s] optimization: {stats.rounds} rounds, "
+        passes=args.passes, backend=args.backend, adaptive=args.adaptive)
+    sched_mode = "adaptive" if stats.adaptive else "static"
+    print(f"[{time.time()-t0:6.1f}s] optimization ({sched_mode}): "
+          f"{stats.rounds} rounds, "
           f"{stats.converged}/{stats.total_sources} converged, "
           f"mean iters {stats.iters.mean():.1f}, "
           f"predicted imbalance {stats.predicted_imbalance:.1%}")
+    if len(stats.history):
+        mi = stats.measured_imbalance
+        print(f"         measured imbalance: first round {mi[0]:.1%}, "
+              f"last round {mi[-1]:.1%}, mean {mi.mean():.1%}")
 
     cat = infer.infer_catalog(thetas)
     sds = jax.vmap(elbo.posterior_sd)(thetas)

@@ -136,47 +136,249 @@ class Plan:
     ``batches[r]`` is an int array [num_shards, batch] of source indices
     (−1 = padding, masked out downstream).  Every shard sees the same batch
     size (SPMD requirement).
+
+    ``round_shard_time[r, sh]`` is the predicted *time* (cost ÷ shard
+    speed) shard ``sh`` spends on round ``r`` — the per-round prediction
+    the adaptive loop compares against measurements.
+    ``predicted_max_cost`` / ``predicted_imbalance`` are in the same time
+    units (identical to raw cost under uniform speeds).
     """
 
     batches: list[np.ndarray]
     predicted_max_cost: float
     predicted_imbalance: float
+    round_shard_time: np.ndarray = field(
+        default_factory=lambda: np.zeros((0, 0)))
+
+    def round_imbalance(self, r: int) -> float:
+        """Predicted (max − mean)/mean time of round ``r``."""
+        t = self.round_shard_time[r]
+        mean = t.mean()
+        return float((t.max(initial=0.0) - mean) / max(mean, 1e-9))
 
 
-def make_plan(positions: np.ndarray, costs: np.ndarray, num_shards: int,
-              batch: int, extent: float | None = None,
-              chunk: int = 4) -> Plan:
-    """Morton-sort, chunk, LPT-pack into shards, slice into rounds."""
-    s = positions.shape[0]
-    extent = float(extent if extent is not None else positions.max() + 1)
-    order = morton_order(positions, extent)
+def globalize(batch: np.ndarray, remaining: np.ndarray) -> np.ndarray:
+    """Map a batch planned over ``positions[remaining]`` back to global
+    source indices, preserving −1 padding.  Adaptive callers plan each
+    round over the remaining subset, so every executed batch goes through
+    this remap."""
+    return np.where(batch >= 0, remaining[np.maximum(batch, 0)], -1)
 
-    # Morton-contiguous chunks preserve locality; LPT over chunk costs
-    # balances load.  Large chunks = more locality, less balance.
-    chunks = [order[i:i + chunk] for i in range(0, s, chunk)]
-    chunk_cost = np.array([costs[c].sum() for c in chunks])
-    shard_lists: list[list[int]] = [[] for _ in range(num_shards)]
-    shard_cost = np.zeros(num_shards)
-    for ci in np.argsort(-chunk_cost, kind="stable"):
-        tgt = int(np.argmin(shard_cost))
-        shard_lists[tgt].extend(chunks[ci].tolist())
-        shard_cost[tgt] += chunk_cost[ci]
 
+def round_tasks(batch: np.ndarray):
+    """Unpack one [num_shards, batch] round into its scheduled tasks.
+
+    Returns ``(tasks, shard_of, sel)``: the non-padding source indices,
+    the shard each runs on, and the flat boolean mask selecting them —
+    the bookkeeping every adaptive caller needs to turn per-slot results
+    into per-task measurements for ``DynamicScheduler.record``."""
+    flat = batch.reshape(-1)
+    sel = flat >= 0
+    shard_of = np.repeat(np.arange(batch.shape[0]), batch.shape[1])[sel]
+    return flat[sel], shard_of, sel
+
+
+def _empty_plan(num_shards: int) -> Plan:
+    return Plan(batches=[], predicted_max_cost=0.0, predicted_imbalance=0.0,
+                round_shard_time=np.zeros((0, num_shards)))
+
+
+def _check_plan_args(num_shards: int, batch: int,
+                     shard_speed: np.ndarray | None) -> np.ndarray:
+    """Validate shared planner arguments; returns the speed vector."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if shard_speed is None:
+        return np.ones(num_shards)
+    speed = np.asarray(shard_speed, dtype=float)
+    if speed.shape != (num_shards,):
+        raise ValueError(f"shard_speed must have shape ({num_shards},), "
+                         f"got {speed.shape}")
+    if np.any(speed <= 0.0):
+        raise ValueError("shard_speed entries must be positive")
+    return speed
+
+
+def _slice_rounds(shard_lists: list[list[int]], costs: np.ndarray,
+                  speed: np.ndarray, num_shards: int,
+                  batch: int) -> tuple[list[np.ndarray], np.ndarray]:
+    """Slice per-shard task lists into SPMD rounds + per-round times."""
     rounds = int(np.ceil(max(len(l) for l in shard_lists) / batch))
     batches = []
+    round_time = np.zeros((rounds, num_shards))
     for r in range(rounds):
         b = np.full((num_shards, batch), -1, np.int64)
         for sh, lst in enumerate(shard_lists):
             seg = lst[r * batch:(r + 1) * batch]
             b[sh, :len(seg)] = seg
+            round_time[r, sh] = costs[seg].sum() / speed[sh]
         batches.append(b)
+    return batches, round_time
 
-    mean = shard_cost.mean() if num_shards else 0.0
+
+def make_plan(positions: np.ndarray, costs: np.ndarray, num_shards: int,
+              batch: int, extent: float | None = None,
+              chunk: int = 4,
+              shard_speed: np.ndarray | None = None) -> Plan:
+    """Morton-sort, chunk, LPT-pack into shards, slice into rounds.
+
+    ``shard_speed`` (relative throughput per shard, default uniform) makes
+    the packing straggler-aware: LPT assigns each chunk to the shard with
+    the smallest predicted *time* ``shard_cost / shard_speed``, so a
+    persistently slow shard receives proportionally less predicted load.
+    Note that only *relative* speed differences matter — scaling all
+    speeds uniformly leaves the packing unchanged.
+
+    An empty catalog yields a zero-round plan (``batches == []``);
+    ``batch < 1`` or ``num_shards < 1`` raise ``ValueError`` (both
+    consistent with ``make_region_plan``).
+    """
+    speed = _check_plan_args(num_shards, batch, shard_speed)
+    s = positions.shape[0]
+    if s == 0:
+        return _empty_plan(num_shards)
+    extent = float(extent if extent is not None else positions.max() + 1)
+    order = morton_order(positions, extent)
+
+    # Morton-contiguous chunks preserve locality; LPT over chunk costs
+    # balances load.  Large chunks = more locality, less balance.
+    starts = np.arange(0, s, chunk)
+    chunk_cost = np.add.reduceat(costs[order], starts)
+    sizes = np.diff(np.append(starts, s))
+    shard_lists: list[list[int]] = [[] for _ in range(num_shards)]
+    shard_cost = np.zeros(num_shards)
+    for ci in np.argsort(-chunk_cost, kind="stable"):
+        tgt = int(np.argmin(shard_cost / speed))
+        shard_lists[tgt].extend(
+            order[starts[ci]:starts[ci] + sizes[ci]].tolist())
+        shard_cost[tgt] += chunk_cost[ci]
+
+    batches, round_time = _slice_rounds(shard_lists, costs, speed,
+                                        num_shards, batch)
+    shard_time = shard_cost / speed
+    mean = shard_time.mean()
     return Plan(batches=batches,
-                predicted_max_cost=float(shard_cost.max(initial=0.0)),
+                predicted_max_cost=float(shard_time.max(initial=0.0)),
                 predicted_imbalance=float(
-                    (shard_cost.max(initial=0.0) - mean)
-                    / max(mean, 1e-9)))
+                    (shard_time.max(initial=0.0) - mean)
+                    / max(mean, 1e-9)),
+                round_shard_time=round_time)
+
+
+def pack_round(positions: np.ndarray, costs: np.ndarray, num_shards: int,
+               batch: int, extent: float | None = None,
+               chunk: int = 4,
+               shard_speed: np.ndarray | None = None) -> Plan:
+    """Pack ONLY the next round: a single [num_shards, batch] batch.
+
+    The Dtree-style adaptive loop replans between rounds, so it needs the
+    *next* round balanced directly — packing the whole backlog and
+    executing its first slice (as ``make_plan`` callers would) leaves
+    round composition incidental and strands remainders into extra ragged
+    rounds.  Here LPT runs under per-shard slot capacity ``batch``:
+    expensive Morton chunks are placed first on the shard with the least
+    predicted *time* that still has room, so cheap sources drain last
+    (the paper's shrinking batches as T is approached) and exactly
+    ``min(S, num_shards·batch)`` sources are scheduled.  Once the backlog
+    fits in one round, chunks shrink to singletons — locality no longer
+    pays and per-slot placement maximizes tail balance.
+
+    SPMD batches are slot-count-rigid: a slow shard must still fill
+    ``batch`` slots, so the only way to give it less *time* is cheaper
+    sources.  After the capacity-LPT fill, a swap phase trades the
+    slowest shard's most expensive chunks for the cheapest *unscheduled*
+    chunks until its predicted time drops to the mean — the straggler
+    works through the cheap tail while fast shards drain the expensive
+    head.
+    """
+    speed = _check_plan_args(num_shards, batch, shard_speed)
+    s = positions.shape[0]
+    if s == 0:
+        return _empty_plan(num_shards)
+    extent = float(extent if extent is not None else positions.max() + 1)
+    order = morton_order(positions, extent)
+
+    if s <= num_shards * batch:
+        chunk = 1
+    # vectorized per-chunk cost: this runs once per *round* over the whole
+    # backlog, so it must stay O(S) numpy, not a Python loop
+    starts = np.arange(0, s, chunk)
+    chunk_cost = np.add.reduceat(costs[order], starts)
+    n_chunks = len(starts)
+    sizes = np.diff(np.append(starts, s))
+
+    def tasks_of(ci):
+        return order[starts[ci]:starts[ci] + sizes[ci]]
+
+    # full-size chunk ids per shard take part in the swap phase; the
+    # ragged last chunk and fragmented single slots go to `extras`
+    shard_chunks: list[list[int]] = [[] for _ in range(num_shards)]
+    extras: list[list[int]] = [[] for _ in range(num_shards)]
+    free = np.full(num_shards, batch)
+    time = np.zeros(num_shards)
+    placed = np.zeros(n_chunks, bool)
+
+    for ci in np.argsort(-chunk_cost, kind="stable"):
+        if not free.any():
+            break
+        size = sizes[ci]
+        fits = free >= size
+        if fits.any():
+            tgt = int(np.argmin(np.where(fits, time, np.inf)))
+            (shard_chunks if size == chunk else extras)[tgt].append(int(ci))
+            placed[ci] = True
+            free[tgt] -= size
+            time[tgt] += chunk_cost[ci] / speed[tgt]
+        else:  # fragmented capacity: fall back to per-slot placement
+            # keep the chunk out of the swap pool even if only part of it
+            # lands this round — the swap phase must never re-offer tasks
+            # that are already scheduled
+            placed[ci] = True
+            for t in tasks_of(ci):
+                if not free.any():
+                    break
+                tgt = int(np.argmin(np.where(free > 0, time, np.inf)))
+                extras[tgt].append(-int(t) - 1)     # single-task marker
+                free[tgt] -= 1
+                time[tgt] += costs[t] / speed[tgt]
+
+    # swap phase: walk the cheapest unscheduled full-size chunks in
+    # ascending cost; a chunk given up in a swap is simply returned to
+    # the backlog for a later round (it is costlier than anything the
+    # pool would offer next anyway)
+    asc = np.argsort(chunk_cost, kind="stable")
+    pool_pos = 0
+    for _ in range(num_shards * batch):
+        while pool_pos < n_chunks and (placed[asc[pool_pos]]
+                                       or sizes[asc[pool_pos]] != chunk):
+            pool_pos += 1
+        sh = int(np.argmax(time))
+        if (pool_pos >= n_chunks or time[sh] <= time.mean() * 1.05
+                or not shard_chunks[sh]):
+            break
+        mine = max(shard_chunks[sh], key=lambda ci: chunk_cost[ci])
+        u = int(asc[pool_pos])
+        if chunk_cost[u] >= chunk_cost[mine]:
+            break
+        shard_chunks[sh].remove(mine)
+        shard_chunks[sh].append(u)
+        time[sh] += (chunk_cost[u] - chunk_cost[mine]) / speed[sh]
+        placed[mine], placed[u] = False, True
+
+    b = np.full((num_shards, batch), -1, np.int64)
+    for sh in range(num_shards):
+        lst = [int(t) for ci in shard_chunks[sh] for t in tasks_of(ci)]
+        lst += [int(t) for m in extras[sh]
+                for t in (tasks_of(m) if m >= 0 else [-m - 1])]
+        b[sh, :len(lst)] = lst
+    mean = time.mean()
+    return Plan(batches=[b],
+                predicted_max_cost=float(time.max(initial=0.0)),
+                predicted_imbalance=float(
+                    (time.max(initial=0.0) - mean) / max(mean, 1e-9)),
+                round_shard_time=time[None, :])
 
 
 def make_region_plan(positions: np.ndarray, costs: np.ndarray,
@@ -184,8 +386,12 @@ def make_region_plan(positions: np.ndarray, costs: np.ndarray,
     """The paper's *first* (rejected) strategy: equal-area sky regions.
 
     Kept as a baseline so benchmarks/fig6 can reproduce the comparison that
-    motivated the source-level decomposition.
+    motivated the source-level decomposition.  Empty-catalog and bad-batch
+    handling match ``make_plan`` (zero rounds / ``ValueError``).
     """
+    speed = _check_plan_args(num_shards, batch, None)
+    if positions.shape[0] == 0:
+        return _empty_plan(num_shards)
     grid = int(np.ceil(np.sqrt(num_shards)))
     cell = extent / grid
     region = (np.minimum(positions[:, 0] // cell, grid - 1) * grid
@@ -193,16 +399,11 @@ def make_region_plan(positions: np.ndarray, costs: np.ndarray,
     shard_lists = [np.where(region % num_shards == sh)[0].tolist()
                    for sh in range(num_shards)]
     shard_cost = np.array([costs[l].sum() for l in shard_lists])
-    rounds = int(np.ceil(max(max(len(l) for l in shard_lists), 1) / batch))
-    batches = []
-    for r in range(rounds):
-        b = np.full((num_shards, batch), -1, np.int64)
-        for sh, lst in enumerate(shard_lists):
-            seg = lst[r * batch:(r + 1) * batch]
-            b[sh, :len(seg)] = seg
-        batches.append(b)
-    mean = shard_cost.mean() if num_shards else 0.0
+    batches, round_time = _slice_rounds(shard_lists, costs, speed,
+                                        num_shards, batch)
+    mean = shard_cost.mean()
     return Plan(batches=batches,
                 predicted_max_cost=float(shard_cost.max(initial=0.0)),
                 predicted_imbalance=float(
-                    (shard_cost.max(initial=0.0) - mean) / max(mean, 1e-9)))
+                    (shard_cost.max(initial=0.0) - mean) / max(mean, 1e-9)),
+                round_shard_time=round_time)

@@ -12,11 +12,18 @@ Phases mirror the paper's implementation:
      Newton method.  On a mesh the batch axis is laid out over the ``data``
      axis with ``shard_map`` so each device's ``while_loop`` runs only
      until *its* batch converges (the Dtree-masking adaptation).
+
+With ``adaptive=True`` phase 3 closes the paper's Dtree loop
+(§III-C/G): each round is planned from the *current* cost model and
+per-shard speeds, executed, and the measured per-source Newton iteration
+counts are fed back through ``DynamicScheduler.record`` (cost-model
+refit + straggler discounting) before the remaining sources are
+re-packed for the next round.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field as dataclass_field
 from typing import Any
 
 import jax
@@ -27,6 +34,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import backends, decompose, elbo, newton, synthetic
 from repro.core.model import ImageMeta, SourceParams
 from repro.core.priors import Priors
+from repro.runtime.scheduler import DynamicScheduler, RoundRecord
 
 
 @dataclass
@@ -36,7 +44,20 @@ class InferenceStats:
     converged: int
     iters: np.ndarray           # [S] Newton iterations per source
     elbo_values: np.ndarray     # [S]
-    predicted_imbalance: float
+    predicted_imbalance: float  # static: whole-plan prediction;
+                                # adaptive: mean per-round prediction
+    adaptive: bool = False
+    history: list = dataclass_field(default_factory=list)  # [RoundRecord]
+
+    @property
+    def measured_imbalance(self) -> np.ndarray:
+        """Per-round measured (max − mean)/mean shard load, in Newton
+        iterations — the paper's load-imbalance metric at round grain."""
+        return np.array([r.imbalance for r in self.history])
+
+    @property
+    def predicted_imbalance_per_round(self) -> np.ndarray:
+        return np.array([r.predicted_imbalance for r in self.history])
 
 
 @functools.partial(jax.jit, static_argnames=("patch",))
@@ -45,6 +66,11 @@ def extract_patches(images: jnp.ndarray, metas: ImageMeta,
     """Per-source, per-image patches.  Returns (x [S,n,P,P], corners [S,n,2])
     with corners in image-local coordinates."""
     field = images.shape[-1]
+    if patch > field:
+        raise ValueError(
+            f"patch size {patch} exceeds the image field {field}; "
+            "corner clipping would produce negative corners and silently "
+            "wrap the extracted tiles")
 
     def per_source(pos):
         def per_image(img, meta):
@@ -83,22 +109,54 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
                   cost_model: decompose.CostModel | None = None,
                   passes: int = 1,
                   backend: str | None = None,
+                  adaptive: bool = False,
+                  scheduler: DynamicScheduler | None = None,
                   progress: Any = None):
     """Run Celeste VI over a full field.  Returns (thetas [S, D], stats).
 
     ``passes > 1`` re-renders neighbor backgrounds from the previous pass's
     fitted catalog and refits — the iterated-conditional refinement the
     paper lists as future work (§IX, "optimizing all light sources
-    jointly"); pass 1 alone is the paper-faithful procedure.
+    jointly"); pass 1 alone is the paper-faithful procedure.  Each pass is
+    planned from *its own* catalog features (positions and fluxes move
+    between passes, so reusing the pass-1 plan would mispredict cost).
 
     ``backend`` selects the ELBO evaluation backend (``core/backends.py``):
     ``"jax"`` (default) for the portable path, ``"pallas"`` for the fused
     TPU kernels, ``"pallas_interpret"`` / ``"ref"`` for CPU validation of
     the kernel pipeline.
+
+    ``adaptive=True`` closes the plan → measure → rebalance loop: only the
+    next round is planned, measured per-source Newton iteration counts are
+    fed back through ``DynamicScheduler.record`` (cost-model refit, shard
+    speed estimation), and the remaining sources are re-packed before
+    every round.  Iteration counts capture *workload* irregularity — the
+    paper's dominant imbalance source — but are hardware-speed-invariant:
+    under single-controller SPMD the host cannot observe per-shard wall
+    time, so a thermally-throttled device is NOT detected here.  To
+    rebalance around true hardware stragglers, feed per-shard wall-time
+    measurements into ``DynamicScheduler.record`` yourself (the loop in
+    ``benchmarks/scheduler_adaptive.py`` shows the wiring).  Per-source
+    results are identical to the static schedule (sources are
+    independent); only the round composition — and hence the load
+    balance — changes.  Pass ``scheduler`` to carry speeds/history across
+    calls; round telemetry lands in ``stats.history``.
     """
     field = int(images.shape[-1])
+    if patch > field:
+        raise ValueError(
+            f"patch size {patch} exceeds the image field {field}")
     s = int(init_catalog.pos.shape[0])
     num_shards = 1 if mesh is None else int(mesh.shape[data_axis])
+
+    if s == 0:
+        # an empty candidate catalog is a clean no-op, matching the
+        # planners' zero-round plans
+        return (jnp.zeros((0, elbo.THETA_DIM), jnp.float32),
+                InferenceStats(rounds=0, total_sources=0, converged=0,
+                               iters=np.zeros(0, np.int64),
+                               elbo_values=np.zeros(0, np.float64),
+                               predicted_imbalance=0.0, adaptive=adaptive))
 
     # ---- phase 1+2: images & catalog in memory, neighbor backgrounds ----
     def neighbor_background(catalog, positions):
@@ -123,14 +181,15 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
         lambda src: elbo.init_theta(src, priors)))(init_catalog)
 
     # ---- scheduling (decomposition scheme) ----
-    pos_np = np.asarray(init_catalog.pos)
+    def catalog_features(catalog):
+        pos_np = np.asarray(catalog.pos)
+        feats = decompose.CostModel.features(
+            np.log(np.maximum(np.asarray(catalog.ref_flux), 1e-3)),
+            np.asarray(catalog.is_gal),
+            decompose.neighbor_counts(pos_np, radius=float(patch) / 2.0))
+        return pos_np, feats
+
     cm = cost_model or decompose.CostModel()
-    feats = decompose.CostModel.features(
-        np.log(np.maximum(np.asarray(init_catalog.ref_flux), 1e-3)),
-        np.asarray(init_catalog.is_gal),
-        decompose.neighbor_counts(pos_np, radius=float(patch) / 2.0))
-    plan = decompose.make_plan(pos_np, cm.predict(feats), num_shards,
-                               batch, extent=field)
 
     objective = make_objective(metas, priors, backend=backend)
 
@@ -157,38 +216,97 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
     iters = np.zeros(s, np.int64)
     values = np.zeros(s, np.float64)
     conv = np.zeros(s, bool)
-    for p in range(passes):
-        if p > 0:  # refinement: neighbors re-rendered from fitted catalog
-            fitted = infer_catalog(thetas)
-            x, corners, bg = neighbor_background(fitted, fitted.pos)
-        for r, idx in enumerate(plan.batches):
-            flat = idx.reshape(-1)
-            xb, bgb, cb, tb, act = _gather_batch(flat, x, bg, corners, thetas)
-            if mesh is not None:
-                shp = (num_shards, batch)
-                xb, bgb, cb, tb, act = jax.tree.map(
-                    lambda a: a.reshape(shp + a.shape[1:]),
-                    (xb, bgb, cb, tb, act))
-                res = fit(tb, xb, bgb, cb, act)
-                res = jax.tree.map(
-                    lambda a: a.reshape((num_shards * batch,) + a.shape[2:]),
-                    res)
-            else:
-                res = fit(tb, xb, bgb, cb, act)
-            sel = flat >= 0
-            tgt = flat[sel]
-            thetas = thetas.at[tgt].set(res.theta[sel])
-            iters[tgt] += np.asarray(res.iters)[sel]
-            values[tgt] = np.asarray(res.value)[sel]
-            conv[tgt] = np.asarray(res.converged)[sel]
-            if progress is not None:
-                progress(p * len(plan.batches) + r,
-                         passes * len(plan.batches))
+    history: list[RoundRecord] = []
+    rounds_done = 0
+    rounds_per_pass = int(np.ceil(s / (num_shards * batch)))
+
+    def run_round(idx):
+        """Execute one [num_shards, batch] round; returns the scheduled
+        source indices, their measured iteration counts, and their shard."""
+        nonlocal thetas
+        flat = idx.reshape(-1)
+        xb, bgb, cb, tb, act = _gather_batch(flat, x, bg, corners, thetas)
+        if mesh is not None:
+            shp = (num_shards, batch)
+            xb, bgb, cb, tb, act = jax.tree.map(
+                lambda a: a.reshape(shp + a.shape[1:]),
+                (xb, bgb, cb, tb, act))
+            res = fit(tb, xb, bgb, cb, act)
+            res = jax.tree.map(
+                lambda a: a.reshape((num_shards * batch,) + a.shape[2:]),
+                res)
+        else:
+            res = fit(tb, xb, bgb, cb, act)
+        tgt, shard_of, sel = decompose.round_tasks(idx)
+        thetas = thetas.at[tgt].set(res.theta[sel])
+        iters[tgt] += np.asarray(res.iters)[sel]
+        values[tgt] = np.asarray(res.value)[sel]
+        conv[tgt] = np.asarray(res.converged)[sel]
+        measured = np.asarray(res.iters)[sel].astype(np.float64)
+        return tgt, measured, shard_of
+
+    def measured_record(shard_of, measured, predicted):
+        shard_times = np.bincount(shard_of, weights=measured,
+                                  minlength=num_shards)
+        mean = max(shard_times.mean(), 1e-9)
+        return RoundRecord(round_idx=rounds_done, shard_times=shard_times,
+                           imbalance=float((shard_times.max() - mean)
+                                           / mean),
+                           predicted_imbalance=predicted)
+
+    if adaptive:
+        sched = scheduler or DynamicScheduler(
+            num_shards=num_shards, batch=batch, cost_model=cm)
+        # a reused scheduler carries records from earlier calls; stats
+        # must report only this call's rounds (and not alias the live
+        # list the scheduler keeps appending to)
+        history_start = len(sched.history)
+        for p in range(passes):
+            src_cat = init_catalog
+            if p > 0:  # refinement: neighbors + plan from fitted catalog
+                src_cat = infer_catalog(thetas)
+                x, corners, bg = neighbor_background(src_cat, src_cat.pos)
+            pos_np, feats = catalog_features(src_cat)
+            remaining = np.arange(s)
+            while remaining.size:
+                # plan next round → execute → measure → record → re-pack
+                plan = sched.plan_round(pos_np[remaining], feats[remaining],
+                                        extent=field)
+                idx = decompose.globalize(plan.batches[0], remaining)
+                tgt, measured, shard_of = run_round(idx)
+                sched.record(rounds_done, feats[tgt], measured, shard_of,
+                             plan=plan)
+                remaining = np.setdiff1d(remaining, tgt,
+                                         assume_unique=True)
+                rounds_done += 1
+                if progress is not None:
+                    progress(rounds_done - 1, passes * rounds_per_pass)
+        history = list(sched.history[history_start:])
+        pred_imb = (float(np.mean([r.predicted_imbalance for r in history]))
+                    if history else 0.0)
+    else:
+        pos_np, feats = catalog_features(init_catalog)
+        for p in range(passes):
+            if p > 0:  # refinement: neighbors + plan from fitted catalog
+                fitted = infer_catalog(thetas)
+                x, corners, bg = neighbor_background(fitted, fitted.pos)
+                pos_np, feats = catalog_features(fitted)
+            plan = decompose.make_plan(pos_np, cm.predict(feats),
+                                       num_shards, batch, extent=field)
+            for r, idx in enumerate(plan.batches):
+                tgt, measured, shard_of = run_round(idx)
+                history.append(measured_record(shard_of, measured,
+                                               plan.round_imbalance(r)))
+                rounds_done += 1
+                if progress is not None:
+                    progress(p * len(plan.batches) + r,
+                             passes * len(plan.batches))
+        pred_imb = plan.predicted_imbalance
 
     stats = InferenceStats(
-        rounds=len(plan.batches), total_sources=s, converged=int(conv.sum()),
+        rounds=rounds_done, total_sources=s, converged=int(conv.sum()),
         iters=iters, elbo_values=values,
-        predicted_imbalance=plan.predicted_imbalance)
+        predicted_imbalance=pred_imb, adaptive=adaptive, history=history)
     return thetas, stats
 
 

@@ -26,7 +26,8 @@ class NewtonResult(NamedTuple):
     value: jnp.ndarray       # [S] final objective (ELBO)
     iters: jnp.ndarray       # [S] iterations used per source
     converged: jnp.ndarray   # [S] bool; active sources that reached gtol
-    grad_norm: jnp.ndarray   # [S] final ‖∇‖∞ (inf if never evaluated)
+    grad_norm: jnp.ndarray   # [S] ‖∇‖∞ at the returned theta (inf if the
+                             #     loop never ran)
 
 
 class BatchedObjective(NamedTuple):
@@ -188,5 +189,12 @@ def fit_batch(objective, theta0: jnp.ndarray, *obj_args,
                       conv=conv, iters=iters, gnorm=gnorm, k=st.k + 1)
 
     st = jax.lax.while_loop(cond, body, state)
+    # The loop body evaluates the gradient *before* stepping, so st.gnorm
+    # belongs to the pre-step theta of the last iteration — stale whenever
+    # that final step was accepted.  Re-evaluate at the theta we actually
+    # return so convergence diagnostics match the emitted catalog.
+    _, grad_final = bobj.value_and_grad(st.theta, *obj_args)
+    gnorm_final = jnp.max(jnp.abs(grad_final), axis=-1)
+    gnorm = jnp.where(st.k > 0, gnorm_final, st.gnorm)
     return NewtonResult(theta=st.theta, value=st.value, iters=st.iters,
-                        converged=st.conv, grad_norm=st.gnorm)
+                        converged=st.conv, grad_norm=gnorm)

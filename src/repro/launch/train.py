@@ -230,8 +230,18 @@ def main():
         ckpt_every=args.ckpt_every, log=print)
     dt = time.time() - t0
     toks = args.steps * args.batch * args.seq
-    print(f"done: {stats.steps_run} steps, {dt:.1f}s, "
-          f"{toks/dt:.0f} tok/s, final loss {stats.losses[-1]:.4f}")
+    # throughput from *measured* step times, not wall clock — restores,
+    # retries, and checkpoint stalls would otherwise skew tok/s; the
+    # max/median ratio flags straggler steps (same telemetry discipline
+    # as the inference scheduler's measured-cost loop)
+    compute = max(stats.throughput_time(), 1e-9)
+    times = np.asarray(stats.step_times)
+    straggle = (float(times.max() / max(np.median(times), 1e-9))
+                if times.size else 0.0)
+    print(f"done: {stats.steps_run} steps, {dt:.1f}s wall "
+          f"({compute:.1f}s compute), {toks/compute:.0f} tok/s, "
+          f"slowest/median step {straggle:.2f}x, "
+          f"final loss {stats.losses[-1]:.4f}")
     pipe.close()
 
 

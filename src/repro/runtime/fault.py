@@ -31,6 +31,12 @@ class LoopStats:
     restores: int = 0
     checkpoints: int = 0
     losses: list = field(default_factory=list)
+    step_times: list = field(default_factory=list)   # measured wall s/step
+
+    def throughput_time(self) -> float:
+        """Total measured compute seconds (excludes restores/retries) —
+        the honest denominator for tok/s or sources/s."""
+        return float(sum(self.step_times))
 
 
 def run_loop(state: Any,
@@ -71,7 +77,9 @@ def run_loop(state: Any,
             try:
                 if fault_injector is not None and fault_injector(step):
                     raise StepFailure(f"injected fault at step {step}")
+                t_step = time.perf_counter()
                 state, loss = step_fn(state, step)
+                stats.step_times.append(time.perf_counter() - t_step)
                 stats.losses.append(float(loss))
                 stats.steps_run += 1
                 step += 1

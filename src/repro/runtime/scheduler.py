@@ -46,30 +46,77 @@ class DynamicScheduler:
 
     def plan(self, positions: np.ndarray, feats: np.ndarray,
              extent: float) -> decompose.Plan:
-        costs = self.cost_model.predict(feats) / np.maximum(
-            self.shard_speed.mean(), 1e-9)
+        """Pack ALL given sources into rounds under the current cost model
+        and per-shard speeds (a full static plan from this scheduler's
+        learned state; the adaptive loop itself uses ``plan_round``).
+
+        Speeds are routed into the LPT packing itself (``make_plan``'s
+        ``shard_speed``) so a discounted straggler genuinely receives less
+        predicted load — dividing every cost by the *mean* speed, as a
+        previous revision did, is a uniform scaling that LPT is invariant
+        to and never changed any schedule.
+        """
+        costs = self.cost_model.predict(feats)
         return decompose.make_plan(positions, costs, self.num_shards,
-                                   self.batch, extent=extent)
+                                   self.batch, extent=extent,
+                                   shard_speed=self.shard_speed)
+
+    def plan_round(self, positions: np.ndarray, feats: np.ndarray,
+                   extent: float) -> decompose.Plan:
+        """Pack just the *next* round (``decompose.pack_round``) under the
+        current cost model and speeds: exactly ``min(S, num_shards·batch)``
+        sources, most expensive first, the round itself LPT-balanced.
+        This is what the adaptive inference loop executes each iteration."""
+        costs = self.cost_model.predict(feats)
+        return decompose.pack_round(positions, costs, self.num_shards,
+                                    self.batch, extent=extent,
+                                    shard_speed=self.shard_speed)
 
     def record(self, round_idx: int, feats: np.ndarray,
-               measured: np.ndarray, shard_of_task: np.ndarray):
-        """Feed back measured per-task cost (e.g. Newton iterations)."""
+               measured: np.ndarray, shard_of_task: np.ndarray,
+               plan: decompose.Plan | None = None,
+               plan_round: int = 0):
+        """Feed back measured per-task cost (e.g. Newton iterations).
+
+        Pass the ``plan`` the round was executed from (and which of its
+        rounds, default the first) to fill ``RoundRecord.
+        predicted_imbalance`` from the actual predicted per-shard times
+        — and to unlock direct speed estimation: relative shard speed is
+        measured as (predicted work assigned) / (measured time), EMA-
+        blended, instead of the threshold-probe fallback that only reacts
+        once a shard already exceeds ``straggler_factor``× the median.
+        """
         self.cost_model = self.cost_model.refit(feats, measured)
-        shard_times = np.zeros(self.num_shards)
-        for sh in range(self.num_shards):
-            shard_times[sh] = measured[shard_of_task == sh].sum()
+        shard_times = np.bincount(shard_of_task, weights=measured,
+                                  minlength=self.num_shards)
         mean = max(shard_times.mean(), 1e-9)
+        predicted = (plan.round_imbalance(plan_round)
+                     if plan is not None and plan.batches else 0.0)
         rec = RoundRecord(
             round_idx=round_idx, shard_times=shard_times,
             imbalance=float((shard_times.max() - mean) / mean),
-            predicted_imbalance=0.0)
+            predicted_imbalance=predicted)
         self.history.append(rec)
-        # straggler detection: persistently slow shards get discounted
-        med = max(np.median(shard_times), 1e-9)
-        slow = shard_times > self.straggler_factor * med
-        self.shard_speed = np.where(
-            slow, 0.9 * self.shard_speed, np.minimum(
-                1.0, 1.02 * self.shard_speed))
+        if plan is not None and plan.batches:
+            # predicted time was cost/speed; undo the division to get the
+            # raw work handed to each shard, then rate = work/measured
+            work = plan.round_shard_time[plan_round] * self.shard_speed
+            rate = np.where(shard_times > 1e-9,
+                            work / np.maximum(shard_times, 1e-9), np.nan)
+            if np.any(np.isfinite(rate)):
+                est = rate / np.nanmax(rate)
+                self.shard_speed = np.where(
+                    np.isfinite(est),
+                    np.clip(0.5 * self.shard_speed + 0.5 * est, 0.05, 1.0),
+                    self.shard_speed)
+        else:
+            # no plan: fall back to threshold straggler detection —
+            # persistently slow shards get discounted
+            med = max(np.median(shard_times), 1e-9)
+            slow = shard_times > self.straggler_factor * med
+            self.shard_speed = np.where(
+                slow, 0.9 * self.shard_speed, np.minimum(
+                    1.0, 1.02 * self.shard_speed))
 
     def imbalance_history(self) -> np.ndarray:
         return np.array([r.imbalance for r in self.history])

@@ -81,3 +81,62 @@ def test_neighbor_counts():
     pos = np.array([[0.0, 0.0], [1.0, 0.0], [50.0, 50.0]])
     counts = decompose.neighbor_counts(pos, radius=2.0)
     assert counts.tolist() == [1, 1, 0]
+
+
+def _assigned_cost(plan, costs):
+    """Total predicted cost per shard, summed over all rounds."""
+    per_shard = np.zeros(plan.batches[0].shape[0])
+    for b in plan.batches:
+        for sh, row in enumerate(b):
+            per_shard[sh] += costs[row[row >= 0]].sum()
+    return per_shard
+
+
+def test_make_plan_slow_shard_gets_less_load():
+    """Regression: the old DynamicScheduler.plan divided every cost by
+    the *mean* speed — a uniform scaling LPT is invariant to, so
+    straggler discounting never changed any schedule.  Routing per-shard
+    speeds into make_plan must visibly shed load from the slow shard."""
+    rng = np.random.default_rng(7)
+    pos = rng.uniform(0, 100, (400, 2))
+    costs = rng.uniform(1, 20, 400)
+    speed = np.array([1.0, 1.0, 1.0, 0.25])
+    plan = decompose.make_plan(pos, costs, 4, 16, extent=100.0,
+                               shard_speed=speed)
+    load = _assigned_cost(plan, costs)
+    assert load[3] < 0.5 * load[:3].mean()
+    # predicted *time* is balanced instead
+    t = load / speed
+    assert (t.max() - t.mean()) / t.mean() < 0.25
+
+    # uniform scaling of all speeds is a no-op on the packing
+    base = decompose.make_plan(pos, costs, 4, 16, extent=100.0)
+    scaled = decompose.make_plan(pos, costs, 4, 16, extent=100.0,
+                                 shard_speed=np.full(4, 0.5))
+    for b0, b1 in zip(base.batches, scaled.batches):
+        np.testing.assert_array_equal(b0, b1)
+
+
+def test_planners_align_on_empty_and_bad_args():
+    empty = np.zeros((0, 2))
+    no_cost = np.zeros(0)
+    for plan in (decompose.make_plan(empty, no_cost, 4, 8, extent=10.0),
+                 decompose.make_region_plan(empty, no_cost, 4, 8,
+                                            extent=10.0),
+                 decompose.pack_round(empty, no_cost, 4, 8, extent=10.0)):
+        assert plan.batches == []
+        assert plan.predicted_imbalance == 0.0
+        assert plan.round_shard_time.shape == (0, 4)
+
+    pos = np.array([[1.0, 1.0]])
+    costs = np.ones(1)
+    for bad_batch in (0, -3):
+        for fn in (decompose.make_plan, decompose.make_region_plan,
+                   decompose.pack_round):
+            with np.testing.assert_raises(ValueError):
+                fn(pos, costs, 4, bad_batch, extent=10.0)
+    with np.testing.assert_raises(ValueError):
+        decompose.make_plan(pos, costs, 0, 8, extent=10.0)
+    with np.testing.assert_raises(ValueError):
+        decompose.make_plan(pos, costs, 2, 8, extent=10.0,
+                            shard_speed=np.array([1.0, -1.0]))

@@ -61,6 +61,33 @@ def test_newton_rosenbrock_like_nonconvex():
                                np.ones((3, 2)), atol=1e-2)
 
 
+def test_grad_norm_reported_at_returned_theta():
+    """Regression: grad_norm used to be the pre-step gradient of the last
+    iteration — stale whenever the final step was accepted.  Truncate a
+    quadratic solve after one (accepted) step: the reported norm must be
+    the gradient at the *returned* theta, not at theta0."""
+    d, s = 4, 3
+    key = jax.random.PRNGKey(2)
+    qs = jax.random.normal(key, (s, d, d))
+    hs = -(qs @ jnp.transpose(qs, (0, 2, 1))) - 0.5 * jnp.eye(d)
+    opt = jax.random.normal(jax.random.PRNGKey(3), (s, d))
+
+    def obj(theta, h, x0):
+        d_ = theta - x0
+        return 0.5 * d_ @ (h @ d_)
+
+    res = newton.fit_batch(obj, jnp.zeros((s, d)), hs, opt,
+                           max_iters=1, gtol=1e-8, init_radius=100.0)
+    grad_at_theta = jax.vmap(jax.grad(obj))(res.theta, hs, opt)
+    expect = np.max(np.abs(np.asarray(grad_at_theta)), axis=-1)
+    np.testing.assert_allclose(np.asarray(res.grad_norm), expect,
+                               rtol=1e-5, atol=1e-5)
+    # theta moved, so the theta0 gradient would be very different
+    g0 = jax.vmap(jax.grad(obj))(jnp.zeros((s, d)), hs, opt)
+    assert not np.allclose(np.asarray(res.grad_norm),
+                           np.max(np.abs(np.asarray(g0)), axis=-1))
+
+
 def test_newton_active_mask_freezes_padding():
     def obj(theta):
         return -jnp.sum(theta**2)
