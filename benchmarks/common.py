@@ -1,7 +1,27 @@
-"""Shared benchmark utilities: timing, CSV emission, synthetic skies."""
+"""Shared benchmark utilities: timing, CSV emission, synthetic skies.
+
+Importing this module (as ``benchmarks.common`` or bare ``common``) puts
+the repo root and ``src/`` on ``sys.path``, so every benchmark script
+works both as ``python -m benchmarks.<name>`` from the repo root and by
+script path (``python benchmarks/<name>.py``) without PYTHONPATH.
+Scripts opt in with:
+
+    try:
+        from benchmarks import common
+    except ImportError:      # script-path invocation
+        import common
+"""
 from __future__ import annotations
 
+import os
+import sys
 import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+del _p
 
 import jax
 import jax.numpy as jnp

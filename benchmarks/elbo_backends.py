@@ -25,7 +25,7 @@ import jax.numpy as jnp
 try:
     from benchmarks.common import timeit
 except ImportError:        # invoked as `python benchmarks/elbo_backends.py`
-    from common import timeit
+    from common import timeit  # (also shims repo root + src onto sys.path)
 from repro.core import elbo, infer, synthetic
 from repro.core.priors import default_priors
 

@@ -6,6 +6,11 @@ fetch (global-array) share growing with node count.
 """
 from __future__ import annotations
 
+try:
+    from benchmarks import common  # noqa: F401  (repo-root/src sys.path shim)
+except ImportError:                # script-path invocation
+    import common                  # noqa: F401
+
 import numpy as np
 
 from benchmarks.common import emit

@@ -2,6 +2,11 @@
 region over 16→256 nodes, runtime component breakdown."""
 from __future__ import annotations
 
+try:
+    from benchmarks import common  # noqa: F401  (repo-root/src sys.path shim)
+except ImportError:                # script-path invocation
+    import common                  # noqa: F401
+
 import numpy as np
 
 from benchmarks.common import emit

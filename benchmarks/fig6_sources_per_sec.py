@@ -3,6 +3,11 @@ decomposition comparison — source-level batches (chosen strategy) vs
 equal-area sky regions (rejected strategy), on a clustered sky."""
 from __future__ import annotations
 
+try:
+    from benchmarks import common  # noqa: F401  (repo-root/src sys.path shim)
+except ImportError:                # script-path invocation
+    import common                  # noqa: F401
+
 import numpy as np
 
 from benchmarks.common import emit

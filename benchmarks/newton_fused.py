@@ -1,0 +1,163 @@
+"""Old vs fused second-order Newton path (the PR-3 tentpole claim).
+
+Fits the same batch of sources with ``newton.fit_batch`` under two
+objectives:
+
+  * **old** — the ``jax`` backend, whose per-iteration evaluation is
+    ``value_and_grad`` + ``vmap(jax.hessian)``: forward-over-reverse AD
+    re-renders the whole patch pipeline ~27× per Newton iteration;
+  * **fused** — a kernel backend (``pallas_interpret`` / ``ref`` on CPU,
+    ``pallas`` on TPU), whose ``second_order`` renders the moments once,
+    reads the per-pixel residuals + 2×2 curvature blocks from the fused
+    ``poisson_elbo_hess`` kernel, and assembles the exact dense Hessian
+    as MXU-batched contractions with one 6-direction density sweep.
+
+``gtol=0`` pins both paths to exactly ``max_iters`` iterations so the
+comparison is render-for-render.  Emits JSON with sources/sec,
+iterations/sec and the derived renders-per-iteration (per-iteration wall
+time over the measured cost of one batched moment render).
+
+Run (either invocation works — ``benchmarks/common.py`` shims sys.path):
+
+    python -m benchmarks.newton_fused --sources 256
+    python benchmarks/newton_fused.py --smoke
+"""
+from __future__ import annotations
+
+try:
+    from benchmarks import common  # noqa: F401  (repo-root/src sys.path shim)
+except ImportError:                # script-path invocation
+    import common                  # noqa: F401
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import batched_elbo, elbo, infer, newton, synthetic
+from repro.core.priors import default_priors
+
+
+def _problem(s: int, patch: int, seed: int = 0):
+    priors = default_priors()
+    sky = synthetic.sample_sky(jax.random.PRNGKey(seed), num_sources=s,
+                               field=max(96, 4 * patch), priors=priors)
+    x, corners = infer.extract_patches(sky.images, sky.metas,
+                                       sky.truth.pos, patch)
+    bg = jnp.broadcast_to(sky.metas.sky[None, :, None, None], x.shape)
+    thetas = jax.vmap(lambda t: elbo.init_theta(t, priors))(sky.truth)
+    return sky.metas, priors, thetas, x, bg, corners
+
+
+def _time(fn, iters=1):
+    out = jax.block_until_ready(fn())     # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters, out
+
+
+def _render_time(backend, metas, thetas, corners, patch, iters=3):
+    """Wall cost of ONE batched moment render — the unit for the
+    renders-per-iteration metric."""
+    if backend == "jax":
+        fn = jax.jit(lambda th: batched_elbo._moments_jnp(
+            th, corners, metas, patch)[0])
+    else:
+        fn = jax.jit(lambda th: batched_elbo._moments_kernel(
+            th, corners, metas, patch, backend)[0])
+    secs, _ = _time(lambda: fn(thetas), iters=iters)
+    return secs
+
+
+def run(backends_list, s, patch, max_iters, reps=1, seed=0):
+    metas, priors, thetas, x, bg, corners = _problem(s, patch, seed)
+    results = []
+    for name in backends_list:
+        obj = infer.make_objective(metas, priors, backend=name)
+        # gtol=0: nothing converges, both paths execute exactly
+        # max_iters iterations (+ the initial evaluation)
+        fit = lambda: newton.fit_batch(obj, thetas, x, bg, corners,
+                                       max_iters=max_iters, gtol=0.0)
+        secs, res = _time(fit, iters=reps)
+        t_render = _render_time(name, metas, thetas, corners, patch)
+        per_iter = secs / (max_iters + 1)    # +1: initial evaluation
+        results.append({
+            "backend": name,
+            "sources": s,
+            "patch": patch,
+            "n_img": int(x.shape[1]),
+            "newton_iters": max_iters,
+            "seconds_per_fit": secs,
+            "sources_per_sec": s / secs,
+            "iters_per_sec": s * max_iters / secs,
+            "seconds_per_render": t_render,
+            "renders_per_iteration": per_iter / t_render,
+        })
+    return results
+
+
+def report(args):
+    backends_list = [b.strip() for b in args.backends.split(",")]
+    results = run(backends_list, args.sources, args.patch, args.max_iters,
+                  reps=args.reps)
+    by = {r["backend"]: r for r in results}
+    old = by.get(args.baseline)
+    speedups = {
+        name: r["sources_per_sec"] / old["sources_per_sec"]
+        for name, r in by.items() if old and name != args.baseline}
+    return {
+        "benchmark": "newton_fused",
+        "metric": "sources/sec of the full trust-region Newton fit "
+                  "(fixed iteration count, gtol=0)",
+        "device": jax.devices()[0].platform,
+        "baseline": args.baseline,
+        "speedup_vs_baseline": speedups,
+        "results": results,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sources", type=int, default=256)
+    ap.add_argument("--patch", type=int, default=16)
+    ap.add_argument("--max-iters", type=int, default=4)
+    ap.add_argument("--reps", type=int, default=1)
+    ap.add_argument("--backends", default="jax,pallas_interpret")
+    ap.add_argument("--baseline", default="jax")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small problem; assert fused >= old sources/sec")
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.sources, args.patch, args.max_iters = 32, 16, 2
+
+    rep = report(args)
+    text = json.dumps(rep, indent=2)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    if args.smoke:
+        slow = [n for n, s in rep["speedup_vs_baseline"].items() if s < 1.0]
+        assert not slow, (
+            f"fused second-order path slower than {args.baseline}: "
+            f"{rep['speedup_vs_baseline']}")
+        print("SMOKE OK: fused >= baseline on sources/sec")
+    return rep
+
+
+def main_csv():
+    """CSV rows for benchmarks/run.py (small configuration)."""
+    rep = main(["--sources", "64", "--patch", "16", "--max-iters", "3"])
+    for r in rep["results"]:
+        common.emit(
+            f"newton_fused.{r['backend']}", r["seconds_per_fit"] * 1e6,
+            f"sources_per_sec={r['sources_per_sec']:.2f};"
+            f"renders_per_iter={r['renders_per_iteration']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,11 @@ dry-run sweep) are included when results/dryrun exists.
 """
 from __future__ import annotations
 
+try:
+    from benchmarks import common  # noqa: F401  (repo-root/src sys.path shim)
+except ImportError:                # script-path invocation
+    import common                  # noqa: F401
+
 import os
 import traceback
 
@@ -12,7 +17,8 @@ import traceback
 def main() -> None:
     from benchmarks import (fig3_batch_scaling, fig4_weak_scaling,
                             fig5_strong_scaling, fig6_sources_per_sec,
-                            scheduler_adaptive, table1_accuracy)
+                            newton_fused, scheduler_adaptive,
+                            table1_accuracy)
     suites = [
         ("table1", table1_accuracy.main),
         ("fig3", fig3_batch_scaling.main),
@@ -20,6 +26,7 @@ def main() -> None:
         ("fig5", fig5_strong_scaling.main),
         ("fig6", fig6_sources_per_sec.main),
         ("scheduler", scheduler_adaptive.main_csv),
+        ("newton_fused", newton_fused.main_csv),
     ]
     for name, fn in suites:
         try:

@@ -9,6 +9,11 @@ and scheduling overhead.
 """
 from __future__ import annotations
 
+try:
+    from benchmarks import common  # noqa: F401  (repo-root/src sys.path shim)
+except ImportError:                # script-path invocation
+    import common                  # noqa: F401
+
 from dataclasses import dataclass
 
 import numpy as np

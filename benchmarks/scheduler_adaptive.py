@@ -23,6 +23,11 @@ total time, and sources/sec for both paths.
 """
 from __future__ import annotations
 
+try:
+    from benchmarks import common  # noqa: F401  (repo-root/src sys.path shim)
+except ImportError:                # script-path invocation
+    import common                  # noqa: F401
+
 import argparse
 import json
 

@@ -7,6 +7,11 @@ four colors (≥30%); heuristic may win brightness/scale.
 """
 from __future__ import annotations
 
+try:
+    from benchmarks import common  # noqa: F401  (repo-root/src sys.path shim)
+except ImportError:                # script-path invocation
+    import common                  # noqa: F401
+
 import jax
 import jax.numpy as jnp
 

@@ -41,6 +41,10 @@ def main():
                     help="close the Dtree loop: replan each round from "
                          "measured Newton iteration counts "
                          "(docs/scheduling.md)")
+    ap.add_argument("--compact-every", type=int, default=None,
+                    help="active-set compaction period: gather "
+                         "unconverged sources into power-of-two buckets "
+                         "every K Newton iterations (docs/backends.md)")
     ap.add_argument("--out", default="/tmp/celeste_catalog.json")
     args = ap.parse_args()
 
@@ -64,13 +68,18 @@ def main():
 
     thetas, stats = infer.run_inference(
         sky.images, sky.metas, photo, priors, patch=24, batch=args.batch,
-        passes=args.passes, backend=args.backend, adaptive=args.adaptive)
+        passes=args.passes, backend=args.backend, adaptive=args.adaptive,
+        compact_every=args.compact_every)
     sched_mode = "adaptive" if stats.adaptive else "static"
     print(f"[{time.time()-t0:6.1f}s] optimization ({sched_mode}): "
           f"{stats.rounds} rounds, "
           f"{stats.converged}/{stats.total_sources} converged, "
           f"mean iters {stats.iters.mean():.1f}, "
           f"predicted imbalance {stats.predicted_imbalance:.1%}")
+    if args.compact_every:
+        print(f"         compaction: {len(stats.bucket_history)} buckets, "
+              f"padded-iteration bill {stats.newton_padded_iters} "
+              f"({stats.newton_seconds:.1f}s measured)")
     if len(stats.history):
         mi = stats.measured_imbalance
         print(f"         measured imbalance: first round {mi[0]:.1%}, "

@@ -23,12 +23,22 @@ moments with the differentiable jnp path while the fused
 ∂term/∂e1, ∂term/∂var in the same pass as the value — the ``[S,n,P,P]``
 forward intermediates never round-trip to HBM twice.
 
-``custom_vjp`` functions do not support forward-mode AD, so the dense
-27×27 Hessians that the trust-region Newton solver needs are produced by
-the pure-JAX per-source path (exact: sources are independent, and the jnp
-moments are the same math the kernels implement).  Value and gradient —
-the per-iteration accept test and step direction — go through the fused
-kernels.
+The Newton loop itself calls ``second_order`` — the fully-fused
+second-order evaluation.  Per iteration the moments are rendered **once**
+(kernel path) and the ``poisson_elbo_hess`` kernel emits, in the same
+pass as the value, the per-pixel gradient residuals *and* the 2×2
+curvature blocks ∂²term/∂(e1,var)².  The exact dense 27×27 Hessian is
+then assembled as the MXU-batched contraction  JᵀWJ + Σ g·∇²m,
+exploiting the AOAS moment factorization (flux scalars of θ[0:21] ×
+unit densities of θ[21:27]) with *manual* closed-form Gaussian
+derivatives for everything pixel-shaped — no pixel-space AD at all; see
+``_make_second_order``.  ``vmap(jax.hessian)`` by contrast re-renders
+the full patch pipeline ~27× per iteration under forward-over-reverse.
+
+``custom_vjp`` functions do not support forward-mode AD, which is why the
+standalone ``hessian`` entry (kept for the BatchedObjective API and
+parity tests) also routes through this assembly rather than
+``jax.hessian`` of the kernel value.
 
 Backends (registered with ``core/backends.py``):
 
@@ -44,7 +54,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import backends, elbo, newton
+from repro.core import backends, elbo, model, newton
 from repro.core.model import ImageMeta
 from repro.core.priors import Priors
 from repro.kernels.poisson_elbo import ops as elbo_ops
@@ -76,10 +86,14 @@ def _moments_jnp(thetas: jnp.ndarray, corners: jnp.ndarray, metas: ImageMeta,
 
 def _moments_kernel(thetas: jnp.ndarray, corners: jnp.ndarray,
                     metas: ImageMeta, patch: int, impl: str):
-    """Kernel path for (e1, var): pack → render × 2 → moment algebra.
+    """Kernel path for the patch moments: pack → render × 2 → algebra.
 
+    Returns ``(e1, var, g_star, g_gal, e2)``, each ``[S, n_img, P, P]``.
     The two ``render_gmm`` calls flatten (image, source) into the kernel
-    grid, so one launch renders every patch of the batch.
+    grid, so one launch renders every patch of the batch.  The raw unit
+    densities and the second moment ride along for the fused second-order
+    path, which rebuilds the curvature chain from them without a second
+    render.
     """
     s = thetas.shape[0]
     n = corners.shape[1]
@@ -114,7 +128,7 @@ def _moments_kernel(thetas: jnp.ndarray, corners: jnp.ndarray,
           + pi * l1[:, 1, :, None, None] * g_gal)
     e2 = ((1.0 - pi) * l2[:, 0, :, None, None] * g_star**2
           + pi * l2[:, 1, :, None, None] * g_gal**2)
-    return e1, jnp.maximum(e2 - e1 * e1, 0.0)
+    return e1, jnp.maximum(e2 - e1 * e1, 0.0), g_star, g_gal, e2
 
 
 # ---------------------------------------------------------------------------
@@ -127,7 +141,7 @@ def _make_kernel_pixel_term(metas: ImageMeta, impl: str):
 
     def _value(thetas, x, bg, corners):
         patch = x.shape[-1]
-        e1, var = _moments_kernel(thetas, corners, metas, patch, impl)
+        e1, var = _moments_kernel(thetas, corners, metas, patch, impl)[:2]
         return jnp.sum(elbo_ops.poisson_elbo(x, bg, e1, var, impl=impl),
                        axis=1)
 
@@ -154,13 +168,327 @@ def _make_kernel_pixel_term(metas: ImageMeta, impl: str):
     return pixel_term
 
 
-def _prior_terms(thetas: jnp.ndarray, priors: Priors) -> jnp.ndarray:
-    """KL to the priors + shape penalty, batched.  [S]."""
+def _prior_term(priors: Priors):
     def one(theta):
         v = elbo.unpack(theta)
         return elbo.kl_source(v, priors) + elbo.shape_penalty(v)
 
-    return jax.vmap(one)(thetas)
+    return one
+
+
+def _prior_terms(thetas: jnp.ndarray, priors: Priors) -> jnp.ndarray:
+    """KL to the priors + shape penalty, batched.  [S]."""
+    return jax.vmap(_prior_term(priors))(thetas)
+
+
+# ---------------------------------------------------------------------------
+# Fused second-order evaluation (value + gradient + exact dense Hessian)
+# ---------------------------------------------------------------------------
+
+# θ layout split (core/elbo.py): coordinates 0..20 drive π and the
+# lognormal flux moments (the "q" block — scalar algebra only), while
+# 21..26 (position + galaxy shape, "ψ") are the ONLY coordinates the
+# rendered unit densities depend on.  The patch moments are bilinear
+# between the two:
+#
+#     e1 = a·Gs + b·Gg          a = (1−π)·E[ℓ|star]   b = π·E[ℓ|gal]
+#     e2 = c·Gs² + d·Gg²        c = (1−π)·E[ℓ²|star]  d = π·E[ℓ²|gal]
+#
+# so exact second derivatives only ever need AD through the density
+# render for the 6 ψ directions; everything else is closed form.
+N_Q = 21
+N_PSI = elbo.THETA_DIM - N_Q
+
+
+def _flux_scalars(metas: ImageMeta):
+    """Per-source map θ_q [21] → [n_img, 4] of (a, b, c, d) per image."""
+    def q(theta_q):
+        v = elbo.unpack(jnp.concatenate(
+            [theta_q, jnp.zeros((N_PSI,), theta_q.dtype)]))
+        m1, m2 = elbo.flux_moments(v)                  # [2, B]
+        l1 = m1[:, metas.band]                         # [2, n]
+        l2 = m2[:, metas.band]
+        pi = v.prob_gal
+        return jnp.stack([(1.0 - pi) * l1[0], pi * l1[1],
+                          (1.0 - pi) * l2[0], pi * l2[1]], axis=-1)
+
+    return q
+
+
+def _component_params(metas: ImageMeta):
+    """Per-source map ψ [6] → per-image GMM component tables.
+
+    Returns ``(u_star [n, Ks, 6], u_gal [n, Kg, 6])`` with rows
+    ``u = (α, a, b, c, μx, μy)`` — amplitude, the three unique covariance
+    entries and the center of every mixture component.  This is the ONLY
+    ψ-dependent computation the second-order path differentiates with AD
+    (tiny ``jacfwd``s, no pixel grid); everything pixel-shaped uses the
+    closed-form Gaussian derivative formulas in ``_gmm_manual_sweep``.
+    """
+    def u_of(psi):
+        pos = psi[:2]
+        scale = jnp.exp(psi[2])
+        ratio = jax.nn.sigmoid(psi[3])
+        angle = psi[4]
+        fdev = jax.nn.sigmoid(psi[5])
+
+        def pack(amp, cov):
+            k = amp.shape[0]
+            return jnp.stack(
+                [amp, cov[:, 0, 0], cov[:, 1, 1], cov[:, 0, 1],
+                 jnp.broadcast_to(pos[0], (k,)),
+                 jnp.broadcast_to(pos[1], (k,))], axis=-1)
+
+        def per_image(meta):
+            s_amp, s_cov = model.star_mixture(meta.psf_amp, meta.psf_var)
+            g_amp, g_cov = model.galaxy_mixture(
+                scale, ratio, angle, fdev, meta.psf_amp, meta.psf_var)
+            return pack(s_amp, s_cov), pack(g_amp, g_cov)
+
+        return jax.vmap(per_image)(metas)
+
+    return u_of
+
+
+def _gmm_manual_sweep(u, ju, hu, dx, dy, cw):
+    """Closed-form first/second derivatives of a GMM density, contracted.
+
+    For N(u; p) = α/(2π√det) · exp(−½ dᵀΣ⁻¹d) with u = (α, a, b, c, μ)
+    the log-density L has short polynomial derivatives — ∂N/∂u = N·∇L and
+    ∂²N/∂u² = N(∇L∇Lᵀ + ∇²L) — so the density Jacobian and the
+    ``cw``-contracted density Hessian w.r.t. ψ are ONE vectorized pixel
+    pass plus component-level chain rule, instead of 36 forward-mode
+    re-renders (the formulas are pinned to autodiff of the log-density by
+    the oracle parity tests).
+
+    u: [S, n, K, 6]; ju: [S, n, K, 6, 6ψ]; hu: [S, n, K, 6, 6ψ, 6ψ];
+    dx, dy, cw: [S, n, PP].
+    Returns (jg [S, n, PP, 6ψ]  — per-pixel ∂G/∂ψ,
+             gpsi [S, 6ψ]       — Σ_p cw·∂G/∂ψ,
+             cg [S, 6ψ, 6ψ]     — Σ_p cw·∂²G/∂ψ²).
+    """
+    comp = lambda i: u[:, :, None, :, i]             # [S, n, 1, K]
+    al, a, b, c = comp(0), comp(1), comp(2), comp(3)
+    dxk = dx[..., None]                              # [S, n, PP, 1]
+    dyk = dy[..., None]
+    det = a * b - c * c
+    t = 1.0 / det
+    t2 = t * t
+    z1 = b * dxk - c * dyk
+    z2 = a * dyk - c * dxk
+    q = t * (dxk * z1 + dyk * z2)
+    dens = al * jnp.sqrt(t) * jnp.exp(-0.5 * q) / (2.0 * jnp.pi)
+    w = cw[..., None] * dens                         # [S, n, PP, K]
+
+    lu = jnp.stack([
+        1.0 / al + jnp.zeros_like(q),
+        0.5 * t * (b * (q - 1.0) - dyk * dyk),
+        0.5 * t * (a * (q - 1.0) - dxk * dxk),
+        t * (c * (1.0 - q) + dxk * dyk),
+        t * z1,
+        t * z2,
+    ], axis=-1)                                      # [S, n, PP, K, 6]
+
+    # per-pixel density Jacobian and its cw-contractions
+    jg = jnp.einsum("snpk,snpkv,snkvw->snpw", dens, lu, ju)
+    r1 = jnp.einsum("snpk,snpkv->snkv", w, lu)       # Σ_p cw ∂N/∂u
+    gpsi = jnp.einsum("snkv,snkvw->sw", r1, ju)
+
+    # M = Σ_p cw (∇L∇Lᵀ + ∇²L) N, assembled entrywise: the 15 unique
+    # ∇²L polynomials (validated against jax.hessian of the log-density)
+    m = jnp.einsum("snpk,snpkv,snpku->snkvu", w, lu, lu)
+
+    def red(expr):                                   # Σ_p w·expr → [S,n,K]
+        return jnp.sum(w * expr, axis=2)
+
+    e = {}
+    e[0, 0] = red(-1.0 / (al * al))
+    e[1, 1] = red(0.5 * t2 * (b * b * (1 - 2 * q) + 2 * b * dyk * dyk))
+    e[2, 2] = red(0.5 * t2 * (a * a * (1 - 2 * q) + 2 * a * dxk * dxk))
+    e[1, 2] = red(0.5 * t * (q - 1)
+                  + 0.5 * t2 * (a * b * (1 - 2 * q)
+                                + b * dxk * dxk + a * dyk * dyk))
+    e[1, 3] = red(t2 * (b * c * (2 * q - 1) - b * dxk * dyk
+                        - c * dyk * dyk))
+    e[2, 3] = red(t2 * (a * c * (2 * q - 1) - a * dxk * dyk
+                        - c * dxk * dxk))
+    e[3, 3] = red(t * (1 - q) + t2 * (2 * c * c * (1 - 2 * q)
+                                      + 4 * c * dxk * dyk))
+    e[4, 4] = red(-t * b)
+    e[5, 5] = red(-t * a)
+    e[4, 5] = red(t * c)
+    e[1, 4] = red(-t2 * b * z1)
+    e[2, 4] = red(-t2 * a * z1 + t * dxk)
+    e[3, 4] = red(2 * t2 * c * z1 - t * dyk)
+    e[1, 5] = red(-t2 * b * z2 + t * dyk)
+    e[2, 5] = red(-t2 * a * z2)
+    e[3, 5] = red(2 * t2 * c * z2 - t * dxk)
+    zero = jnp.zeros_like(e[0, 0])
+    rows = [[e.get((min(i, j), max(i, j)), zero) for j in range(6)]
+            for i in range(6)]
+    luu = jnp.stack([jnp.stack(r, axis=-1) for r in rows], axis=-2)
+    m = m + luu                                      # [S, n, K, 6, 6]
+
+    cg = (jnp.einsum("snkvw,snkvu,snkux->swx", ju, m, ju)
+          + jnp.einsum("snkv,snkvwx->swx", r1, hu))
+    return jg, gpsi, cg
+
+
+def _make_second_order(metas: ImageMeta, priors: Priors, impl: str):
+    """One-render-per-iteration (value, grad, Hessian) for the Newton loop.
+
+    The chain rule for  pixel(θ) = Σ_k term(m_k(θ))  splits the exact
+    Hessian into a Gauss-Newton-like sandwich plus moment-curvature
+    corrections:
+
+        H = JᵀWJ + Σ_k g_k · ∇²m_k
+
+    with the per-pixel residuals g and 2×2 curvature blocks W emitted by
+    the fused ``poisson_elbo_hess`` kernel in the same pass as the value.
+    Exploiting the bilinear moment factorization (module comment above),
+    NOTHING pixel-shaped is differentiated with AD: the density
+    Jacobians and the residual-contracted density curvature come from
+    the closed-form Gaussian derivative formulas in
+    ``_gmm_manual_sweep`` (one vectorized pixel pass), chained through
+    tiny ``jacfwd``s of the component-parameter and flux-scalar algebra.
+    ``vmap(jax.hessian)`` by contrast pays 27 forward-over-reverse
+    passes through the whole patch pipeline.  Every pixel contraction is
+    an MXU-batched einsum.  The ψ-gradient and q-gradient fall out of
+    the same aggregates, so value, gradient and Hessian share one
+    evaluation.
+    """
+    prior_one = _prior_term(priors)
+    qfn = _flux_scalars(metas)
+
+    def second_order(thetas, x, bg, corners):
+        patch = x.shape[-1]
+        s, d_dim = thetas.shape
+        n = corners.shape[1]
+
+        # ONE kernel render of the moments, then the fused second-order
+        # reduction: value + residuals g and curvature blocks W per pixel.
+        e1, var, gs, gg, e2 = _moments_kernel(
+            thetas, corners, metas, patch, impl)
+        val_pix, g1, g2, h11, h12 = elbo_ops.poisson_elbo_hess(
+            x, bg, e1, var, impl=impl)
+
+        # Change of basis (e1, var) → (e1, e2) with var = relu(e2 − e1²):
+        # keeps ∂²/∂e2² ≡ 0, so W stays a 2×2 block with one zero entry.
+        gate = (e2 - e1 * e1 > 0.0).astype(e1.dtype)
+        g2g = g2 * gate
+        gh1 = g1 - 2.0 * e1 * g2g
+        gh2 = g2g
+        w11 = h11 - 4.0 * e1 * gate * h12 - 2.0 * g2g
+        w12 = gate * h12
+
+        # Flux-scalar block: primal + Jacobian + Hessian, all tiny.
+        tq = thetas[:, :N_Q]
+        qv = jax.vmap(qfn)(tq)                            # [S, n, 4]
+        jq = jax.vmap(jax.jacfwd(qfn))(tq)                # [S, n, 4, 21]
+        hq = jax.vmap(jax.jacfwd(jax.jacfwd(qfn)))(tq)    # [S, n, 4, 21, 21]
+        av, bv, cv, dv = (qv[..., i] for i in range(4))   # [S, n] each
+
+        # Density sweep, fully closed-form: component parameter tables +
+        # their (tiny) ψ-Jacobians/Hessians via jacfwd, then one
+        # vectorized pixel pass through the manual Gaussian derivative
+        # formulas — density Jacobians, the exact ψ-gradient and the
+        # residual-contracted density curvature Σ_p (cs·∇²Gs + cg·∇²Gg)
+        # without a single pixel-space AD tangent.
+        img = lambda t: t[:, :, None, None]               # [S,n] → [S,n,1,1]
+        cs = gh1 * img(av) + 2.0 * gh2 * img(cv) * gs
+        cg = gh1 * img(bv) + 2.0 * gh2 * img(dv) * gg
+
+        ufn = _component_params(metas)
+        psis = thetas[:, N_Q:]
+        u_s, u_g = jax.vmap(ufn)(psis)
+        ju_s, ju_g = jax.vmap(jax.jacfwd(ufn))(psis)
+        hu_s, hu_g = jax.vmap(jax.jacfwd(jax.jacfwd(ufn)))(psis)
+
+        # Pixel-flattened views: fields [S, n, PP], tangents [S, n, PP, 6].
+        pp = patch * patch
+        fl = lambda t: t.reshape(s, n, pp)
+        gs_r, gg_r = fl(gs), fl(gg)
+        gh1_r, gh2_r, w11_r, w12_r = map(fl, (gh1, gh2, w11, w12))
+
+        # pixel offsets from the source center (patch grid is separable)
+        grid = jnp.arange(patch, dtype=jnp.float32) + 0.5
+        rows = (corners[:, :, 0, None] + metas.origin[None, :, 0, None]
+                + grid - psis[:, None, 0, None])          # [S, n, P]
+        cols = (corners[:, :, 1, None] + metas.origin[None, :, 1, None]
+                + grid - psis[:, None, 1, None])
+        shape4 = (s, n, patch, patch)
+        dx = jnp.broadcast_to(rows[:, :, :, None], shape4).reshape(s, n, pp)
+        dy = jnp.broadcast_to(cols[:, :, None, :], shape4).reshape(s, n, pp)
+
+        dgs_r, gpsi_s, curv_s = _gmm_manual_sweep(
+            u_s, ju_s, hu_s, dx, dy, fl(cs))
+        dgg_r, gpsi_g, curv_g = _gmm_manual_sweep(
+            u_g, ju_g, hu_g, dx, dy, fl(cg))
+        gpsi = gpsi_s + gpsi_g
+        curv = curv_s + curv_g
+
+        # Moment Jacobians per pixel, q and ψ blocks:
+        #   ∂e1/∂q = Gs·Ja + Gg·Jb           ∂e1/∂ψ = a·dGs + b·dGg
+        #   ∂e2/∂q = Gs²·Jc + Gg²·Jd         ∂e2/∂ψ = 2cGs·dGs + 2dGg·dGg
+        j1q = (gs_r[..., None] * jq[:, :, None, 0]
+               + gg_r[..., None] * jq[:, :, None, 1])      # [S,n,PP,21]
+        j2q = (gs_r[..., None] ** 2 * jq[:, :, None, 2]
+               + gg_r[..., None] ** 2 * jq[:, :, None, 3])
+        j1p = img(av) * dgs_r + img(bv) * dgg_r            # [S,n,PP,6]
+        j2p = 2.0 * (cv[:, :, None] * gs_r)[..., None] * dgs_r \
+            + 2.0 * (dv[:, :, None] * gg_r)[..., None] * dgg_r
+
+        # JᵀWJ, blockwise (MXU-batched contractions over all pixels).
+        def sandwich(ja, jb):
+            cross = jnp.einsum("snkd,snk,snke->sde", ja, w12_r, jb)
+            return (jnp.einsum("snkd,snk,snke->sde", ja, w11_r, ja)
+                    + cross + jnp.swapaxes(cross, -1, -2))
+
+        def sandwich_off(ja1, ja2, jb1, jb2):
+            return (jnp.einsum("snkd,snk,snke->sde", ja1, w11_r, jb1)
+                    + jnp.einsum("snkd,snk,snke->sde", ja1, w12_r, jb2)
+                    + jnp.einsum("snkd,snk,snke->sde", ja2, w12_r, jb1))
+
+        h_qq = sandwich(j1q, j2q)
+        h_pp = sandwich(j1p, j2p)
+        h_qp = sandwich_off(j1q, j2q, j1p, j2p)
+
+        # Moment-curvature corrections Σ_k ĝ·∇²m beyond the density part:
+        # q-block scalars (per-image aggregates against ∇²(a,b,c,d)) ...
+        qagg = jnp.stack([
+            jnp.einsum("snk,snk->sn", gh1_r, gs_r),
+            jnp.einsum("snk,snk->sn", gh1_r, gg_r),
+            jnp.einsum("snk,snk->sn", gh2_r, gs_r**2),
+            jnp.einsum("snk,snk->sn", gh2_r, gg_r**2)], axis=-1)  # [S,n,4]
+        h_qq = h_qq + jnp.einsum("snq,snqde->sde", qagg, hq)
+        # ... the bilinear q↔ψ cross terms ...
+        vagg = jnp.stack([
+            jnp.einsum("snk,snkp->snp", gh1_r, dgs_r),
+            jnp.einsum("snk,snkp->snp", gh1_r, dgg_r),
+            jnp.einsum("snk,snkp->snp", 2.0 * gh2_r * gs_r, dgs_r),
+            jnp.einsum("snk,snkp->snp", 2.0 * gh2_r * gg_r, dgg_r)],
+            axis=2)                                       # [S,n,4,6]
+        h_qp = h_qp + jnp.einsum("snqd,snqp->sdp", jq, vagg)
+        # ... and the ψ-block: e2's dG⊗dG terms + contracted ∇²G.
+        h_pp = (h_pp
+                + jnp.einsum("snk,snkp,snkq->spq",
+                             2.0 * gh2_r * cv[:, :, None], dgs_r, dgs_r)
+                + jnp.einsum("snk,snkp,snkq->spq",
+                             2.0 * gh2_r * dv[:, :, None], dgg_r, dgg_r)
+                + 0.5 * (curv + jnp.swapaxes(curv, -1, -2)))
+
+        hess = jnp.concatenate([
+            jnp.concatenate([h_qq, h_qp], axis=-1),
+            jnp.concatenate([jnp.swapaxes(h_qp, -1, -2), h_pp], axis=-1),
+        ], axis=-2)
+        grad = jnp.concatenate(
+            [jnp.einsum("snq,snqd->sd", qagg, jq), gpsi], axis=-1)
+
+        pv, pg = jax.vmap(jax.value_and_grad(prior_one))(thetas)
+        ph = jax.vmap(jax.hessian(prior_one))(thetas)
+        return (jnp.sum(val_pix, axis=1) - pv, grad - pg, hess - ph)
+
+    return second_order
 
 
 # ---------------------------------------------------------------------------
@@ -197,13 +525,18 @@ def make_batched_objective(metas: ImageMeta, priors: Priors,
         (grad,) = pullback(jnp.ones_like(val))
         return val, grad
 
-    # custom_vjp blocks forward-mode AD; dense Hessians use the pure-JAX
-    # per-source path (identical math — see module docstring).
-    hessian = jax.vmap(jax.hessian(per_source))
+    # The fully-fused second-order path: one moment render per call, the
+    # poisson_elbo_hess kernel for residuals + curvature, JᵀWJ + Σ g·∇²m
+    # assembly for the exact dense Hessian (see _make_second_order).
+    second_order = _make_second_order(metas, priors, backend)
+
+    def hessian(thetas, x, bg, corners):
+        return second_order(thetas, x, bg, corners)[2]
 
     return newton.BatchedObjective(value=value,
                                    value_and_grad=value_and_grad,
-                                   hessian=hessian)
+                                   hessian=hessian,
+                                   second_order=second_order)
 
 
 for _name in ("jax", "pallas", "pallas_interpret", "ref"):

@@ -23,6 +23,7 @@ re-packed for the next round.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass, field as dataclass_field
 from typing import Any
 
@@ -48,6 +49,12 @@ class InferenceStats:
                                 # adaptive: mean per-round prediction
     adaptive: bool = False
     history: list = dataclass_field(default_factory=list)  # [RoundRecord]
+    # [newton.BucketRecord]: one entry per Newton segment (per shard for
+    # the uncompacted path, per compaction bucket otherwise) — per-bucket
+    # size, padded width, iterations and measured wall time, the telemetry
+    # the adaptive scheduler's cost model consumes for real post-
+    # compaction shard speeds
+    bucket_history: list = dataclass_field(default_factory=list)
 
     @property
     def measured_imbalance(self) -> np.ndarray:
@@ -58,6 +65,20 @@ class InferenceStats:
     @property
     def predicted_imbalance_per_round(self) -> np.ndarray:
         return np.array([r.predicted_imbalance for r in self.history])
+
+    @property
+    def newton_padded_iters(self) -> int:
+        """Total SPMD Newton cost in iteration×bucket-size units: every
+        segment costs its padded width times the iterations its slowest
+        live member ran.  Active-set compaction shrinks this; without it
+        every round bills the full batch width for its slowest source."""
+        return int(sum(r.padded * r.iters for r in self.bucket_history))
+
+    @property
+    def newton_seconds(self) -> float:
+        """Measured wall time of the Newton segments (compile excluded
+        only insofar as jit caching allows; treat as a relative signal)."""
+        return float(sum(r.seconds for r in self.bucket_history))
 
 
 @functools.partial(jax.jit, static_argnames=("patch",))
@@ -111,6 +132,7 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
                   backend: str | None = None,
                   adaptive: bool = False,
                   scheduler: DynamicScheduler | None = None,
+                  compact_every: int | None = None,
                   progress: Any = None):
     """Run Celeste VI over a full field.  Returns (thetas [S, D], stats).
 
@@ -141,11 +163,26 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
     independent); only the round composition — and hence the load
     balance — changes.  Pass ``scheduler`` to carry speeds/history across
     calls; round telemetry lands in ``stats.history``.
+
+    ``compact_every`` (single-shard runs only — ``mesh`` SPMD keeps rigid
+    per-shard shapes) turns on active-set compaction: the Newton loop
+    runs in segments of that many iterations and gathers still-unconverged
+    sources into power-of-two buckets between segments
+    (``newton.fit_batch_compacted``), so a round stops billing the full
+    batch width for its slowest member.  Per-bucket size/iteration/wall
+    telemetry lands in ``stats.bucket_history`` (also populated, one
+    record per shard-round, when compaction is off — that is the
+    iteration×bucket-size accounting baseline).
     """
     field = int(images.shape[-1])
     if patch > field:
         raise ValueError(
             f"patch size {patch} exceeds the image field {field}")
+    if compact_every is not None and mesh is not None:
+        raise ValueError(
+            "compact_every requires mesh=None: SPMD shard shapes are "
+            "rigid, so active-set compaction is a single-shard "
+            "optimization (see docs/backends.md)")
     s = int(init_catalog.pos.shape[0])
     num_shards = 1 if mesh is None else int(mesh.shape[data_axis])
 
@@ -217,6 +254,7 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
     values = np.zeros(s, np.float64)
     conv = np.zeros(s, bool)
     history: list[RoundRecord] = []
+    bucket_records: list[newton.BucketRecord] = []
     rounds_done = 0
     rounds_per_pass = int(np.ceil(s / (num_shards * batch)))
 
@@ -226,6 +264,7 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
         nonlocal thetas
         flat = idx.reshape(-1)
         xb, bgb, cb, tb, act = _gather_batch(flat, x, bg, corners, thetas)
+        t0 = time.perf_counter()
         if mesh is not None:
             shp = (num_shards, batch)
             xb, bgb, cb, tb, act = jax.tree.map(
@@ -235,14 +274,46 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
             res = jax.tree.map(
                 lambda a: a.reshape((num_shards * batch,) + a.shape[2:]),
                 res)
+            res = jax.block_until_ready(res)
+            dt = time.perf_counter() - t0
+            # one record per shard: each shard pays its padded batch width
+            # times its slowest member (wall time is whole-round — per-
+            # shard wall is unobservable under single-controller SPMD)
+            it_sh = np.asarray(res.iters).reshape(num_shards, batch)
+            act_sh = np.asarray(act).reshape(num_shards, batch)
+            for r in range(num_shards):
+                bucket_records.append(newton.BucketRecord(
+                    size=int(act_sh[r].sum()), padded=batch,
+                    iters=int(it_sh[r].max(initial=0)),
+                    seconds=dt / num_shards))
+        elif compact_every:
+            res, recs = newton.fit_batch_compacted(
+                objective, tb, xb, bgb, cb, active=act,
+                max_iters=max_iters, gtol=gtol,
+                compact_every=compact_every)
+            dt = time.perf_counter() - t0
+            bucket_records.extend(recs)
         else:
-            res = fit(tb, xb, bgb, cb, act)
+            res = jax.block_until_ready(fit(tb, xb, bgb, cb, act))
+            dt = time.perf_counter() - t0
+            bucket_records.append(newton.BucketRecord(
+                size=int(np.asarray(act).sum()), padded=batch,
+                iters=int(np.asarray(res.iters).max(initial=0)),
+                seconds=dt))
         tgt, shard_of, sel = decompose.round_tasks(idx)
         thetas = thetas.at[tgt].set(res.theta[sel])
         iters[tgt] += np.asarray(res.iters)[sel]
         values[tgt] = np.asarray(res.value)[sel]
         conv[tgt] = np.asarray(res.converged)[sel]
         measured = np.asarray(res.iters)[sel].astype(np.float64)
+        if compact_every and mesh is None:
+            # bill wall time instead of raw iteration counts so the
+            # adaptive cost model / shard-speed estimate reflects the
+            # real post-compaction throughput (converged sources stop
+            # costing mid-round)
+            tot = measured.sum()
+            if tot > 0:
+                measured = measured * (dt / tot)
         return tgt, measured, shard_of
 
     def measured_record(shard_of, measured, predicted):
@@ -306,7 +377,8 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
     stats = InferenceStats(
         rounds=rounds_done, total_sources=s, converged=int(conv.sum()),
         iters=iters, elbo_values=values,
-        predicted_imbalance=pred_imb, adaptive=adaptive, history=history)
+        predicted_imbalance=pred_imb, adaptive=adaptive, history=history,
+        bucket_history=bucket_records)
     return thetas, stats
 
 

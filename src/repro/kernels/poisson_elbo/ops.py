@@ -6,9 +6,9 @@ import functools
 import jax
 
 from repro.kernels.poisson_elbo.poisson_elbo import (
-    poisson_elbo_grad_pallas, poisson_elbo_pallas)
+    poisson_elbo_grad_pallas, poisson_elbo_hess_pallas, poisson_elbo_pallas)
 from repro.kernels.poisson_elbo.ref import (
-    poisson_elbo_grad_ref, poisson_elbo_ref)
+    poisson_elbo_grad_ref, poisson_elbo_hess_ref, poisson_elbo_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))
@@ -38,3 +38,24 @@ def poisson_elbo_grad(x, bg, e1, var, impl: str = "pallas_interpret"):
         var.reshape(flat.shape), interpret=(impl == "pallas_interpret"))
     return (val.reshape(x.shape[:-2]), de1.reshape(x.shape),
             dvar.reshape(x.shape))
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def poisson_elbo_hess(x, bg, e1, var, impl: str = "pallas_interpret"):
+    """Fused value + gradient residuals + per-pixel 2×2 curvature blocks.
+
+    Returns ``(value [...], d_e1, d_var, h_e1e1, h_e1var)`` with every
+    pixel array shaped ``[..., P, P]`` (∂²term/∂var² is identically zero
+    and therefore not emitted); leading batch dims are flattened into the
+    kernel grid exactly like ``poisson_elbo``.  This is the single-pass
+    second-order evaluation the fused Newton path consumes.
+    """
+    if impl == "ref":
+        return poisson_elbo_hess_ref(x, bg, e1, var)
+    flat = x.reshape((-1,) + x.shape[-2:])
+    out = poisson_elbo_hess_pallas(
+        flat, bg.reshape(flat.shape), e1.reshape(flat.shape),
+        var.reshape(flat.shape), interpret=(impl == "pallas_interpret"))
+    val, pix = out[0], out[1:]
+    return (val.reshape(x.shape[:-2]),) + tuple(
+        a.reshape(x.shape) for a in pix)

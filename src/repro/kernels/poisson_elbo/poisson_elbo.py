@@ -5,9 +5,13 @@ correction, deviance normalization) with the patch reduction so the
 [S, P, P] intermediates never round-trip to HBM — on Cori this loop was
 the hand-tuned inner kernel of Celeste's objective (paper §III-B).
 
-Grid: (sources,).  Each program loads its patch block (pixels padded to
-the 128-lane minor dim with a validity mask), computes the fused term on
-the VPU, reduces, and writes one scalar.
+Grid: (ceil(S / block),).  Each program loads a *block* of source
+patches (pixels padded to the 128-lane minor dim with a validity mask,
+sources zero-padded to a block multiple), computes the fused term on the
+VPU and reduces one scalar per source.  Blocking sources keeps each
+program's working set a few hundred KB of VMEM while cutting the grid —
+and with it the Pallas interpreter's per-program overhead on CPU — by
+``block``×.
 """
 from __future__ import annotations
 
@@ -18,42 +22,57 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 EPS = 1e-6
+BLOCK = 32
+
+
+def _block(s: int) -> int:
+    return min(s, BLOCK)
+
+
+def _pad_inputs(arrs, patch: int, p_pad: int, block: int):
+    s = arrs[0].shape[0]
+    s_pad = -(-s // block) * block
+    return [jnp.pad(a, ((0, s_pad - s), (0, 0), (0, p_pad - patch)))
+            for a in arrs], s_pad
+
+
+def _lane_mask(block: int, patch: int, p_pad: int):
+    ci = jax.lax.broadcasted_iota(jnp.int32, (block, patch, p_pad), 2)
+    return ci < patch
 
 
 def _elbo_kernel(x_ref, bg_ref, e1_ref, var_ref, out_ref, *, patch: int):
-    p_pad = x_ref.shape[-1]
-    x = x_ref[0]
-    bg = bg_ref[0]
-    e1 = e1_ref[0]
-    var = var_ref[0]
+    b, _, p_pad = x_ref.shape
+    x = x_ref[...]
+    bg = bg_ref[...]
+    e1 = e1_ref[...]
+    var = var_ref[...]
     f = jnp.maximum(bg + e1, EPS)
     logf = jnp.log(f) - var / (2.0 * f * f)
     term = x * (logf - jnp.log(jnp.maximum(x, 1.0))) - (f - x)
-    # mask lane padding
-    ci = jax.lax.broadcasted_iota(jnp.int32, (patch, p_pad), 1)
-    term = jnp.where(ci < patch, term, 0.0)
-    out_ref[0, 0] = jnp.sum(term)
+    term = jnp.where(_lane_mask(b, patch, p_pad), term, 0.0)
+    out_ref[:, 0] = jnp.sum(term, axis=(1, 2))
 
 
 def poisson_elbo_pallas(x, bg, e1, var, interpret: bool = False):
     """x/bg/e1/var: [S, P, P] → [S] patch ELBO sums."""
     s, patch, _ = x.shape
     p_pad = max(128, -(-patch // 128) * 128)
-
-    def pad(a):
-        return jnp.pad(a, ((0, 0), (0, 0), (0, p_pad - patch)))
+    blk = _block(s)
+    (xp, bgp, e1p, varp), s_pad = _pad_inputs(
+        [x, bg, e1, var], patch, p_pad, blk)
 
     kernel = functools.partial(_elbo_kernel, patch=patch)
-    spec = pl.BlockSpec((1, patch, p_pad), lambda i: (i, 0, 0))
+    spec = pl.BlockSpec((blk, patch, p_pad), lambda i: (i, 0, 0))
     out = pl.pallas_call(
         kernel,
-        grid=(s,),
+        grid=(s_pad // blk,),
         in_specs=[spec, spec, spec, spec],
-        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((s, 1), jnp.float32),
+        out_specs=pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_pad, 1), jnp.float32),
         interpret=interpret,
-    )(pad(x), pad(bg), pad(e1), pad(var))
-    return out[:, 0]
+    )(xp, bgp, e1p, varp)
+    return out[:s, 0]
 
 
 def _elbo_grad_kernel(x_ref, bg_ref, e1_ref, var_ref, out_ref, de1_ref,
@@ -61,11 +80,11 @@ def _elbo_grad_kernel(x_ref, bg_ref, e1_ref, var_ref, out_ref, de1_ref,
     """Sibling of ``_elbo_kernel`` that also emits the per-pixel gradient
     residuals ∂term/∂e1 and ∂term/∂var, fused with the value reduction so
     the forward intermediates (f, f², f³) never leave VMEM."""
-    p_pad = x_ref.shape[-1]
-    x = x_ref[0]
-    bg = bg_ref[0]
-    e1 = e1_ref[0]
-    var = var_ref[0]
+    b, _, p_pad = x_ref.shape
+    x = x_ref[...]
+    bg = bg_ref[...]
+    e1 = e1_ref[...]
+    var = var_ref[...]
     raw = bg + e1
     f = jnp.maximum(raw, EPS)
     f2 = f * f
@@ -75,11 +94,10 @@ def _elbo_grad_kernel(x_ref, bg_ref, e1_ref, var_ref, out_ref, de1_ref,
     d_f = x * (1.0 / f + var / (f2 * f)) - 1.0
     d_e1 = jnp.where(raw > EPS, d_f, 0.0)
     d_var = -x / (2.0 * f2)
-    ci = jax.lax.broadcasted_iota(jnp.int32, (patch, p_pad), 1)
-    valid = ci < patch
-    out_ref[0, 0] = jnp.sum(jnp.where(valid, term, 0.0))
-    de1_ref[0] = jnp.where(valid, d_e1, 0.0)
-    dvar_ref[0] = jnp.where(valid, d_var, 0.0)
+    valid = _lane_mask(b, patch, p_pad)
+    out_ref[:, 0] = jnp.sum(jnp.where(valid, term, 0.0), axis=(1, 2))
+    de1_ref[...] = jnp.where(valid, d_e1, 0.0)
+    dvar_ref[...] = jnp.where(valid, d_var, 0.0)
 
 
 def poisson_elbo_grad_pallas(x, bg, e1, var, interpret: bool = False):
@@ -91,22 +109,80 @@ def poisson_elbo_grad_pallas(x, bg, e1, var, interpret: bool = False):
     """
     s, patch, _ = x.shape
     p_pad = max(128, -(-patch // 128) * 128)
-
-    def pad(a):
-        return jnp.pad(a, ((0, 0), (0, 0), (0, p_pad - patch)))
+    blk = _block(s)
+    (xp, bgp, e1p, varp), s_pad = _pad_inputs(
+        [x, bg, e1, var], patch, p_pad, blk)
 
     kernel = functools.partial(_elbo_grad_kernel, patch=patch)
-    spec = pl.BlockSpec((1, patch, p_pad), lambda i: (i, 0, 0))
+    spec = pl.BlockSpec((blk, patch, p_pad), lambda i: (i, 0, 0))
+    pix = jax.ShapeDtypeStruct((s_pad, patch, p_pad), jnp.float32)
     val, de1, dvar = pl.pallas_call(
         kernel,
-        grid=(s,),
+        grid=(s_pad // blk,),
         in_specs=[spec, spec, spec, spec],
-        out_specs=[pl.BlockSpec((1, 1), lambda i: (i, 0)), spec, spec],
-        out_shape=[
-            jax.ShapeDtypeStruct((s, 1), jnp.float32),
-            jax.ShapeDtypeStruct((s, patch, p_pad), jnp.float32),
-            jax.ShapeDtypeStruct((s, patch, p_pad), jnp.float32),
-        ],
+        out_specs=[pl.BlockSpec((blk, 1), lambda i: (i, 0)), spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((s_pad, 1), jnp.float32), pix, pix],
         interpret=interpret,
-    )(pad(x), pad(bg), pad(e1), pad(var))
-    return val[:, 0], de1[:, :, :patch], dvar[:, :, :patch]
+    )(xp, bgp, e1p, varp)
+    return val[:s, 0], de1[:s, :, :patch], dvar[:s, :, :patch]
+
+
+def _elbo_hess_kernel(x_ref, bg_ref, e1_ref, var_ref, out_ref, de1_ref,
+                      dvar_ref, h11_ref, h12_ref, *, patch: int):
+    """Second-order sibling of ``_elbo_kernel``: one pass over the patch
+    emits the value reduction, the gradient residuals ∂term/∂e1, ∂term/∂var
+    and the per-pixel 2×2 curvature block (h11 = ∂²/∂e1²,
+    h12 = ∂²/∂e1∂var; ∂²/∂var² ≡ 0 — term is linear in var).  All powers
+    of f are shared in VMEM, so curvature costs a handful of extra VPU ops
+    on top of the gradient kernel instead of a separate pipeline pass."""
+    b, _, p_pad = x_ref.shape
+    x = x_ref[...]
+    bg = bg_ref[...]
+    e1 = e1_ref[...]
+    var = var_ref[...]
+    raw = bg + e1
+    f = jnp.maximum(raw, EPS)
+    f2 = f * f
+    f3 = f2 * f
+    logf = jnp.log(f) - var / (2.0 * f2)
+    term = x * (logf - jnp.log(jnp.maximum(x, 1.0))) - (f - x)
+    d_f = x * (1.0 / f + var / f3) - 1.0
+    valid = _lane_mask(b, patch, p_pad)
+    gate = (raw > EPS) & valid
+    out_ref[:, 0] = jnp.sum(jnp.where(valid, term, 0.0), axis=(1, 2))
+    de1_ref[...] = jnp.where(gate, d_f, 0.0)
+    dvar_ref[...] = jnp.where(valid, -x / (2.0 * f2), 0.0)
+    h11_ref[...] = jnp.where(gate, -x * (1.0 / f2 + 3.0 * var / (f2 * f2)),
+                             0.0)
+    h12_ref[...] = jnp.where(gate, x / f3, 0.0)
+
+
+def poisson_elbo_hess_pallas(x, bg, e1, var, interpret: bool = False):
+    """x/bg/e1/var: [S, P, P] → (value [S], d_e1, d_var, h_e1e1, h_e1var).
+
+    The pixel arrays are the residuals and curvature blocks that
+    ``core/batched_elbo.second_order`` contracts with the moment Jacobians
+    (JᵀWJ + Σ g·∇²m) to assemble the exact dense Hessian without ever
+    re-rendering the patch pipeline under forward-over-reverse AD.
+    """
+    s, patch, _ = x.shape
+    p_pad = max(128, -(-patch // 128) * 128)
+    blk = _block(s)
+    (xp, bgp, e1p, varp), s_pad = _pad_inputs(
+        [x, bg, e1, var], patch, p_pad, blk)
+
+    kernel = functools.partial(_elbo_hess_kernel, patch=patch)
+    spec = pl.BlockSpec((blk, patch, p_pad), lambda i: (i, 0, 0))
+    pix = jax.ShapeDtypeStruct((s_pad, patch, p_pad), jnp.float32)
+    val, de1, dvar, h11, h12 = pl.pallas_call(
+        kernel,
+        grid=(s_pad // blk,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+                   spec, spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((s_pad, 1), jnp.float32),
+                   pix, pix, pix, pix],
+        interpret=interpret,
+    )(xp, bgp, e1p, varp)
+    crop = lambda a: a[:s, :, :patch]
+    return (val[:s, 0], crop(de1), crop(dvar), crop(h11), crop(h12))

@@ -41,3 +41,32 @@ def poisson_elbo_grad_ref(x, bg, e1, var):
     d_e1 = jnp.where(raw > EPS, d_f, 0.0)
     d_var = -x / (2.0 * f2)
     return jnp.sum(term, axis=(-2, -1)), d_e1, d_var
+
+
+def poisson_elbo_hess_ref(x, bg, e1, var):
+    """Oracle for the second-order kernel: value, gradient residuals and
+    the per-pixel 2×2 curvature block of the pixel term in (e1, var).
+
+    Returns ``(value [...], d_e1, d_var, h_e1e1, h_e1var)``, all pixel
+    arrays ``[..., P, P]``.  The block is
+
+        [h_e1e1  h_e1var]       h_e1e1  = ∂²term/∂e1²
+        [h_e1var    0   ]  with h_e1var = ∂²term/∂e1∂var,  ∂²term/∂var² ≡ 0
+
+    since term is linear in var.  Everything that flows through f is gated
+    by the EPS clamp (f constant where bg + e1 ≤ EPS), matching autodiff
+    of the value oracle exactly.
+    """
+    raw = bg + e1
+    f = jnp.maximum(raw, EPS)
+    f2 = f * f
+    f3 = f2 * f
+    logf = jnp.log(f) - var / (2.0 * f2)
+    term = x * (logf - jnp.log(jnp.maximum(x, 1.0))) - (f - x)
+    live = raw > EPS
+    d_f = x * (1.0 / f + var / f3) - 1.0
+    d_e1 = jnp.where(live, d_f, 0.0)
+    d_var = -x / (2.0 * f2)
+    h_e1e1 = jnp.where(live, -x * (1.0 / f2 + 3.0 * var / (f2 * f2)), 0.0)
+    h_e1var = jnp.where(live, x / f3, 0.0)
+    return jnp.sum(term, axis=(-2, -1)), d_e1, d_var, h_e1e1, h_e1var

@@ -67,6 +67,54 @@ def test_uncertainties_calibrated_order_of_magnitude(fitted):
     assert np.median(ratio) < 10.0
 
 
+def test_compaction_catalog_parity_and_accounting():
+    """Active-set compaction must not change the fitted catalog, and its
+    iteration×bucket-size accounting must land in stats.bucket_history
+    (never above the uncompacted everyone-waits baseline)."""
+    priors = default_priors()
+    sky = synthetic.sample_sky(jax.random.PRNGKey(9), num_sources=6,
+                               field=96, priors=priors)
+    cand = sky.truth.pos + 0.4 * jax.random.normal(
+        jax.random.PRNGKey(10), sky.truth.pos.shape)
+    est = heuristic.measure_catalog(sky.images, sky.metas, cand)
+    kw = dict(patch=16, batch=6, backend="ref")
+    t0, s0 = infer.run_inference(sky.images, sky.metas, est, priors, **kw)
+    t1, s1 = infer.run_inference(sky.images, sky.metas, est, priors,
+                                 compact_every=5, **kw)
+    c0 = infer.infer_catalog(t0)
+    c1 = infer.infer_catalog(t1)
+    np.testing.assert_allclose(np.asarray(c1.pos), np.asarray(c0.pos),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(c1.ref_flux),
+                               np.asarray(c0.ref_flux), rtol=1e-3,
+                               atol=1e-3)
+    assert s0.bucket_history and s1.bucket_history
+    assert s1.converged == s0.converged
+    # compaction can only shrink the padded-iteration bill; sizes must
+    # shrink (or the batch finished within the first segment) and buckets
+    # stay powers of two
+    assert s1.newton_padded_iters <= s0.newton_padded_iters
+    sizes = [r.size for r in s1.bucket_history]
+    assert sizes == sorted(sizes, reverse=True)
+    # buckets are powers of two, clamped to the incoming batch width
+    assert all(r.padded == 6 or r.padded & (r.padded - 1) == 0
+               for r in s1.bucket_history)
+
+
+def test_compaction_rejects_mesh():
+    """compact_every is a single-shard optimization; combining it with a
+    mesh must fail loudly instead of silently skipping compaction."""
+    from jax.sharding import Mesh
+    priors = default_priors()
+    sky = synthetic.sample_sky(jax.random.PRNGKey(11), num_sources=2,
+                               field=64, priors=priors)
+    est = heuristic.measure_catalog(sky.images, sky.metas, sky.truth.pos)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    with pytest.raises(ValueError, match="compact_every"):
+        infer.run_inference(sky.images, sky.metas, est, priors, patch=16,
+                            batch=2, mesh=mesh, compact_every=4)
+
+
 def test_refinement_pass_does_not_hurt():
     priors = default_priors()
     sky = synthetic.sample_sky(jax.random.PRNGKey(5), num_sources=8,

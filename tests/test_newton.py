@@ -99,3 +99,112 @@ def test_newton_active_mask_freezes_padding():
     np.testing.assert_allclose(np.asarray(res.theta[2:]), 1.0)
     np.testing.assert_allclose(np.asarray(res.theta[:2]), 0.0, atol=1e-3)
     assert int(res.iters[2]) == 0
+
+
+def test_newton_all_inactive_returns_early():
+    """An all-padding batch must not evaluate the objective at all and
+    must report inf grad norms / zero iterations."""
+    calls = []
+
+    def obj(theta):
+        calls.append(1)
+        return -jnp.sum(theta**2)
+
+    theta0 = jnp.ones((3, 4))
+    res = newton.fit_batch(obj, theta0, active=jnp.zeros((3,), bool),
+                           max_iters=20)
+    np.testing.assert_allclose(np.asarray(res.theta), 1.0)
+    assert np.all(np.isinf(np.asarray(res.grad_norm)))
+    assert int(np.asarray(res.iters).sum()) == 0
+    assert not bool(np.asarray(res.converged).any())
+
+
+def test_tr_subproblem_batch_cholesky_parity():
+    """The whole-batch Cholesky fast path must agree with the eigh solve
+    on PD-interior batches, and fall back to it exactly on batches with
+    any indefinite/boundary member."""
+    key = jax.random.PRNGKey(7)
+    d, s = 8, 6
+    qs = jax.random.normal(key, (s, d, d))
+    pd = qs @ jnp.transpose(qs, (0, 2, 1)) + 0.5 * jnp.eye(d)
+    grads = 0.01 * jax.random.normal(jax.random.PRNGKey(8), (s, d))
+    radii = jnp.full((s,), 10.0)   # generous: every Newton step interior
+    p_batch = newton.tr_subproblem_batch(grads, pd, radii)
+    p_eigh = jax.vmap(newton.tr_subproblem)(grads, pd, radii)
+    np.testing.assert_allclose(np.asarray(p_batch), np.asarray(p_eigh),
+                               rtol=1e-4, atol=1e-6)
+    # the fast path is the true Newton step
+    p_exact = -jnp.linalg.solve(pd, grads[..., None])[..., 0]
+    np.testing.assert_allclose(np.asarray(p_batch), np.asarray(p_exact),
+                               rtol=1e-4, atol=1e-6)
+    # one indefinite member forces the general path for the whole batch —
+    # results must be identical to the per-source eigh solve
+    hess_mixed = pd.at[0].set((qs[0] + qs[0].T) / 2)
+    radii_tight = jnp.full((s,), 0.05)
+    p_b2 = newton.tr_subproblem_batch(grads, hess_mixed, radii_tight)
+    p_e2 = jax.vmap(newton.tr_subproblem)(grads, hess_mixed, radii_tight)
+    np.testing.assert_allclose(np.asarray(p_b2), np.asarray(p_e2),
+                               rtol=1e-5, atol=1e-7)
+
+
+def _mixed_difficulty_problem(s=32, d=6, hard_frac=0.25, far=150.0):
+    """Concave quadratics whose optima are near for 'easy' sources and
+    ``far`` away for 'hard' ones: with the trust region growing 2× per
+    accepted step, easy sources converge in a couple of iterations while
+    hard ones must walk the radius up — a controllable convergence skew."""
+    key = jax.random.PRNGKey(11)
+    qs = jax.random.normal(key, (s, d, d))
+    hs = -(qs @ jnp.transpose(qs, (0, 2, 1))) - 0.5 * jnp.eye(d)
+    opt = jax.random.normal(jax.random.PRNGKey(12), (s, d))
+    opt = opt / jnp.linalg.norm(opt, axis=-1, keepdims=True)
+    n_hard = int(s * hard_frac)
+    dist = jnp.concatenate([jnp.full((n_hard,), far),
+                            0.3 * jnp.ones((s - n_hard,))])
+    opt = opt * dist[:, None]
+
+    def obj(theta, h, x0):
+        d_ = theta - x0
+        return 0.5 * d_ @ (h @ d_)
+
+    return obj, hs, opt
+
+
+def test_fit_batch_compacted_roundtrip():
+    """Bucketed refit produces the same result as the unbucketed loop."""
+    obj, hs, opt = _mixed_difficulty_problem()
+    s, d = opt.shape
+    theta0 = jnp.zeros((s, d))
+    plain = newton.fit_batch(obj, theta0, hs, opt, max_iters=40, gtol=1e-4)
+    comp, records = newton.fit_batch_compacted(
+        obj, theta0, hs, opt, max_iters=40, gtol=1e-4, compact_every=5,
+        min_bucket=4)
+    np.testing.assert_allclose(np.asarray(comp.theta),
+                               np.asarray(plain.theta), rtol=1e-5,
+                               atol=1e-5)
+    assert bool(comp.converged.all()) and bool(plain.converged.all())
+    np.testing.assert_allclose(np.asarray(comp.value),
+                               np.asarray(plain.value), rtol=1e-4,
+                               atol=1e-5)
+    assert records and all(r.padded >= r.size for r in records)
+    # power-of-two buckets only (bounded recompilation)
+    assert all(r.padded & (r.padded - 1) == 0 for r in records)
+
+
+def test_fit_batch_compacted_cost_drops():
+    """Iteration×bucket-size accounting: with 75% of the batch converging
+    early, compaction must cut the padded SPMD cost well below the
+    everyone-pays-for-the-slowest baseline."""
+    obj, hs, opt = _mixed_difficulty_problem(s=32, hard_frac=0.25)
+    s, d = opt.shape
+    theta0 = jnp.zeros((s, d))
+    plain = newton.fit_batch(obj, theta0, hs, opt, max_iters=40, gtol=1e-4)
+    comp, records = newton.fit_batch_compacted(
+        obj, theta0, hs, opt, max_iters=40, gtol=1e-4, compact_every=5,
+        min_bucket=4)
+    # easy 75% converge within the first segments; hard 25% run long
+    easy_iters = np.asarray(plain.iters)[8:]
+    hard_iters = np.asarray(plain.iters)[:8]
+    assert easy_iters.max() <= 10 < hard_iters.min()
+    baseline = s * int(np.asarray(plain.iters).max())
+    compacted = sum(r.padded * r.iters for r in records)
+    assert compacted < 0.6 * baseline, (compacted, baseline)
