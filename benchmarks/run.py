@@ -17,8 +17,8 @@ import traceback
 def main() -> None:
     from benchmarks import (fig3_batch_scaling, fig4_weak_scaling,
                             fig5_strong_scaling, fig6_sources_per_sec,
-                            newton_fused, scheduler_adaptive,
-                            table1_accuracy)
+                            mesh_compaction, newton_fused,
+                            scheduler_adaptive, table1_accuracy)
     suites = [
         ("table1", table1_accuracy.main),
         ("fig3", fig3_batch_scaling.main),
@@ -27,6 +27,7 @@ def main() -> None:
         ("fig6", fig6_sources_per_sec.main),
         ("scheduler", scheduler_adaptive.main_csv),
         ("newton_fused", newton_fused.main_csv),
+        ("mesh_compaction", mesh_compaction.main_csv),
     ]
     for name, fn in suites:
         try:

@@ -44,7 +44,13 @@ def main():
     ap.add_argument("--compact-every", type=int, default=None,
                     help="active-set compaction period: gather "
                          "unconverged sources into power-of-two buckets "
-                         "every K Newton iterations (docs/backends.md)")
+                         "every K Newton iterations (docs/backends.md); "
+                         "composes with --data-shards (elastic SPMD "
+                         "compaction, docs/scheduling.md)")
+    ap.add_argument("--data-shards", type=int, default=1,
+                    help="data-parallel mesh width (needs that many "
+                         "devices, e.g. XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--out", default="/tmp/celeste_catalog.json")
     args = ap.parse_args()
 
@@ -66,10 +72,19 @@ def main():
     print(f"[{time.time()-t0:6.1f}s] candidate catalog loaded: "
           f"{args.sources} sources; priors refit")
 
+    mesh = None
+    if args.data_shards > 1:
+        from jax.sharding import Mesh
+        if len(jax.devices()) < args.data_shards:
+            raise SystemExit(
+                f"--data-shards {args.data_shards} needs that many "
+                f"devices, found {len(jax.devices())}")
+        mesh = Mesh(np.array(jax.devices()[:args.data_shards]), ("data",))
+
     thetas, stats = infer.run_inference(
         sky.images, sky.metas, photo, priors, patch=24, batch=args.batch,
         passes=args.passes, backend=args.backend, adaptive=args.adaptive,
-        compact_every=args.compact_every)
+        compact_every=args.compact_every, mesh=mesh)
     sched_mode = "adaptive" if stats.adaptive else "static"
     print(f"[{time.time()-t0:6.1f}s] optimization ({sched_mode}): "
           f"{stats.rounds} rounds, "
@@ -77,9 +92,11 @@ def main():
           f"mean iters {stats.iters.mean():.1f}, "
           f"predicted imbalance {stats.predicted_imbalance:.1%}")
     if args.compact_every:
+        occ = stats.shard_occupancy
+        occ_txt = f", mean occupancy {occ.mean():.0%}" if occ.size else ""
         print(f"         compaction: {len(stats.bucket_history)} buckets, "
               f"padded-iteration bill {stats.newton_padded_iters} "
-              f"({stats.newton_seconds:.1f}s measured)")
+              f"({stats.newton_seconds:.1f}s measured){occ_txt}")
     if len(stats.history):
         mi = stats.measured_imbalance
         print(f"         measured imbalance: first round {mi[0]:.1%}, "

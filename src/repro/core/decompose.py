@@ -270,7 +270,8 @@ def make_plan(positions: np.ndarray, costs: np.ndarray, num_shards: int,
 def pack_round(positions: np.ndarray, costs: np.ndarray, num_shards: int,
                batch: int, extent: float | None = None,
                chunk: int = 4,
-               shard_speed: np.ndarray | None = None) -> Plan:
+               shard_speed: np.ndarray | None = None,
+               swap: bool = True) -> Plan:
     """Pack ONLY the next round: a single [num_shards, batch] batch.
 
     The Dtree-style adaptive loop replans between rounds, so it needs the
@@ -291,7 +292,10 @@ def pack_round(positions: np.ndarray, costs: np.ndarray, num_shards: int,
     slowest shard's most expensive chunks for the cheapest *unscheduled*
     chunks until its predicted time drops to the mean — the straggler
     works through the cheap tail while fast shards drain the expensive
-    head.
+    head.  ``swap=False`` disables that phase (each swap strictly lowers
+    the makespan shard's time, so the swapped plan's predicted makespan
+    is never above the unswapped one — property-tested in
+    tests/test_decompose.py).
     """
     speed = _check_plan_args(num_shards, batch, shard_speed)
     s = positions.shape[0]
@@ -350,7 +354,7 @@ def pack_round(positions: np.ndarray, costs: np.ndarray, num_shards: int,
     # pool would offer next anyway)
     asc = np.argsort(chunk_cost, kind="stable")
     pool_pos = 0
-    for _ in range(num_shards * batch):
+    for _ in range(num_shards * batch if swap else 0):
         while pool_pos < n_chunks and (placed[asc[pool_pos]]
                                        or sizes[asc[pool_pos]] != chunk):
             pool_pos += 1

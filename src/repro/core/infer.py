@@ -30,11 +30,12 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import backends, decompose, elbo, newton, synthetic
 from repro.core.model import ImageMeta, SourceParams
 from repro.core.priors import Priors
+from repro.parallel import collectives, sharding
 from repro.runtime.scheduler import DynamicScheduler, RoundRecord
 
 
@@ -80,6 +81,15 @@ class InferenceStats:
         only insofar as jit caching allows; treat as a relative signal)."""
         return float(sum(r.seconds for r in self.bucket_history))
 
+    @property
+    def shard_occupancy(self) -> np.ndarray:
+        """Per-round × per-shard slot occupancy: the fraction of padded
+        slot-iterations that did live Newton work.  1.0 means every padded
+        slot was busy every iteration; the gap to 1.0 is exactly the SPMD
+        padding waste that compaction + redistribution recover."""
+        return np.array([r.occupancy for r in self.history
+                         if r.occupancy is not None])
+
 
 @functools.partial(jax.jit, static_argnames=("patch",))
 def extract_patches(images: jnp.ndarray, metas: ImageMeta,
@@ -120,6 +130,70 @@ def _gather_batch(idx: np.ndarray, x, bg, corners, thetas):
     safe = jnp.maximum(jnp.asarray(idx), 0)
     return (x[safe], bg[safe], corners[safe], thetas[safe],
             jnp.asarray(idx) >= 0)
+
+
+def _sharded_fit(objective, mesh, data_axis, gtol, seg, has_state):
+    """Jitted shard_map'd Newton segment over [num_shards, W, ...] blocks.
+
+    Cached per ``run_inference`` call (each call builds a fresh
+    objective, so cross-call jit reuse is impossible anyway — and a
+    module-level cache would pin the compiled executables for the
+    process lifetime); within a call, compaction bounds the distinct
+    bucket widths to O(log batch) shapes per segment length."""
+    spec = P(data_axis)
+
+    def _fn(tb, xb, bgb, cb, act, rad, *st):
+        def local(t, xx, bb, cc, aa, rr, *ss):
+            r = newton.fit_batch(
+                objective, t[0], xx[0], bb[0], cc[0], active=aa[0],
+                max_iters=seg, gtol=gtol, init_radius=rr[0],
+                init_state=tuple(a[0] for a in ss) if ss else None)
+            return jax.tree.map(lambda a: a[None], r)
+        return sharding.shard_map(
+            local, mesh=mesh,
+            in_specs=(spec,) * (6 + (3 if has_state else 0)),
+            out_specs=spec, check_vma=False)(tb, xb, bgb, cb, act, rad,
+                                             *st)
+
+    return jax.jit(_fn)
+
+
+def _sharded_compact(mesh, data_axis, out_rows):
+    """Jitted shard_map'd LOCAL compaction: every shard gathers its own
+    live rows into the agreed bucket with ``collectives.compact_rows`` —
+    the no-redistribution fast path, zero interconnect traffic (the
+    all_to_all exchange only runs when sources actually move)."""
+    spec = P(data_axis)
+
+    def _fn(tree, lv, sl):
+        def local(tr, l, sl_):
+            new = collectives.compact_rows(
+                jax.tree.map(lambda a: a[0], tr), l[0], sl_[0], out_rows)
+            return jax.tree.map(lambda a: a[None], new)
+        return sharding.shard_map(
+            local, mesh=mesh, in_specs=(spec,) * 3, out_specs=spec,
+            check_vma=False)(tree, lv, sl)
+
+    return jax.jit(_fn)
+
+
+def _sharded_exchange(mesh, data_axis, out_rows, min_bucket, cap):
+    """Jitted shard_map'd cross-shard row exchange
+    (``collectives.compact_exchange``) producing [num_shards, out_rows]
+    compacted blocks plus the device-negotiated bucket size."""
+    spec = P(data_axis)
+
+    def _fn(tree, lv, ds, sl):
+        def local(tr, l, d, sl_):
+            new, bucket = collectives.compact_exchange(
+                jax.tree.map(lambda a: a[0], tr), l[0], d[0], sl_[0],
+                out_rows, data_axis, min_bucket=min_bucket, cap=cap)
+            return jax.tree.map(lambda a: a[None], new), bucket[None]
+        return sharding.shard_map(
+            local, mesh=mesh, in_specs=(spec,) * 4,
+            out_specs=(spec, spec), check_vma=False)(tree, lv, ds, sl)
+
+    return jax.jit(_fn)
 
 
 def run_inference(images: jnp.ndarray, metas: ImageMeta,
@@ -164,25 +238,28 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
     balance — changes.  Pass ``scheduler`` to carry speeds/history across
     calls; round telemetry lands in ``stats.history``.
 
-    ``compact_every`` (single-shard runs only — ``mesh`` SPMD keeps rigid
-    per-shard shapes) turns on active-set compaction: the Newton loop
-    runs in segments of that many iterations and gathers still-unconverged
-    sources into power-of-two buckets between segments
-    (``newton.fit_batch_compacted``), so a round stops billing the full
-    batch width for its slowest member.  Per-bucket size/iteration/wall
-    telemetry lands in ``stats.bucket_history`` (also populated, one
-    record per shard-round, when compaction is off — that is the
-    iteration×bucket-size accounting baseline).
+    ``compact_every`` turns on active-set compaction: the Newton loop runs
+    in segments of that many iterations and gathers still-unconverged
+    sources into power-of-two buckets between segments, so a round stops
+    billing the full batch width for its slowest member.  On a ``mesh``
+    the compaction is SPMD-elastic: all shards agree on one bucket size
+    via the ``psum``/``pmax`` negotiation protocol
+    (``parallel.collectives.negotiated_bucket``; shapes stay identical on
+    every shard), warm-started ``(radius, value, grad, hess)`` state rides
+    along, and when the surviving counts are skewed, whole sources are
+    redistributed across shards with an ``all_to_all`` row exchange
+    (``collectives.compact_exchange``) so no shard pads more than one
+    power-of-two step above the global mean — see docs/scheduling.md for
+    the protocol.  Per-bucket size/iteration/wall telemetry lands in
+    ``stats.bucket_history`` (also populated, one record per shard-round,
+    when compaction is off — that is the iteration×bucket-size accounting
+    baseline) and per-shard slot occupancy in each round's
+    ``RoundRecord.occupancy``.
     """
     field = int(images.shape[-1])
     if patch > field:
         raise ValueError(
             f"patch size {patch} exceeds the image field {field}")
-    if compact_every is not None and mesh is not None:
-        raise ValueError(
-            "compact_every requires mesh=None: SPMD shard shapes are "
-            "rigid, so active-set compaction is a single-shard "
-            "optimization (see docs/backends.md)")
     s = int(init_catalog.pos.shape[0])
     num_shards = 1 if mesh is None else int(mesh.shape[data_axis])
 
@@ -230,24 +307,58 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
 
     objective = make_objective(metas, priors, backend=backend)
 
-    if mesh is None:
-        def fit(tb, xb, bgb, cb, act):
-            return newton.fit_batch(objective, tb, xb, bgb, cb,
-                                    active=act, max_iters=max_iters,
-                                    gtol=gtol)
-    else:
-        from repro.parallel.sharding import shard_map
-        spec = P(data_axis)
-        def _sharded(tb, xb, bgb, cb, act):
-            def local(t, xx, bb, cc, aa):
-                r = newton.fit_batch(objective, t[0], xx[0], bb[0], cc[0],
-                                     active=aa[0], max_iters=max_iters,
-                                     gtol=gtol)
-                return jax.tree.map(lambda a: a[None], r)
-            return shard_map(local, mesh=mesh,
-                             in_specs=(spec,) * 5, out_specs=spec,
-                             check_vma=False)(tb, xb, bgb, cb, act)
-        fit = jax.jit(_sharded)
+    min_bucket = 4
+    _jit_cache: dict = {}   # per-call: jitted fit/exchange wrappers
+
+    def _fit_segment(tb, xb, bgb, cb, act, radius, state, seg):
+        """One Newton segment over [num_shards, W, ...] slot blocks —
+        the single fit path for single-shard AND mesh rounds.  ``state``
+        is ``None`` (fresh round) or the warm ``(value, grad, hess)``
+        carried across a compaction boundary."""
+        if mesh is None:
+            sq = jax.tree.map(lambda a: a[0], (tb, xb, bgb, cb, act,
+                                               radius))
+            res = newton.fit_batch(
+                objective, sq[0], sq[1], sq[2], sq[3], active=sq[4],
+                max_iters=seg, gtol=gtol, init_radius=sq[5],
+                init_state=(None if state is None
+                            else jax.tree.map(lambda a: a[0], state)))
+            return jax.tree.map(lambda a: a[None], res)
+        key = ("fit", seg, state is not None)
+        if key not in _jit_cache:
+            _jit_cache[key] = _sharded_fit(objective, mesh, data_axis,
+                                           gtol, seg, state is not None)
+        st = () if state is None else tuple(state)
+        return _jit_cache[key](tb, xb, bgb, cb, act, radius, *st)
+
+    def _exchange(state_tree, live, dest_shard, dest_slot, out_rows,
+                  moved):
+        """Move whole sources into the next segment's buckets.
+        Single-shard (or a mesh round where no source changes shard —
+        ``moved=False``): a local compacting scatter, no collective.
+        Mesh with redistribution: the all_to_all exchange, which also
+        returns the device-negotiated bucket size for the protocol
+        parity assertion."""
+        if mesh is None:
+            new = collectives.compact_rows(
+                jax.tree.map(lambda a: a[0], state_tree),
+                live[0], dest_slot[0], out_rows)
+            return jax.tree.map(lambda a: a[None], new), out_rows
+        if not moved:
+            key = ("compact", out_rows)
+            if key not in _jit_cache:
+                _jit_cache[key] = _sharded_compact(mesh, data_axis,
+                                                   out_rows)
+            return (_jit_cache[key](state_tree, live, dest_slot),
+                    out_rows)
+        key = ("xchg", out_rows)
+        if key not in _jit_cache:
+            _jit_cache[key] = _sharded_exchange(mesh, data_axis,
+                                                out_rows, min_bucket,
+                                                batch)
+        new, bucket = _jit_cache[key](state_tree, live, dest_shard,
+                                      dest_slot)
+        return new, int(np.asarray(bucket)[0])
 
     # ---- phase 3: optimize sources, round by round ----
     iters = np.zeros(s, np.int64)
@@ -258,72 +369,163 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
     rounds_done = 0
     rounds_per_pass = int(np.ceil(s / (num_shards * batch)))
 
+    def _plan_compaction(live_lists):
+        """Negotiate the next bucket width and, when counts are skewed,
+        redistribute whole sources across shards (host mirror of the
+        device protocol; see docs/scheduling.md).  Returns the new
+        per-shard source lists and the agreed bucket."""
+        counts = [len(l) for l in live_lists]
+        total = sum(counts)
+        bucket = newton.negotiated_bucket_size(
+            total, num_shards, min_bucket=min_bucket, cap=batch)
+        moved = max(counts) > bucket
+        if moved:
+            # skew would cost a power-of-two step: move surplus sources
+            # (locality-last: each shard keeps its first `quota` — the
+            # Morton-ordered head — and sheds the tail)
+            quota = -(-total // num_shards)
+            new_lists = [l[:quota] for l in live_lists]
+            pool = [g for l in live_lists for g in l[quota:]]
+            for j in range(num_shards):
+                need = quota - len(new_lists[j])
+                if need > 0 and pool:
+                    new_lists[j] = new_lists[j] + pool[:need]
+                    pool = pool[need:]
+            live_lists = new_lists
+        return live_lists, bucket, moved
+
     def run_round(idx):
         """Execute one [num_shards, batch] round; returns the scheduled
-        source indices, their measured iteration counts, and their shard."""
+        source indices, their measured iteration counts, their shard, and
+        per-shard slot occupancy.
+
+        Without ``compact_every`` this is a single rigid-width segment;
+        with it, the round runs in segments and between segments the
+        still-live sources are compacted (and, on a mesh, redistributed)
+        into the negotiated bucket width."""
         nonlocal thetas
-        flat = idx.reshape(-1)
-        xb, bgb, cb, tb, act = _gather_batch(flat, x, bg, corners, thetas)
-        t0 = time.perf_counter()
-        if mesh is not None:
-            shp = (num_shards, batch)
-            xb, bgb, cb, tb, act = jax.tree.map(
-                lambda a: a.reshape(shp + a.shape[1:]),
-                (xb, bgb, cb, tb, act))
-            res = fit(tb, xb, bgb, cb, act)
-            res = jax.tree.map(
-                lambda a: a.reshape((num_shards * batch,) + a.shape[2:]),
-                res)
-            res = jax.block_until_ready(res)
+        cur = idx.copy()                      # [num_shards, W] global ids
+        if compact_every:
+            # partial rounds start in a fitted bucket, not the full batch
+            # width (matching fit_batch_compacted's first segment).  The
+            # width is the rigid per-shard fit — no redistribution here:
+            # the planner's speed-aware shard assignment stands until
+            # measured convergence says otherwise
+            counts0 = (idx >= 0).sum(axis=1)
+            w0 = newton.negotiated_bucket_size(
+                int(counts0.max(initial=1)) * num_shards, num_shards,
+                min_bucket=min_bucket, cap=batch)
+            if w0 < batch:
+                cur = np.full((num_shards, w0), -1, np.int64)
+                for sh in range(num_shards):
+                    row = idx[sh][idx[sh] >= 0]
+                    cur[sh, :len(row)] = row
+        xb, bgb, cb, tb, act = _gather_batch(cur.reshape(-1), x, bg,
+                                             corners, thetas)
+        shp = cur.shape
+        xb, bgb, cb, tb, act = sharding.shard_rows(
+            jax.tree.map(lambda a: a.reshape(shp + a.shape[1:]),
+                         (xb, bgb, cb, tb, act)), mesh, data_axis)
+        radius = jnp.ones(shp, jnp.float32)
+        state = None
+        seg_len = int(compact_every) if compact_every else max_iters
+        used = 0
+        round_iters = np.zeros(s, np.int64)
+        src_shard = np.zeros(s, np.int64)     # last shard a source ran on
+        live_iters = np.zeros(num_shards)     # occupancy numerator
+        padded_iters = np.zeros(num_shards)   # occupancy denominator
+        dt_round = 0.0
+        while True:
+            seg = min(seg_len, max_iters - used)
+            t0 = time.perf_counter()
+            res = jax.block_until_ready(
+                _fit_segment(tb, xb, bgb, cb, act, radius, state, seg))
             dt = time.perf_counter() - t0
-            # one record per shard: each shard pays its padded batch width
-            # times its slowest member (wall time is whole-round — per-
-            # shard wall is unobservable under single-controller SPMD)
-            it_sh = np.asarray(res.iters).reshape(num_shards, batch)
-            act_sh = np.asarray(act).reshape(num_shards, batch)
-            for r in range(num_shards):
+            dt_round += dt
+            used += seg
+            w = cur.shape[1]
+            valid = cur >= 0
+            gids = cur[valid]
+            it_seg = np.asarray(res.iters)
+            gn_seg = np.asarray(res.grad_norm)
+            rad_seg = np.asarray(res.radius)
+            seg_conv = np.asarray(res.converged) | (gn_seg < gtol)
+            thetas = thetas.at[jnp.asarray(gids)].set(
+                res.theta.reshape(num_shards * w, -1)[valid.reshape(-1)])
+            round_iters[gids] += it_seg[valid]
+            src_shard[gids] = np.nonzero(valid)[0]
+            values[gids] = np.asarray(res.value)[valid]
+            conv[gids] = seg_conv[valid]
+            for sh in range(num_shards):
+                sh_iters = int(it_seg[sh].max(initial=0))
                 bucket_records.append(newton.BucketRecord(
-                    size=int(act_sh[r].sum()), padded=batch,
-                    iters=int(it_sh[r].max(initial=0)),
-                    seconds=dt / num_shards))
-        elif compact_every:
-            res, recs = newton.fit_batch_compacted(
-                objective, tb, xb, bgb, cb, active=act,
-                max_iters=max_iters, gtol=gtol,
-                compact_every=compact_every)
-            dt = time.perf_counter() - t0
-            bucket_records.extend(recs)
-        else:
-            res = jax.block_until_ready(fit(tb, xb, bgb, cb, act))
-            dt = time.perf_counter() - t0
-            bucket_records.append(newton.BucketRecord(
-                size=int(np.asarray(act).sum()), padded=batch,
-                iters=int(np.asarray(res.iters).max(initial=0)),
-                seconds=dt))
-        tgt, shard_of, sel = decompose.round_tasks(idx)
-        thetas = thetas.at[tgt].set(res.theta[sel])
-        iters[tgt] += np.asarray(res.iters)[sel]
-        values[tgt] = np.asarray(res.value)[sel]
-        conv[tgt] = np.asarray(res.converged)[sel]
-        measured = np.asarray(res.iters)[sel].astype(np.float64)
+                    size=int(valid[sh].sum()), padded=w,
+                    iters=sh_iters, seconds=dt / num_shards))
+                live_iters[sh] += it_seg[sh].sum()
+                padded_iters[sh] += w * sh_iters
+            live_np = valid & ~seg_conv & (rad_seg > newton.MIN_RADIUS)
+            if (compact_every is None or used >= max_iters
+                    or not live_np.any()):
+                break
+            # --- negotiate bucket, redistribute, exchange state ---
+            live_lists = [cur[sh][live_np[sh]].tolist()
+                          for sh in range(num_shards)]
+            new_lists, bucket, moved = _plan_compaction(live_lists)
+            slot_of = {g: (j, sl) for j, l in enumerate(new_lists)
+                       for sl, g in enumerate(l)}
+            dest = np.array(
+                [[slot_of.get(g, (num_shards, 0)) for g in row]
+                 for row in cur], np.int32)    # [n, W, 2]
+            state_tree = (res.theta, xb, bgb, cb, res.value, res.grad,
+                          res.hess, res.radius)
+            new, dev_bucket = _exchange(
+                state_tree, jnp.asarray(live_np),
+                jnp.asarray(dest[..., 0]), jnp.asarray(dest[..., 1]),
+                bucket, moved)
+            if mesh is not None and moved and dev_bucket != bucket:
+                raise AssertionError(
+                    f"bucket negotiation diverged: host {bucket}, "
+                    f"device {dev_bucket}")
+            tb, xb, bgb, cb = new[0], new[1], new[2], new[3]
+            state = (new[4], new[5], new[6])
+            radius = new[7]
+            cur = np.full((num_shards, bucket), -1, np.int64)
+            for j, l in enumerate(new_lists):
+                cur[j, :len(l)] = l
+            act = jnp.asarray(cur >= 0)
+        flat = idx.reshape(-1)
+        tgt = flat[flat >= 0]
+        # attribute each source's measurement to the shard it actually
+        # ran on — redistribution can move it off its planned shard
+        # mid-round (a source split across shards is billed to its last;
+        # exact per-shard accounting is in the occupancy counters)
+        shard_of = src_shard[tgt]
+        iters[tgt] += round_iters[tgt]
+        measured = round_iters[tgt].astype(np.float64)
         if compact_every and mesh is None:
             # bill wall time instead of raw iteration counts so the
             # adaptive cost model / shard-speed estimate reflects the
             # real post-compaction throughput (converged sources stop
-            # costing mid-round)
+            # costing mid-round); on a mesh, per-shard wall time is
+            # unobservable under single-controller SPMD, so iteration
+            # counts remain the measurement
             tot = measured.sum()
             if tot > 0:
-                measured = measured * (dt / tot)
-        return tgt, measured, shard_of
+                measured = measured * (dt_round / tot)
+        occupancy = np.where(padded_iters > 0,
+                             live_iters / np.maximum(padded_iters, 1e-9),
+                             1.0)
+        return tgt, measured, shard_of, occupancy
 
-    def measured_record(shard_of, measured, predicted):
+    def measured_record(shard_of, measured, predicted, occupancy):
         shard_times = np.bincount(shard_of, weights=measured,
                                   minlength=num_shards)
         mean = max(shard_times.mean(), 1e-9)
         return RoundRecord(round_idx=rounds_done, shard_times=shard_times,
                            imbalance=float((shard_times.max() - mean)
                                            / mean),
-                           predicted_imbalance=predicted)
+                           predicted_imbalance=predicted,
+                           occupancy=occupancy)
 
     if adaptive:
         sched = scheduler or DynamicScheduler(
@@ -344,9 +546,9 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
                 plan = sched.plan_round(pos_np[remaining], feats[remaining],
                                         extent=field)
                 idx = decompose.globalize(plan.batches[0], remaining)
-                tgt, measured, shard_of = run_round(idx)
+                tgt, measured, shard_of, occupancy = run_round(idx)
                 sched.record(rounds_done, feats[tgt], measured, shard_of,
-                             plan=plan)
+                             plan=plan, occupancy=occupancy)
                 remaining = np.setdiff1d(remaining, tgt,
                                          assume_unique=True)
                 rounds_done += 1
@@ -365,9 +567,10 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
             plan = decompose.make_plan(pos_np, cm.predict(feats),
                                        num_shards, batch, extent=field)
             for r, idx in enumerate(plan.batches):
-                tgt, measured, shard_of = run_round(idx)
+                tgt, measured, shard_of, occupancy = run_round(idx)
                 history.append(measured_record(shard_of, measured,
-                                               plan.round_imbalance(r)))
+                                               plan.round_imbalance(r),
+                                               occupancy))
                 rounds_done += 1
                 if progress is not None:
                     progress(p * len(plan.batches) + r,

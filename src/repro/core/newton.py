@@ -170,9 +170,17 @@ def tr_subproblem_batch(grads: jnp.ndarray, hesses: jnp.ndarray,
         return p_chol
 
     def general(_):
-        return jax.vmap(
+        # PD-interior rows keep the (already computed) Cholesky step even
+        # on the general branch: each row's step is then solved by the
+        # same algorithm regardless of which batch it shares — without
+        # this, one indefinite neighbor flips every interior row from
+        # Cholesky to eigh, and re-batching (compaction buckets, mesh
+        # shards) visibly changes trajectories.
+        # (tests/test_newton.py::test_tr_subproblem_batch_row_deterministic)
+        p_eigh = jax.vmap(
             functools.partial(tr_subproblem, bisect_iters=bisect_iters))(
                 grads, hesses, radii)
+        return jnp.where(interior[:, None], p_chol, p_eigh)
 
     return jax.lax.cond(jnp.all(interior), fast, general, None)
 
@@ -290,7 +298,14 @@ def fit_batch(objective, theta0: jnp.ndarray, *obj_args,
             radius = jnp.where(grow, st.radius * 2.0,
                                jnp.where(shrink, st.radius * 0.25,
                                          st.radius))
-            radius = jnp.clip(radius, MIN_RADIUS, 32.0)
+            # done rows keep their radius frozen: otherwise a stalled
+            # row's radius can grow back above MIN_RADIUS while batch
+            # peers keep the loop alive, re-entering it into a compacted
+            # continuation's live set — making results depend on batch
+            # composition (the determinism the SPMD compaction parity
+            # relies on)
+            radius = jnp.where(done, st.radius,
+                               jnp.clip(radius, MIN_RADIUS, 32.0))
 
             theta = jnp.where(accept[:, None], cand, st.theta)
             value = jnp.where(accept, new_val, st.value)
@@ -349,14 +364,38 @@ def _next_pow2(n: int) -> int:
     return 1 << (int(n) - 1).bit_length()
 
 
+def negotiated_bucket_size(total_live: int, num_shards: int = 1, *,
+                           min_bucket: int = 4,
+                           cap: int | None = None) -> int:
+    """Host-side mirror of ``parallel.collectives.negotiated_bucket``.
+
+    The compaction bucket every shard uses is
+    ``clip(next_pow2(ceil(total_live / num_shards)), min_bucket, cap)`` —
+    a function of the *global* live count only, so all shards agree by
+    construction; the device-side collective returns the identical value
+    (protocol parity is asserted per segment by the mesh driver and in
+    ``tests/test_distributed.py``).  With one shard this degenerates to
+    the classic local policy ``clip(next_pow2(live), min_bucket, cap)``.
+    """
+    mean_ceil = -(-max(int(total_live), 1) // max(num_shards, 1))
+    bucket = max(min_bucket, _next_pow2(mean_ceil))
+    return bucket if cap is None else min(bucket, cap)
+
+
 def fit_batch_compacted(objective, theta0: jnp.ndarray, *obj_args,
                         active: jnp.ndarray | None = None,
                         max_iters: int = 50, gtol: float = 1e-2,
                         init_radius: float = 1.0,
                         compact_every: int = 8,
                         min_bucket: int = 4,
+                        negotiate: Callable[[int], int] | None = None,
                         ) -> tuple[NewtonResult, list[BucketRecord]]:
-    """``fit_batch`` with periodic active-set compaction.
+    """``fit_batch`` with periodic active-set compaction (standalone
+    batch-level API; ``infer.run_inference`` implements the same policy
+    in its unified single-shard/mesh segment loop — shared bucket
+    arithmetic lives in ``negotiated_bucket_size`` and the warm-start
+    contract in ``fit_batch``, and driver/API parity is pinned by
+    tests/test_newton.py + tests/test_inference.py).
 
     Runs the Newton loop in segments of ``compact_every`` iterations; after
     each segment the still-unfinished sources (not converged, trust region
@@ -367,6 +406,13 @@ def fit_batch_compacted(objective, theta0: jnp.ndarray, *obj_args,
     O(log S) shapes while letting a batch stop paying for its
     already-converged members — the redundant-work elimination the
     petascale follow-up credits for most of its speedup.
+
+    ``negotiate`` (optional) overrides the local bucket policy with an
+    externally-agreed size: called with the live count, it must return a
+    bucket width ≥ that count (e.g. the cross-shard
+    ``negotiated_bucket_size`` a mesh driver computed from *global*
+    counts, so every shard's segment keeps an identical shape).  The
+    returned width is still clamped to the incoming batch width.
 
     Returns ``(result, records)`` where ``result`` matches ``fit_batch``
     (rows never scheduled keep ``theta0``, value 0, inf grad norm) and
@@ -392,7 +438,15 @@ def fit_batch_compacted(objective, theta0: jnp.ndarray, *obj_args,
     used = 0
     while live.size and used < max_iters:
         seg = min(compact_every, max_iters - used)
-        bucket = min(s, max(min_bucket, _next_pow2(live.size)))
+        if negotiate is None:
+            bucket = negotiated_bucket_size(live.size,
+                                            min_bucket=min_bucket, cap=s)
+        else:
+            bucket = min(s, int(negotiate(live.size)))
+            if bucket < live.size:
+                raise ValueError(
+                    f"negotiated bucket {bucket} cannot hold "
+                    f"{live.size} live sources")
         idx = np.full(bucket, -1, np.int64)
         idx[:live.size] = live
         safe = jnp.asarray(np.maximum(idx, 0))

@@ -1,4 +1,5 @@
-"""Collective helpers: compressed gradient all-reduce with error feedback.
+"""Collective helpers: compressed gradient all-reduce with error feedback,
+and the elastic-compaction collectives for SPMD Newton inference.
 
 The cross-pod ("pod" axis / DCN) gradient all-reduce is the bandwidth-
 critical collective at multi-pod scale.  ``compressed_psum`` implements an
@@ -6,9 +7,19 @@ int8 reduce-scatter + all-gather ring with per-chunk scales: 4× fewer DCN
 bytes than a bf16 all-reduce at the cost of quantization error, which the
 caller cancels across steps with error feedback (see optim/compress.py).
 
-Implemented with ``jax.lax.ppermute`` inside ``shard_map`` — the schedule
-is explicit so the dry-run HLO shows exactly the collective bytes the
-roofline model charges.
+``negotiated_bucket`` and ``compact_exchange`` implement active-set
+compaction *across* shards (paper §III-C/G; the petascale follow-up's
+dense-batch requirement): between Newton segments every shard computes the
+same compaction bucket size from a ``psum``/``pmax`` over the unconverged
+counts — identical shapes on every shard, so ``shard_map`` stays happy —
+and whole sources are moved between shards with an ``all_to_all`` row
+exchange so no shard pads more than one power-of-two step above the global
+mean.  ``core/infer.py`` drives the protocol; ``docs/scheduling.md``
+documents it.
+
+Implemented with ``jax.lax.ppermute`` / ``all_to_all`` inside
+``shard_map`` — the schedule is explicit so the dry-run HLO shows exactly
+the collective bytes the roofline model charges.
 """
 from __future__ import annotations
 
@@ -99,3 +110,111 @@ def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
 
 def tree_compressed_psum(tree, axis_name: str):
     return jax.tree.map(lambda x: compressed_psum(x, axis_name), tree)
+
+
+# ---------------------------------------------------------------------------
+# Elastic SPMD compaction: bucket negotiation + cross-shard row exchange
+# ---------------------------------------------------------------------------
+
+
+def _next_pow2_i32(n: jnp.ndarray) -> jnp.ndarray:
+    """Next power of two ≥ n for positive int32 scalars (bit-smearing —
+    no float log2, so it is exact for every representable count)."""
+    v = jnp.maximum(n, 1).astype(jnp.int32) - 1
+    for shift in (1, 2, 4, 8, 16):
+        v = v | (v >> shift)
+    return v + 1
+
+
+def negotiated_bucket(live: jnp.ndarray, axis_name: str, *,
+                      min_bucket: int = 4, cap: int | None = None):
+    """Agree on one compaction bucket size across every shard of
+    ``axis_name`` (call INSIDE ``shard_map``).
+
+    ``live`` is this shard's [rows] bool mask of still-unconverged
+    sources.  The protocol (mirrored host-side by
+    ``newton.negotiated_bucket_size`` — the two are parity-tested):
+
+        total  = psum(count)                 # global live sources
+        bucket = clip(next_pow2(ceil(total / n)), min_bucket, cap)
+        move   = pmax(count) > bucket        # redistribution trigger
+
+    The bucket depends only on the *global* count, so every shard computes
+    the identical value and downstream shapes stay SPMD-uniform; ``move``
+    fires exactly when some shard's backlog does not fit the balanced
+    bucket, i.e. when skew would otherwise cost a power-of-two step.
+
+    Returns ``(bucket, move)`` as traced int32/bool scalars (identical on
+    every shard).
+    """
+    count = jnp.sum(live.astype(jnp.int32))
+    total = jax.lax.psum(count, axis_name)
+    maxc = jax.lax.pmax(count, axis_name)
+    n = _axis_size(axis_name)
+    mean_ceil = (total + n - 1) // n
+    bucket = jnp.maximum(min_bucket, _next_pow2_i32(mean_ceil))
+    if cap is not None:
+        bucket = jnp.minimum(bucket, cap)
+    return bucket, maxc > bucket
+
+
+def compact_rows(tree, live: jnp.ndarray, dest_slot: jnp.ndarray,
+                 out_rows: int):
+    """Single-shard compaction: scatter the live rows of every leaf
+    [rows, ...] into a fresh [out_rows, ...] bucket at ``dest_slot``.
+
+    Dead rows are routed to an out-of-bounds slot and dropped — the same
+    row-routing contract as ``compact_exchange`` with one shard, so the
+    ``mesh=None`` and mesh drivers in ``core/infer.py`` share their
+    compaction bookkeeping verbatim.
+    """
+    slot = jnp.where(live, dest_slot, out_rows)
+
+    def leaf(a):
+        out = jnp.zeros((out_rows,) + a.shape[1:], a.dtype)
+        return out.at[slot].set(a, mode="drop")
+
+    return jax.tree.map(leaf, tree)
+
+
+def compact_exchange(tree, live: jnp.ndarray, dest_shard: jnp.ndarray,
+                     dest_slot: jnp.ndarray, out_rows: int,
+                     axis_name: str, *, min_bucket: int = 4,
+                     cap: int | None = None):
+    """All-to-all row exchange for cross-shard active-set compaction
+    (call INSIDE ``shard_map``).
+
+    Every leaf of ``tree`` carries this shard's per-source rows
+    [rows, ...]; live row ``i`` must land in slot ``dest_slot[i]`` of
+    shard ``dest_shard[i]``'s fresh [out_rows, ...] bucket.  The routing
+    (computed host-side by the driver, which sees all counts) must assign
+    each destination slot at most once.
+
+    Implementation: scatter rows into a [n, out_rows, ...] send buffer
+    (cell ``j`` = rows bound for shard ``j``; dead rows routed out of
+    bounds and dropped), one ``lax.all_to_all`` so cell ``j`` lands on
+    shard ``j``, then a sum over the received cells — each slot has
+    exactly one contributor, the rest are zeros, so the sum is exact.
+    Wire cost is ``n × out_rows`` rows per shard versus ``out_rows`` for
+    a ragged exchange, the classic dense all-to-all padding tax — cheap
+    at inference shard counts, and shape-uniform so it jits once per
+    (rows, out_rows) pair.
+
+    Returns ``(new_tree, bucket)`` where ``bucket`` is the
+    ``negotiated_bucket`` value — the driver asserts it equals the
+    host-planned ``out_rows`` (protocol parity check).
+    """
+    n = _axis_size(axis_name)
+    shard = jnp.where(live, dest_shard, n)     # out of bounds → dropped
+
+    def leaf(a):
+        buf = jnp.zeros((n, out_rows) + a.shape[1:], a.dtype)
+        buf = buf.at[shard, dest_slot].set(a, mode="drop")
+        recv = jax.lax.all_to_all(buf, axis_name, split_axis=0,
+                                  concat_axis=0)
+        return recv.sum(axis=0)
+
+    new = jax.tree.map(leaf, tree)
+    bucket, _ = negotiated_bucket(live, axis_name, min_bucket=min_bucket,
+                                  cap=cap)
+    return new, bucket

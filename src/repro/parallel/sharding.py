@@ -197,6 +197,28 @@ def gather_for_compute(params, mesh: Mesh | None, policy: str = "tp"):
     return jax.tree_util.tree_map_with_path(leaf, params)
 
 
+def row_spec(axis: str) -> P:
+    """Spec for [num_shards, rows, ...] per-shard row blocks (the Newton
+    round layout): leading dim split over ``axis``, rows replicated."""
+    return P(axis)
+
+
+def shard_rows(tree, mesh: Mesh | None, axis: str):
+    """Place a pytree of [num_shards, rows, ...] stacked per-shard blocks
+    so the leading dim is sharded over ``axis``.
+
+    The inference driver's round inputs are assembled host-side (gathers
+    from the global catalog arrays); committing them to their shard_map
+    layout up front makes the transfer explicit and one-shot instead of
+    XLA re-sharding on every segment call.  ``mesh=None`` (single-shard
+    driver) is a no-op so callers keep one code path.
+    """
+    if mesh is None:
+        return tree
+    sh = NamedSharding(mesh, row_spec(axis))
+    return jax.tree.map(lambda a: jax.device_put(a, sh), tree)
+
+
 def cache_specs(cache, mesh: Mesh, seq_shard: bool = False,
                 policy: str = "tp"):
     """KV/SSM cache specs: batch over (pod, data); optionally the sequence

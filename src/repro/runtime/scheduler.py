@@ -28,6 +28,12 @@ class RoundRecord:
     shard_times: np.ndarray          # [num_shards] seconds (or iters)
     imbalance: float                 # (max - mean) / mean
     predicted_imbalance: float
+    # [num_shards] fraction of padded slot-iterations that did live Newton
+    # work (1.0 = every slot busy every iteration).  Imbalance measures
+    # how evenly *work* landed; occupancy measures how much of the paid
+    # SPMD envelope was work at all — the waste active-set compaction
+    # recovers.  None when the executor predates occupancy accounting.
+    occupancy: np.ndarray | None = None
 
 
 @dataclass
@@ -75,7 +81,8 @@ class DynamicScheduler:
     def record(self, round_idx: int, feats: np.ndarray,
                measured: np.ndarray, shard_of_task: np.ndarray,
                plan: decompose.Plan | None = None,
-               plan_round: int = 0):
+               plan_round: int = 0,
+               occupancy: np.ndarray | None = None):
         """Feed back measured per-task cost (e.g. Newton iterations).
 
         Pass the ``plan`` the round was executed from (and which of its
@@ -85,6 +92,14 @@ class DynamicScheduler:
         measured as (predicted work assigned) / (measured time), EMA-
         blended, instead of the threshold-probe fallback that only reacts
         once a shard already exceeds ``straggler_factor``× the median.
+
+        ``occupancy`` ([num_shards], live-slot-iteration fraction from
+        the round executor) is stored on the ``RoundRecord``: imbalance
+        says whether work was spread evenly, occupancy says how much of
+        the padded SPMD envelope was work at all — a round can be
+        perfectly balanced yet mostly padding once sources converge,
+        which is the signal that a smaller ``compact_every`` (or
+        redistribution) would pay.
         """
         self.cost_model = self.cost_model.refit(feats, measured)
         shard_times = np.bincount(shard_of_task, weights=measured,
@@ -95,7 +110,8 @@ class DynamicScheduler:
         rec = RoundRecord(
             round_idx=round_idx, shard_times=shard_times,
             imbalance=float((shard_times.max() - mean) / mean),
-            predicted_imbalance=predicted)
+            predicted_imbalance=predicted,
+            occupancy=occupancy)
         self.history.append(rec)
         if plan is not None and plan.batches:
             # predicted time was cost/speed; undo the division to get the
@@ -120,3 +136,9 @@ class DynamicScheduler:
 
     def imbalance_history(self) -> np.ndarray:
         return np.array([r.imbalance for r in self.history])
+
+    def occupancy_history(self) -> np.ndarray:
+        """[rounds, num_shards] slot-occupancy fractions (rounds recorded
+        without occupancy telemetry are skipped)."""
+        return np.array([r.occupancy for r in self.history
+                         if r.occupancy is not None])

@@ -1,0 +1,73 @@
+"""Regenerate ``tests/fixtures/golden_catalog.npz``.
+
+The golden catalog pins ``run_inference`` end to end: a fixed synthetic
+sky, fixed candidate perturbations, and the fitted catalog the ``ref``
+backend produced when the fixture was (re)generated.
+``tests/test_golden_catalog.py`` asserts every kernel backend that runs
+on CPU reproduces it at rtol 1e-4, so kernel/optimizer refactors cannot
+silently drift accuracy.
+
+Regenerate ONLY when an intentional accuracy-affecting change lands
+(and say so in the commit message):
+
+    PYTHONPATH=src python tests/fixtures/gen_golden_catalog.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+import jax
+import numpy as np
+
+# the problem definition is shared with the test so the two can never
+# disagree about what the golden catalog is a catalog *of*
+CONFIG = dict(seed=7, num_sources=6, field=96, cand_noise=0.4,
+              patch=16, batch=6, compact_every=4)
+
+
+def fit_catalog(backend: str):
+    import jax.numpy as jnp
+
+    from repro.core import heuristic, infer, synthetic
+    from repro.core.priors import default_priors
+
+    priors = default_priors()
+    sky = synthetic.sample_sky(jax.random.PRNGKey(CONFIG["seed"]),
+                               num_sources=CONFIG["num_sources"],
+                               field=CONFIG["field"], priors=priors)
+    cand = sky.truth.pos + CONFIG["cand_noise"] * jax.random.normal(
+        jax.random.PRNGKey(CONFIG["seed"] + 1), sky.truth.pos.shape)
+    est = heuristic.measure_catalog(sky.images, sky.metas, cand)
+    thetas, stats = infer.run_inference(
+        sky.images, sky.metas, est, priors, patch=CONFIG["patch"],
+        batch=CONFIG["batch"], compact_every=CONFIG["compact_every"],
+        backend=backend)
+    assert stats.converged == CONFIG["num_sources"], stats.converged
+    cat = infer.infer_catalog(thetas)
+    return thetas, cat
+
+
+def main():
+    thetas, cat = fit_catalog("ref")
+    out = os.path.join(os.path.dirname(__file__), "golden_catalog.npz")
+    np.savez(
+        out,
+        thetas=np.asarray(thetas),
+        pos=np.asarray(cat.pos),
+        ref_flux=np.asarray(cat.ref_flux),
+        colors=np.asarray(cat.colors),
+        is_gal=np.asarray(cat.is_gal),
+        gal_scale=np.asarray(cat.gal_scale),
+        **{f"config_{k}": v for k, v in CONFIG.items()},
+    )
+    print(f"wrote {out}")
+    print("pos:\n", np.asarray(cat.pos))
+    print("ref_flux:", np.asarray(cat.ref_flux))
+
+
+if __name__ == "__main__":
+    main()

@@ -117,6 +117,54 @@ def test_make_plan_slow_shard_gets_less_load():
         np.testing.assert_array_equal(b0, b1)
 
 
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 160),
+       shards=st.integers(1, 6), batch=st.integers(1, 12))
+def test_pack_round_schedules_each_source_at_most_once(seed, n, shards,
+                                                       batch):
+    """pack_round invariants: exactly min(n, shards·batch) sources
+    scheduled, no source twice, per-shard capacity respected, every
+    index valid."""
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 100, (n, 2))
+    costs = rng.lognormal(1.0, 1.0, n)
+    speed = rng.uniform(0.2, 1.0, shards)
+    plan = decompose.pack_round(pos, costs, shards, batch, extent=100.0,
+                                shard_speed=speed)
+    b = plan.batches[0]
+    assert b.shape == (shards, batch)
+    flat = b.reshape(-1)
+    idx = flat[flat >= 0]
+    assert idx.size == min(n, shards * batch)
+    assert len(set(idx.tolist())) == idx.size
+    assert idx.min(initial=0) >= 0 and idx.max(initial=0) < n
+    assert ((b >= 0).sum(axis=1) <= batch).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 200),
+       shards=st.integers(2, 6), batch=st.integers(2, 12))
+def test_pack_round_swap_never_increases_makespan(seed, n, shards, batch):
+    """The swap phase only ever trades the makespan shard's priciest
+    chunk for a strictly cheaper unscheduled one, so the predicted
+    makespan with swapping can never exceed the plain capacity-LPT
+    pack."""
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 100, (n, 2))
+    costs = rng.lognormal(1.0, 1.2, n)
+    speed = rng.uniform(0.2, 1.0, shards)
+    kw = dict(extent=100.0, shard_speed=speed)
+    with_swap = decompose.pack_round(pos, costs, shards, batch,
+                                     swap=True, **kw)
+    no_swap = decompose.pack_round(pos, costs, shards, batch,
+                                   swap=False, **kw)
+    assert (with_swap.predicted_max_cost
+            <= no_swap.predicted_max_cost + 1e-9)
+    # the swap never drops below full occupancy either: same slot count
+    assert ((with_swap.batches[0] >= 0).sum()
+            == (no_swap.batches[0] >= 0).sum())
+
+
 def test_planners_align_on_empty_and_bad_args():
     empty = np.zeros((0, 2))
     no_cost = np.zeros(0)

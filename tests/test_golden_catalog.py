@@ -1,0 +1,66 @@
+"""Golden-catalog regression: ``run_inference`` must keep reproducing the
+committed fixture catalog across every CPU-capable kernel backend, so
+future kernel/optimizer refactors cannot silently drift accuracy.
+
+The fixture (``tests/fixtures/golden_catalog.npz``) stores the fitted
+catalog of a fixed synthetic sky plus the exact problem configuration;
+``tests/fixtures/gen_golden_catalog.py`` regenerates it (only when an
+intentional accuracy change lands).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from fixtures.gen_golden_catalog import CONFIG, fit_catalog
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "golden_catalog.npz")
+
+RTOL = 1e-4
+
+
+@pytest.fixture(scope="module")
+def golden():
+    data = np.load(FIXTURE)
+    # the fixture must describe the same problem the generator builds —
+    # a drifted config would silently turn this suite into noise
+    for k, v in CONFIG.items():
+        assert data[f"config_{k}"] == v, (k, data[f"config_{k}"], v)
+    return data
+
+
+@pytest.fixture(scope="module")
+def ref_fit():
+    # shared across the ref-backend tests: the fit is ~40 s, pay it once
+    return fit_catalog("ref")
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+def test_run_inference_reproduces_golden_catalog(golden, backend,
+                                                 request):
+    if backend == "ref":
+        thetas, cat = request.getfixturevalue("ref_fit")
+    else:
+        thetas, cat = fit_catalog(backend)
+    # positions: absolute tolerance at milli-pixel scale (rtol on a
+    # coordinate is meaningless near the field origin)
+    np.testing.assert_allclose(np.asarray(cat.pos), golden["pos"],
+                               rtol=RTOL, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(cat.ref_flux),
+                               golden["ref_flux"], rtol=RTOL)
+    np.testing.assert_allclose(np.asarray(cat.colors), golden["colors"],
+                               rtol=RTOL, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cat.is_gal), golden["is_gal"],
+                               rtol=RTOL, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cat.gal_scale),
+                               golden["gal_scale"], rtol=RTOL, atol=1e-4)
+
+
+def test_golden_thetas_match_ref_backend(golden, ref_fit):
+    """The raw variational parameters of the generating backend are
+    pinned too (tighter than catalog level: theta drift that cancels in
+    the catalog still signals a changed optimizer trajectory)."""
+    thetas, _ = ref_fit
+    np.testing.assert_allclose(np.asarray(thetas), golden["thetas"],
+                               rtol=1e-4, atol=1e-4)

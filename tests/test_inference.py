@@ -101,18 +101,47 @@ def test_compaction_catalog_parity_and_accounting():
                for r in s1.bucket_history)
 
 
-def test_compaction_rejects_mesh():
-    """compact_every is a single-shard optimization; combining it with a
-    mesh must fail loudly instead of silently skipping compaction."""
+def test_compaction_on_mesh_matches_single_shard():
+    """The lifted restriction (SPMD-elastic compaction): mesh +
+    compact_every must run — and reproduce the single-shard compacted
+    catalog at rtol 1e-5.  Per-row determinism (trust-region solve,
+    frozen done-row radii, warm-state exchange) removes every
+    *algorithmic* batch-composition dependence; what remains is kernel
+    float reassociation across bucket widths, which only moves
+    weakly-identified variational components — the catalog is the
+    contract.  Runs on however many devices the process has (the CI
+    multi-device job forces 2, making the exchange a real cross-device
+    all_to_all)."""
     from jax.sharding import Mesh
     priors = default_priors()
-    sky = synthetic.sample_sky(jax.random.PRNGKey(11), num_sources=2,
-                               field=64, priors=priors)
-    est = heuristic.measure_catalog(sky.images, sky.metas, sky.truth.pos)
-    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
-    with pytest.raises(ValueError, match="compact_every"):
-        infer.run_inference(sky.images, sky.metas, est, priors, patch=16,
-                            batch=2, mesh=mesh, compact_every=4)
+    sky = synthetic.sample_sky(jax.random.PRNGKey(11), num_sources=8,
+                               field=128, priors=priors)
+    cand = sky.truth.pos + 0.4 * jax.random.normal(
+        jax.random.PRNGKey(12), sky.truth.pos.shape)
+    est = heuristic.measure_catalog(sky.images, sky.metas, cand)
+    ndev = min(2, len(jax.devices()))
+    mesh = Mesh(np.array(jax.devices()[:ndev]), ("data",))
+    kw = dict(patch=16, backend="ref", compact_every=4)
+    t_m, s_m = infer.run_inference(sky.images, sky.metas, est, priors,
+                                   batch=8 // ndev, mesh=mesh, **kw)
+    t_s, s_s = infer.run_inference(sky.images, sky.metas, est, priors,
+                                   batch=8, **kw)
+    assert s_m.converged == s_s.converged == 8
+    c_m = infer.infer_catalog(t_m)
+    c_s = infer.infer_catalog(t_s)
+    np.testing.assert_allclose(np.asarray(c_m.pos), np.asarray(c_s.pos),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c_m.ref_flux),
+                               np.asarray(c_s.ref_flux), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(c_m.is_gal),
+                               np.asarray(c_s.is_gal), rtol=1e-5,
+                               atol=1e-5)
+    # compaction telemetry flows for the mesh path too: power-of-two
+    # buckets (or the batch-width clamp), occupancy per shard per round
+    assert all(r.padded == 8 // ndev or r.padded & (r.padded - 1) == 0
+               for r in s_m.bucket_history)
+    assert s_m.shard_occupancy.shape[1] == ndev
+    assert np.all(s_m.shard_occupancy <= 1.0 + 1e-9)
 
 
 def test_refinement_pass_does_not_hurt():

@@ -147,6 +147,68 @@ def test_tr_subproblem_batch_cholesky_parity():
                                rtol=1e-5, atol=1e-7)
 
 
+def test_tr_subproblem_batch_near_singular_and_indefinite():
+    """Pin the Cholesky→eigh+bisection fallback boundary (PR 3 added the
+    fast path with only happy-path coverage): near-singular PD, exactly
+    singular, and indefinite Hessians must all fall back to the general
+    solve and still return a feasible, model-decreasing step."""
+    d = 8
+    key = jax.random.PRNGKey(21)
+    q, _ = jnp.linalg.qr(jax.random.normal(key, (d, d)))
+    grad = jax.random.normal(jax.random.PRNGKey(22), (d,))
+
+    def h_with_evals(evals):
+        return (q * jnp.asarray(evals)) @ q.T
+
+    cases = [
+        # near-singular PD: tiny but positive lowest eigenvalue — the
+        # Newton step is huge, so a finite radius forces the boundary
+        h_with_evals([1e-7] + [1.0] * (d - 1)),
+        # exactly singular: Cholesky emits NaNs → non-PD → general path
+        h_with_evals([0.0] + [1.0] * (d - 1)),
+        # indefinite: negative curvature direction
+        h_with_evals([-0.5] + [1.0] * (d - 1)),
+    ]
+    for hess in cases:
+        for radius in (0.1, 1e3):
+            p = newton.tr_subproblem_batch(grad[None], hess[None],
+                                           jnp.asarray([radius]))[0]
+            assert bool(jnp.all(jnp.isfinite(p)))
+            assert float(jnp.linalg.norm(p)) <= radius * 1.01
+            model = float(grad @ p + 0.5 * p @ hess @ p)
+            assert model <= 1e-5, (model, radius)
+    # the singular/indefinite cases must agree with the per-source exact
+    # solver (they can never take the Cholesky step)
+    for hess in cases[1:]:
+        radius = jnp.asarray([0.25])
+        p_b = newton.tr_subproblem_batch(grad[None], hess[None], radius)
+        p_e = jax.vmap(newton.tr_subproblem)(grad[None], hess[None],
+                                             radius)
+        np.testing.assert_allclose(np.asarray(p_b), np.asarray(p_e),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_tr_subproblem_batch_row_deterministic():
+    """A row's step must not depend on its batch neighbors: PD-interior
+    rows take the Cholesky step on BOTH the fast path and the general
+    (mixed-batch) path, so re-batching a source — compaction buckets,
+    mesh shards — reproduces its trajectory bitwise.  This is the
+    invariant the SPMD compaction parity tests build on."""
+    key = jax.random.PRNGKey(23)
+    d, s = 8, 5
+    qs = jax.random.normal(key, (s, d, d))
+    pd = qs @ jnp.transpose(qs, (0, 2, 1)) + 0.5 * jnp.eye(d)
+    grads = 0.01 * jax.random.normal(jax.random.PRNGKey(24), (s, d))
+    radii = jnp.full((s,), 10.0)
+    p_pure = newton.tr_subproblem_batch(grads, pd, radii)
+    # poison one row: the batch predicate flips to the general path,
+    # but every other row's step must be bit-identical
+    h_mixed = pd.at[0].set((qs[0] + qs[0].T) / 2)
+    p_mixed = newton.tr_subproblem_batch(grads, h_mixed, radii)
+    np.testing.assert_array_equal(np.asarray(p_mixed[1:]),
+                                  np.asarray(p_pure[1:]))
+
+
 def _mixed_difficulty_problem(s=32, d=6, hard_frac=0.25, far=150.0):
     """Concave quadratics whose optima are near for 'easy' sources and
     ``far`` away for 'hard' ones: with the trust region growing 2× per
@@ -188,6 +250,28 @@ def test_fit_batch_compacted_roundtrip():
     assert records and all(r.padded >= r.size for r in records)
     # power-of-two buckets only (bounded recompilation)
     assert all(r.padded & (r.padded - 1) == 0 for r in records)
+
+
+def test_fit_batch_compacted_external_negotiation():
+    """The ``negotiate`` hook: an externally-agreed bucket size (e.g. the
+    cross-shard psum/pmax value) overrides the local pow2 policy — and a
+    width too small for the live set fails loudly."""
+    obj, hs, opt = _mixed_difficulty_problem(s=16)
+    theta0 = jnp.zeros(opt.shape)
+    plain = newton.fit_batch(obj, theta0, hs, opt, max_iters=40, gtol=1e-4)
+    comp, records = newton.fit_batch_compacted(
+        obj, theta0, hs, opt, max_iters=40, gtol=1e-4, compact_every=5,
+        negotiate=lambda live: 16)
+    # externally pinned to the full width: results unchanged, no bucket
+    # ever shrinks
+    np.testing.assert_allclose(np.asarray(comp.theta),
+                               np.asarray(plain.theta), rtol=1e-5,
+                               atol=1e-5)
+    assert all(r.padded == 16 for r in records)
+    with np.testing.assert_raises(ValueError):
+        newton.fit_batch_compacted(obj, theta0, hs, opt, max_iters=10,
+                                   gtol=1e-4, compact_every=5,
+                                   negotiate=lambda live: 2)
 
 
 def test_fit_batch_compacted_cost_drops():
