@@ -1,0 +1,107 @@
+"""End-to-end survey pipeline benchmark: fields/sec + detection quality.
+
+Runs the full detection → seeding → inference → stitching pipeline
+(``core/pipeline.run_pipeline``) over a synthetic multi-field survey with
+NO oracle positions, and reports throughput plus the catalog-quality
+gates: detection/stitched completeness and purity vs the synthetic truth,
+duplicate fits in overlap regions, and the retrieval-component split
+(total vs consumer-blocking fetch seconds — prefetch should hide nearly
+all of it).
+
+``--smoke`` is the CI acceptance assertion: completeness ≥ 90 %, purity
+≥ 90 %, ZERO duplicate fits, every field processed.  JSON lands in
+``--out``; ``main_csv`` emits the runner's CSV rows.
+"""
+from __future__ import annotations
+
+try:
+    from benchmarks import common  # noqa: F401  (repo-root/src sys.path shim)
+except ImportError:                # script-path invocation
+    import common                  # noqa: F401
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import pipeline, synthetic
+from repro.core.priors import default_priors
+
+
+def run(grid=(2, 2), field=96, overlap=32, sources_per_field=6,
+        patch=24, batch=8, seed=0, bright=True) -> dict:
+    priors = synthetic.bright_priors() if bright else default_priors()
+    survey = synthetic.sample_survey(
+        jax.random.PRNGKey(seed), grid=grid, field=field, overlap=overlap,
+        sources_per_field=sources_per_field, priors=priors)
+    t0 = time.perf_counter()
+    res = pipeline.run_pipeline(survey, priors, patch=patch, batch=batch)
+    wall = time.perf_counter() - t0
+    st = res.stats
+    fetch = st.fetch
+    return {
+        "grid": list(grid), "field": field, "overlap": overlap,
+        "n_truth": int(np.asarray(survey.truth.pos).shape[0]),
+        "n_catalog": int(np.asarray(res.catalog.pos).shape[0]),
+        "fields_run": st.fields_run,
+        "wall_seconds": wall,
+        "fields_per_sec": st.fields_run / wall,
+        "detect_seconds": sum(r.detect_seconds for r in st.fields),
+        "fit_seconds": sum(r.fit_seconds for r in st.fields),
+        "fetch_seconds": fetch.fetch_seconds,
+        "fetch_blocked_seconds": fetch.blocked_seconds,
+        "prefetch_hits": fetch.prefetch_hits,
+        "duplicates_removed": st.duplicates_removed,
+        "completeness": st.metrics["completeness"],
+        "purity": st.metrics["purity"],
+        "duplicates": st.metrics["duplicates"],
+        "converged": sum(r.n_converged for r in st.fields),
+        "fit": sum(r.n_owned for r in st.fields),
+    }
+
+
+def main_csv():
+    r = run()
+    emit("pipeline_e2e.2x2", r["wall_seconds"] * 1e6,
+         f"fields={r['fields_run']};fps={r['fields_per_sec']:.3f};"
+         f"completeness={r['completeness']:.2f};purity={r['purity']:.2f};"
+         f"dups={r['duplicates']};"
+         f"fetch_blocked={r['fetch_blocked_seconds']:.3f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", default="2x2")
+    ap.add_argument("--field", type=int, default=96)
+    ap.add_argument("--overlap", type=int, default=32)
+    ap.add_argument("--sources-per-field", type=int, default=6)
+    ap.add_argument("--patch", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--out", default="/tmp/pipeline_e2e.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert the CI acceptance gate: completeness and "
+                         "purity ≥ 0.9, zero duplicate fits, all fields "
+                         "processed")
+    args = ap.parse_args()
+    grid = tuple(int(g) for g in args.grid.split("x"))
+    r = run(grid=grid, field=args.field, overlap=args.overlap,
+            sources_per_field=args.sources_per_field, patch=args.patch,
+            batch=args.batch)
+    print(json.dumps(r, indent=1))
+    with open(args.out, "w") as f:
+        json.dump(r, f, indent=1)
+    if args.smoke:
+        assert r["fields_run"] == grid[0] * grid[1], r
+        assert r["completeness"] >= 0.9, r
+        assert r["purity"] >= 0.9, r
+        assert r["duplicates"] == 0, r
+        print("SMOKE OK: completeness "
+              f"{r['completeness']:.2f}, purity {r['purity']:.2f}, "
+              f"0 duplicates over {r['fields_run']} fields")
+
+
+if __name__ == "__main__":
+    main()

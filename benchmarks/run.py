@@ -17,7 +17,7 @@ import traceback
 def main() -> None:
     from benchmarks import (fig3_batch_scaling, fig4_weak_scaling,
                             fig5_strong_scaling, fig6_sources_per_sec,
-                            mesh_compaction, newton_fused,
+                            mesh_compaction, newton_fused, pipeline_e2e,
                             scheduler_adaptive, table1_accuracy)
     suites = [
         ("table1", table1_accuracy.main),
@@ -28,6 +28,7 @@ def main() -> None:
         ("scheduler", scheduler_adaptive.main_csv),
         ("newton_fused", newton_fused.main_csv),
         ("mesh_compaction", mesh_compaction.main_csv),
+        ("pipeline_e2e", pipeline_e2e.main_csv),
     ]
     for name, fn in suites:
         try:

@@ -5,7 +5,10 @@ This module is our stand-in: moment-based measurements on background-
 subtracted apertures, one image per band (heuristics "typically ignore all
 but one image in regions with overlap", §II).  It provides both the Table-I
 baseline and the initial candidate catalog that seeds Celeste inference
-(the paper initializes from an existing catalog).
+(the paper initializes from an existing catalog).  Candidate positions
+come from the caller: jittered truth in the oracle examples, or
+``core/detect.py`` matched-filter detections in the end-to-end survey
+pipeline (``core/pipeline.py``).
 """
 from __future__ import annotations
 

@@ -3,15 +3,25 @@
 Phases mirror the paper's implementation:
 
   1. *Load images* — the image set lives as device arrays (data/images.py is
-     the PGAS global-array analogue).
-  2. *Load catalog* — an initial candidate catalog (heuristic.py or a prior
-     survey) provides per-source initial estimates; neighbors are rendered
-     from these fixed estimates.
+     the PGAS global-array analogue; ``data.images.SurveyStore`` streams
+     multi-field surveys with prefetch, §III-F).
+  2. *Load catalog* — an initial candidate catalog provides per-source
+     initial estimates; neighbors are rendered from these fixed
+     estimates.  Candidates come from a prior survey, the Photo-style
+     heuristic (core/heuristic.py, §II), or — in the end-to-end survey
+     pipeline (core/pipeline.py) — from on-device detection
+     (core/detect.py) with no position oracle at all.
   3. *Optimize sources* — batches of sources, scheduled by
-     core/decompose.py, are optimized in parallel with the trust-region
-     Newton method.  On a mesh the batch axis is laid out over the ``data``
-     axis with ``shard_map`` so each device's ``while_loop`` runs only
-     until *its* batch converges (the Dtree-masking adaptation).
+     core/decompose.py (§III-C), are optimized in parallel with the
+     trust-region Newton method (§III-B).  Single-shard and mesh rounds
+     share ONE segment-loop executor: the batch axis is laid out over the
+     ``data`` axis with ``shard_map``, and with ``compact_every`` set the
+     loop pauses between segments so still-unconverged sources are
+     gathered into power-of-two buckets whose width every shard agrees on
+     via the psum/pmax negotiation (``parallel.collectives
+     .negotiated_bucket``) — skewed survivor counts trigger an
+     ``all_to_all`` redistribution so no shard pads more than one
+     power-of-two step above the global mean.
 
 With ``adaptive=True`` phase 3 closes the paper's Dtree loop
 (§III-C/G): each round is planned from the *current* cost model and

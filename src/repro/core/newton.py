@@ -24,11 +24,16 @@ general case falls back to eigendecomposition of the (27×27) Hessian plus
 bisection on the Levenberg shift λ — branch-free and fixed-iteration,
 hence jit-able.
 
-``fit_batch_compacted`` adds active-set compaction on top: every
+``fit_batch_compacted`` adds active-set compaction on top (§III-C and
+the petascale follow-up's dense-batch requirement): every
 ``compact_every`` iterations the unconverged sources are gathered into
 power-of-two buckets (bounded recompilation) and the loop restarts on the
 compacted batch, so a batch stops paying for members that already
-converged.
+converged.  The bucket arithmetic lives in ``negotiated_bucket_size`` —
+the host mirror of the cross-shard ``parallel.collectives
+.negotiated_bucket`` protocol — so the standalone API and the
+mesh-elastic driver (``core/infer.run_inference``) compact with
+identical widths.
 """
 from __future__ import annotations
 

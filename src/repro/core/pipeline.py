@@ -1,0 +1,367 @@
+"""End-to-end survey pipeline: detection → seeding → inference → stitching.
+
+This is the paper's actual workload shape (§III-D; and the petascale
+follow-up's production run): a survey of many overlapping fields streamed
+from an image store, candidate sources detected from pixels, seeded by the
+Photo-style heuristic (§II), fit per-field with Celeste VI, and merged
+into ONE duplicate-free global catalog at field boundaries.  No oracle
+positions anywhere: ``core/detect.py`` finds the candidates that
+``heuristic.measure_catalog`` turns into the initial catalog
+``infer.run_inference`` optimizes.
+
+Per field, the driver:
+
+  1. ``SurveyStore.fetch`` — the field's image stack lands on device
+     (served by the previous iteration's prefetch), and the NEXT field's
+     transfer starts immediately, so retrieval overlaps optimization.
+  2. ``detect.detect_sources`` over the full field including its halo.
+  3. *Ownership filter* — each detection is fit in exactly ONE field:
+     the survey is partitioned along the mid-lines of the overlap
+     regions, and a field only fits detections inside its owned
+     sub-rectangle.  Sources in a halo are imaged here but owned (and
+     fit) by the neighbor.
+  4. ``heuristic.measure_catalog`` seeds, ``infer.run_inference`` fits.
+  5. The fitted thetas land in a fixed-capacity per-field slab that IS
+     the checkpoint state: ``runtime/fault.run_loop`` commits it after
+     every field, so a killed run resumes at the last completed field
+     and replays deterministically (the kill-and-resume contract in
+     tests/test_pipeline.py).
+
+Stitching then flattens the per-field results and removes cross-field
+duplicates: detection noise can land the same physical source on both
+sides of an ownership boundary, so fitted sources from *different* fields
+within ``match_radius`` are collapsed by a nearest-neighbor match and the
+survivor is chosen by the primary-ownership rule (keep the fit whose
+field owns the pair's midpoint).  ``detect.detection_metrics`` scores the
+stitched catalog against the synthetic truth (completeness/purity — the
+acceptance gate benchmarks/pipeline_e2e.py asserts).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field as dataclass_field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import detect, elbo, heuristic, infer
+from repro.core.model import SourceParams
+from repro.core.priors import Priors, default_priors, fit_priors
+from repro.data.images import SurveyStore
+from repro.runtime import fault
+
+
+@dataclass
+class FieldRecord:
+    """Telemetry for one field processed in THIS run (resumed runs only
+    carry records for the fields they actually executed; earlier fields'
+    results live in the restored checkpoint state)."""
+    index: tuple
+    n_detected: int
+    n_owned: int
+    n_converged: int
+    detect_seconds: float
+    fit_seconds: float
+    mean_iters: float
+
+
+@dataclass
+class PipelineStats:
+    fields: list = dataclass_field(default_factory=list)  # [FieldRecord]
+    loop: fault.LoopStats | None = None
+    fetch: object = None            # data.images.FetchStats
+    duplicates_removed: int = 0
+    metrics: dict | None = None     # vs truth; None when truth withheld
+
+    @property
+    def fields_run(self) -> int:
+        return len(self.fields)
+
+
+@dataclass
+class PipelineResult:
+    catalog: SourceParams       # stitched, duplicate-free global catalog
+    thetas: np.ndarray          # [N, THETA_DIM] variational params
+    field_of: np.ndarray        # [N] owning field (row-major grid index)
+    stats: PipelineStats
+
+
+# ---------------------------------------------------------------------------
+# Ownership geometry
+# ---------------------------------------------------------------------------
+
+
+def owned_bounds(origin, *, field: int, overlap: int, extent):
+    """The half-open global rectangle a field owns: the survey partitioned
+    along overlap mid-lines, with edge fields owning out to the survey
+    boundary.  Returns (lo [2], hi [2])."""
+    origin = np.asarray(origin, np.float64)
+    extent = np.asarray(extent, np.float64)
+    half = overlap / 2.0
+    lo = np.where(origin > 0, origin + half, 0.0)
+    hi = np.where(origin + field < extent, origin + field - half, extent)
+    return lo, hi
+
+
+def ownership_mask(positions, origin, *, field: int, overlap: int,
+                   extent) -> np.ndarray:
+    """True for positions this field owns (and must fit)."""
+    pos = np.asarray(positions, np.float64).reshape(-1, 2)
+    lo, hi = owned_bounds(origin, field=field, overlap=overlap,
+                          extent=extent)
+    return np.all((pos >= lo) & (pos < hi), axis=1)
+
+
+def owner_of(positions, *, grid, field: int, overlap: int) -> np.ndarray:
+    """Row-major grid index of the field owning each global position —
+    the inverse of ``ownership_mask``, used by the stitcher's
+    primary-ownership rule."""
+    pos = np.asarray(positions, np.float64).reshape(-1, 2)
+    stride = field - overlap
+    ij = np.floor((pos - overlap / 2.0) / stride).astype(np.int64)
+    ij = np.clip(ij, 0, np.asarray(grid) - 1)
+    return ij[:, 0] * grid[1] + ij[:, 1]
+
+
+# ---------------------------------------------------------------------------
+# Stitching
+# ---------------------------------------------------------------------------
+
+
+def _near_pairs(pos: np.ndarray, radius: float):
+    """All index pairs (i < j) with ``|pos_i − pos_j| ≤ radius`` via a
+    radius-sized cell hash — near-linear in catalog size, versus the
+    dense N² distance matrix that would dominate stitching on large
+    surveys (duplicates are boundary-local; almost nothing pairs up)."""
+    cells = np.floor(pos / radius).astype(np.int64)
+    bins: dict = {}
+    for idx, key in enumerate(map(tuple, cells)):
+        bins.setdefault(key, []).append(idx)
+    ii, jj = [], []
+    for (cr, cc), members in bins.items():
+        for dr, dc in ((0, 0), (0, 1), (1, -1), (1, 0), (1, 1)):
+            other = members if (dr, dc) == (0, 0) else \
+                bins.get((cr + dr, cc + dc))
+            if other is None:
+                continue
+            for a in members:
+                for b in other:
+                    if (dr, dc) == (0, 0) and b <= a:
+                        continue
+                    ii.append(min(a, b))
+                    jj.append(max(a, b))
+    ii = np.asarray(ii, np.int64)
+    jj = np.asarray(jj, np.int64)
+    if ii.size == 0:
+        return ii, jj, np.zeros(0)
+    dist = np.linalg.norm(pos[ii] - pos[jj], axis=-1)
+    near = dist <= radius
+    return ii[near], jj[near], dist[near]
+
+
+def stitch_mask(positions, field_of, *, grid, field: int, overlap: int,
+                match_radius: float = 1.5):
+    """Duplicate suppression over fitted sources: keep-mask.
+
+    Two fits within ``match_radius`` are the same physical source.  The
+    cross-field case is the halo problem: detection noise put the same
+    boundary source on opposite sides of an ownership line, so both
+    fields fit it — the survivor is the fit whose field owns the pair's
+    *midpoint* (primary ownership).  The same-field case is post-fit
+    drift: detection's local-max suppression separates *seeds* by
+    ``min_sep``, but two seeds can still converge onto one bright source
+    — the earlier fit survives (fits are stored brightest-detection
+    first).  Returns (keep [N] bool, duplicates_removed).
+    """
+    pos = np.asarray(positions, np.float64).reshape(-1, 2)
+    fld = np.asarray(field_of, np.int64)
+    n = pos.shape[0]
+    keep = np.ones(n, bool)
+    if n < 2:
+        return keep, 0
+    ii, jj, dist = _near_pairs(pos, match_radius)
+    removed = 0
+    for k in np.argsort(dist, kind="stable"):
+        i, j = ii[k], jj[k]
+        if not (keep[i] and keep[j]):
+            continue
+        if fld[i] == fld[j]:
+            drop = j                      # keep the brighter (earlier) fit
+        else:
+            mid = 0.5 * (pos[i] + pos[j])
+            primary = owner_of(mid[None], grid=grid, field=field,
+                               overlap=overlap)[0]
+            # drop the non-primary fit; if neither matches (both drifted
+            # out of their own region), keep the earlier deterministically
+            drop = j if fld[i] == primary else i if fld[j] == primary \
+                else j
+        keep[drop] = False
+        removed += 1
+    return keep, removed
+
+
+# ---------------------------------------------------------------------------
+# The driver
+# ---------------------------------------------------------------------------
+
+
+def seed_catalog(images, metas, positions, priors: Priors | None = None,
+                 patch: int = 16, refit: bool = True):
+    """Detection positions → heuristic initial catalog + (re)fit priors.
+
+    The paper initializes from an existing catalog and learns priors from
+    it (§III-A); in the pipeline the "existing catalog" is the Photo-style
+    measurement of the detections.  Priors are refit only when asked AND
+    the field has enough sources to estimate them (≥ 4)."""
+    photo = heuristic.measure_catalog(images, metas,
+                                      jnp.asarray(positions), patch=patch)
+    n = int(np.asarray(positions).shape[0])
+    if refit and n >= 4:
+        pri = fit_priors(photo.is_gal, photo.ref_flux, photo.colors)
+    else:
+        pri = priors or default_priors()
+    return photo, pri
+
+
+def run_pipeline(survey, priors: Priors | None = None, *,
+                 store: SurveyStore | None = None,
+                 patch: int = 24, batch: int = 8,
+                 cap_per_field: int = 64,
+                 detect_threshold: float = 5.0, min_sep: int = 4,
+                 match_radius: float = 1.5, truth_radius: float = 2.0,
+                 backend: str | None = None, adaptive: bool = False,
+                 compact_every: int | None = None,
+                 max_iters: int = 50,
+                 refit_priors: bool = True,
+                 checkpoint_dir: str | None = None, ckpt_keep: int = 3,
+                 max_retries: int = 3, fault_injector=None,
+                 progress=None,
+                 log=lambda s: None) -> PipelineResult:
+    """Run the full survey pipeline; returns the stitched global catalog.
+
+    ``survey`` is a ``synthetic.Survey`` (or anything with the same
+    fields/grid/overlap/extent attributes); pass ``store`` to reuse a
+    ``SurveyStore`` (and its fetch stats) across calls.  ``cap_per_field``
+    statically bounds fitted sources per field so the checkpoint state
+    has fixed shapes (required for restore-into-template); the brightest
+    detections win when a field exceeds it.
+
+    ``checkpoint_dir`` enables field-granular fault tolerance: the result
+    slab is committed after EVERY field through ``runtime/fault.run_loop``,
+    and a new ``run_pipeline`` call with the same directory resumes after
+    the last committed field — the replayed fields are deterministic, so
+    an interrupted-then-resumed run reproduces the uninterrupted catalog
+    bit-for-bit.  ``fault_injector``/``max_retries`` are forwarded to
+    ``run_loop`` (tests use them to simulate node failures and kills).
+
+    ``backend``/``adaptive``/``compact_every`` forward to
+    ``infer.run_inference`` per field, so the fused-kernel and elastic-
+    compaction paths compose with the pipeline unchanged.
+    """
+    priors = priors or default_priors()
+    store = store or SurveyStore(survey)
+    nf = len(survey.fields)
+    state = {
+        "count": jnp.zeros((nf,), jnp.int32),
+        "thetas": jnp.zeros((nf, cap_per_field, elbo.THETA_DIM),
+                            jnp.float32),
+    }
+    # keyed by field index so a field replayed after a fault restore
+    # overwrites its record instead of double-counting the telemetry
+    records: dict[int, FieldRecord] = {}
+
+    def step_fn(st, i):
+        images, metas = store.fetch(i)
+        store.prefetch(i + 1)    # overlap the next field's retrieval
+        fld = survey.fields[i]
+
+        t0 = time.perf_counter()
+        # detect with headroom above the per-field fit cap: bright HALO
+        # detections (owned by neighbors) must not crowd owned sources
+        # out of the top-k before the ownership filter sees them
+        det = detect.detect_sources(images, metas,
+                                    threshold=detect_threshold,
+                                    min_sep=min_sep,
+                                    max_sources=2 * cap_per_field)
+        own = ownership_mask(det.positions, fld.origin,
+                             field=survey.field, overlap=survey.overlap,
+                             extent=survey.extent)
+        # brightest first (detect_sources returns snr-sorted), capped so
+        # the checkpoint slab stays fixed-shape
+        seeds = det.positions[own][:cap_per_field]
+        t_detect = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        n = seeds.shape[0]
+        if n:
+            photo, pri = seed_catalog(images, metas, seeds, priors,
+                                      patch=min(16, survey.field),
+                                      refit=refit_priors)
+            thetas_f, istats = infer.run_inference(
+                images, metas, photo, pri, patch=patch, batch=batch,
+                backend=backend, adaptive=adaptive,
+                compact_every=compact_every, max_iters=max_iters)
+            st = {
+                "count": st["count"].at[i].set(n),
+                "thetas": st["thetas"].at[i, :n].set(thetas_f),
+            }
+            conv, mean_iters = istats.converged, float(istats.iters.mean())
+        else:
+            st = {"count": st["count"].at[i].set(0),
+                  "thetas": st["thetas"]}
+            conv, mean_iters = 0, 0.0
+        t_fit = time.perf_counter() - t0
+
+        records[i] = FieldRecord(
+            index=fld.index, n_detected=int(det.positions.shape[0]),
+            n_owned=int(n), n_converged=int(conv),
+            detect_seconds=t_detect, fit_seconds=t_fit,
+            mean_iters=mean_iters)
+        log(f"field {fld.index}: {det.positions.shape[0]} detected, "
+            f"{n} owned, {conv} converged")
+        if progress is not None:
+            progress(i, nf)
+        return st, float(conv) / max(n, 1)
+
+    if checkpoint_dir is not None:
+        ck = Checkpointer(checkpoint_dir, keep=ckpt_keep)
+        state, loop = fault.run_loop(
+            state, step_fn, num_steps=nf, checkpointer=ck, ckpt_every=1,
+            max_retries=max_retries, fault_injector=fault_injector,
+            log=log)
+    else:
+        loop = fault.LoopStats()
+        for i in range(nf):
+            t0 = time.perf_counter()
+            state, loss = step_fn(state, i)
+            loop.step_times.append(time.perf_counter() - t0)
+            loop.losses.append(loss)
+            loop.steps_run += 1
+
+    # ---- stitch: flatten slabs, dedup across fields ----
+    counts = np.asarray(state["count"])
+    thetas_slab = np.asarray(state["thetas"])
+    thetas = np.concatenate(
+        [thetas_slab[i, :counts[i]] for i in range(nf)], axis=0) \
+        if counts.sum() else np.zeros((0, elbo.THETA_DIM), np.float32)
+    field_of = np.repeat(np.arange(nf), counts)
+    catalog = infer.infer_catalog(jnp.asarray(thetas))
+    keep, removed = stitch_mask(
+        np.asarray(catalog.pos), field_of, grid=survey.grid,
+        field=survey.field, overlap=survey.overlap,
+        match_radius=match_radius)
+    catalog = jax.tree.map(lambda a: a[np.flatnonzero(keep)], catalog)
+    thetas = thetas[keep]
+    field_of = field_of[keep]
+
+    stats = PipelineStats(fields=[records[k] for k in sorted(records)],
+                          loop=loop, fetch=store.stats,
+                          duplicates_removed=removed)
+    if getattr(survey, "truth", None) is not None:
+        stats.metrics = detect.detection_metrics(
+            np.asarray(catalog.pos), np.asarray(survey.truth.pos),
+            radius=truth_radius)
+    return PipelineResult(catalog=catalog, thetas=thetas,
+                          field_of=field_of, stats=stats)

@@ -14,8 +14,11 @@ same compaction bucket size from a ``psum``/``pmax`` over the unconverged
 counts — identical shapes on every shard, so ``shard_map`` stays happy —
 and whole sources are moved between shards with an ``all_to_all`` row
 exchange so no shard pads more than one power-of-two step above the global
-mean.  ``core/infer.py`` drives the protocol; ``docs/scheduling.md``
-documents it.
+mean.  ``core/infer.run_inference`` drives the protocol for every round
+(single-shard rounds use the same routing contract through
+``compact_rows``); ``newton.negotiated_bucket_size`` is the host-side
+mirror the driver checks against per segment, and ``docs/scheduling.md``
+documents the full negotiation/redistribution policy.
 
 Implemented with ``jax.lax.ppermute`` / ``all_to_all`` inside
 ``shard_map`` — the schedule is explicit so the dry-run HLO shows exactly

@@ -1,0 +1,183 @@
+"""Docs reference lint: fail CI when a doc references a dead symbol.
+
+Docs rot silently: a rename in ``src/repro`` leaves README.md and
+``docs/*.md`` pointing at symbols that no longer exist.  This checker
+extracts code references from the docs and verifies each one against the
+actual tree — import-and-getattr, no stub registry to maintain.
+
+What counts as a checkable reference:
+
+* ``repro.a.b.c`` dotted tokens (inline code or fenced blocks): the
+  longest importable module prefix is imported and the remainder resolved
+  with ``getattr``.
+* path-style inline code starting with a known top-level directory or
+  ``repro`` package (``core/``, ``data/``, ``runtime/``, ``parallel/``,
+  ``kernels/``, ``checkpoint/``, ``benchmarks/``, ``examples/``,
+  ``tests/``, ``docs/``, ``tools/``, ``src/``):
+    - with a file extension (``benchmarks/run.py``, ``docs/pipeline.md``)
+      → the file must exist (package paths also checked under
+      ``src/repro``);
+    - module + attribute chain in slash form (``core/infer.run_inference``,
+      ``parallel/collectives.negotiated_bucket``) → imported under
+      ``repro.`` and resolved with ``getattr`` (trailing call syntax and
+      argument lists are stripped).  Dotted refs without a slash are only
+      checked when they start with ``repro.`` — a bare ``infer.run_…``
+      is ambiguous and skipped.
+* ``from repro.x import a, b`` / ``import repro.x`` lines inside fenced
+  code blocks.
+
+Anything else (shell flags, env vars, math, prose in backticks) is
+ignored.  Exit status 1 lists every dead reference as file:line.
+
+Run:  PYTHONPATH=src python tools/docs_lint.py  [files...]
+"""
+from __future__ import annotations
+
+import glob
+import importlib
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+TOP_DIRS = ("core", "data", "runtime", "parallel", "kernels", "checkpoint",
+            "launch", "optim", "models", "analysis", "configs", "src",
+            "benchmarks", "examples", "tests", "docs", "tools")
+REPRO_PKGS = ("core", "data", "runtime", "parallel", "kernels",
+              "checkpoint", "launch", "optim", "models", "analysis",
+              "configs")
+
+INLINE_CODE = re.compile(r"`([^`\n]+)`")
+FENCE = re.compile(r"^(```|~~~)")
+DOTTED = re.compile(r"\brepro(?:\.[A-Za-z_]\w*)+")
+IMPORT_LINE = re.compile(
+    r"^\s*(?:from\s+(repro(?:\.[A-Za-z_]\w*)*)\s+import\s+([\w\s,().*]+)"
+    r"|import\s+(repro(?:\.[A-Za-z_]\w*)*))")
+PATHISH = re.compile(
+    r"^(?:%s)/[\w./-]*\w" % "|".join(TOP_DIRS))
+FILE_TOKEN = re.compile(
+    r"\b((?:%s)/[\w./-]+\.(?:py|md|json|npz|yml|yaml|txt|toml))\b"
+    % "|".join(TOP_DIRS))
+
+
+def _import_chain(mod_segs, attrs):
+    """Import repro.<mod_segs>, getattr the attrs chain.  Returns error
+    string or None."""
+    name = "repro." + ".".join(mod_segs) if mod_segs else "repro"
+    try:
+        obj = importlib.import_module(name)
+    except Exception as e:   # any import-time failure is a dead doc ref,
+        return f"cannot import {name}: {e}"   # not a linter crash
+    for a in attrs:
+        # an attr segment may itself be a submodule (kernels/render.ops)
+        if not hasattr(obj, a):
+            try:
+                obj = importlib.import_module(f"{obj.__name__}.{a}")
+                continue
+            except (ImportError, AttributeError):
+                return f"{obj.__name__!r} has no attribute {a!r}"
+        obj = getattr(obj, a)
+    return None
+
+
+def check_dotted(token):
+    """``repro.a.b.c`` — longest importable prefix, getattr the rest."""
+    segs = token.split(".")[1:]
+    for cut in range(len(segs), -1, -1):
+        name = ".".join(["repro"] + segs[:cut])
+        try:
+            importlib.import_module(name)
+        except Exception:
+            continue
+        return _import_chain(segs[:cut], segs[cut:])
+    return f"cannot import any prefix of {token}"
+
+
+def check_pathish(span):
+    """``core/infer.run_inference(...)`` / ``benchmarks/run.py`` spans."""
+    span = span.split()[0].split("(")[0].rstrip(".:,")
+    m = FILE_TOKEN.match(span)
+    if m or re.search(r"\.(py|md|json|npz|yml|yaml|txt|toml)$", span):
+        rel = span
+        for cand in (rel, os.path.join("src", "repro", rel),
+                     os.path.join("src", rel)):
+            if os.path.exists(os.path.join(ROOT, cand)):
+                return None
+        return f"no such file: {span}"
+    parts = span.split("/")
+    if parts[0] not in REPRO_PKGS:
+        return None          # repo-level dir without extension: skip
+    last = parts[-1].split(".")
+    mod_segs = parts[:-1] + [last[0]]
+    return _import_chain(mod_segs, last[1:])
+
+
+def check_file(path):
+    errors = []
+    in_fence = False
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            if FENCE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            spans = ([line] if in_fence
+                     else INLINE_CODE.findall(line))
+            for span in spans:
+                span = span.strip()
+                for tok in DOTTED.findall(span):
+                    err = check_dotted(tok)
+                    if err:
+                        errors.append((path, ln, tok, err))
+                m = IMPORT_LINE.match(span)
+                if m and in_fence:
+                    mod = m.group(1) or m.group(3)
+                    err = check_dotted(mod)
+                    if err:
+                        errors.append((path, ln, mod, err))
+                    if m.group(1) and m.group(2):
+                        for name in m.group(2).split(","):
+                            name = name.strip().split(" as ")[0].strip("() ")
+                            if not name or name == "*":
+                                continue
+                            err = check_dotted(f"{mod}.{name}")
+                            if err:
+                                errors.append((path, ln,
+                                               f"{mod}.{name}", err))
+                if in_fence:
+                    for tok in FILE_TOKEN.findall(span):
+                        err = check_pathish(tok)
+                        if err:
+                            errors.append((path, ln, tok, err))
+                elif PATHISH.match(span):
+                    err = check_pathish(span)
+                    if err:
+                        errors.append((path, ln, span, err))
+    return errors
+
+
+def main(argv):
+    files = argv or (sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+                     + [os.path.join(ROOT, "README.md")])
+    errors = []
+    checked = 0
+    for path in files:
+        if not os.path.exists(path):
+            errors.append((path, 0, path, "file listed but missing"))
+            continue
+        checked += 1
+        errors.extend(check_file(path))
+    for path, ln, tok, err in errors:
+        rel = os.path.relpath(path, ROOT)
+        print(f"{rel}:{ln}: `{tok}` — {err}")
+    if errors:
+        print(f"\ndocs lint: {len(errors)} dead reference(s) "
+              f"in {checked} file(s)")
+        return 1
+    print(f"docs lint: OK ({checked} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
