@@ -1,0 +1,202 @@
+"""The utilization-gated speed ladder: default → autotuned → bf16.
+
+Measures sources/sec of the full trust-region Newton fit (fixed
+iteration count, ``gtol=0`` — render-for-render comparable) on one
+kernel backend across three rungs:
+
+  1. **baseline** — f32, the untuned kernel defaults (``BLOCK=32``
+     sources per program, 128-lane minor-dim padding);
+  2. **tuned**    — f32, block shapes from the ``kernels/tuning``
+     autotuner sweep (cached on disk; re-swept here);
+  3. **tuned+bf16** — tuned shapes plus the mixed-precision Hessian
+     assembly (``precision="bf16"``).
+
+``--smoke`` is the CI gate: a reduced 2-point sweep per knob, then
+assert (a) the tuned rung is no slower than the BLOCK=32 default
+(within ``--regression-threshold``), (b) the tuned+bf16 rung is
+strictly faster than the baseline, and (c) the bf16 policy still
+reproduces the golden-catalog fixture (its bf16 branch) at rtol 1e-4.
+A regression in any of the three fails the build.
+
+    python -m benchmarks.kernel_occupancy --sources 192
+    python benchmarks/kernel_occupancy.py --smoke
+"""
+from __future__ import annotations
+
+try:
+    from benchmarks import common  # noqa: F401  (repo-root/src sys.path shim)
+except ImportError:                # script-path invocation
+    import common                  # noqa: F401
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elbo, infer, newton, synthetic
+from repro.core.priors import default_priors
+from repro.kernels import tuning
+
+
+def _problem(s: int, patch: int, seed: int = 0):
+    priors = default_priors()
+    sky = synthetic.sample_sky(jax.random.PRNGKey(seed), num_sources=s,
+                               field=max(96, 4 * patch), priors=priors)
+    x, corners = infer.extract_patches(sky.images, sky.metas,
+                                       sky.truth.pos, patch)
+    bg = jnp.broadcast_to(sky.metas.sky[None, :, None, None], x.shape)
+    thetas = jax.vmap(lambda t: elbo.init_theta(t, priors))(sky.truth)
+    return sky.metas, priors, thetas, x, bg, corners
+
+
+def _time(fn, iters=1):
+    out = jax.block_until_ready(fn())     # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters, out
+
+
+def _rung(name, backend, metas, priors, thetas, x, bg, corners,
+          max_iters, reps, precision=None, config=None):
+    obj = infer.make_objective(metas, priors, backend=backend,
+                               precision=precision, kernel_config=config)
+    fit = lambda: newton.fit_batch(obj, thetas, x, bg, corners,
+                                   max_iters=max_iters, gtol=0.0)
+    secs, _ = _time(fit, iters=reps)
+    s = int(thetas.shape[0])
+    return {
+        "rung": name,
+        "backend": backend,
+        "precision": precision or "f32",
+        "config": dataclasses.asdict(config) if config else None,
+        "sources": s,
+        "patch": int(x.shape[-1]),
+        "n_img": int(x.shape[1]),
+        "newton_iters": max_iters,
+        "seconds_per_fit": secs,
+        "sources_per_sec": s / secs,
+    }
+
+
+def _golden_bf16_check(config: tuning.KernelConfig) -> dict:
+    """Fit the golden problem under the bf16 policy (tuned shapes) and
+    compare against the fixture's bf16 branch at rtol 1e-4."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    fixdir = os.path.join(root, "tests", "fixtures")
+    if fixdir not in sys.path:
+        sys.path.insert(0, fixdir)
+    from gen_golden_catalog import fit_catalog
+
+    cfg = dataclasses.replace(config, precision="bf16")
+    _, cat = fit_catalog("pallas_interpret", kernel_config=cfg)
+    golden = np.load(os.path.join(fixdir, "golden_catalog.npz"))
+    checks = [
+        ("pos", np.asarray(cat.pos), golden["bf16_pos"], 1e-3),
+        ("ref_flux", np.asarray(cat.ref_flux), golden["bf16_ref_flux"], 0.0),
+        ("colors", np.asarray(cat.colors), golden["bf16_colors"], 1e-4),
+        ("is_gal", np.asarray(cat.is_gal), golden["bf16_is_gal"], 1e-3),
+        ("gal_scale", np.asarray(cat.gal_scale), golden["bf16_gal_scale"],
+         1e-4),
+    ]
+    out = {"rtol": 1e-4, "fields": {}, "ok": True}
+    for name, got, want, atol in checks:
+        err = float(np.max(np.abs(got - want)))
+        ok = bool(np.allclose(got, want, rtol=1e-4, atol=atol))
+        out["fields"][name] = {"max_abs_err": err, "atol": atol, "ok": ok}
+        out["ok"] &= ok
+    return out
+
+
+def run(args) -> dict:
+    backend = args.backend
+    metas, priors, thetas, x, bg, corners = _problem(args.sources,
+                                                     args.patch)
+    n_img = int(x.shape[1])
+    sweep_kw = {}
+    if args.smoke:   # 2-point sweep per knob: default vs the CPU winner
+        sweep_kw = dict(elbo_blocks=(32, 64), render_blocks=(1, 8))
+    tuned_cfg, sweep = tuning.autotune(backend, args.sources, n_img,
+                                       args.patch, **sweep_kw)
+
+    common_args = (metas, priors, thetas, x, bg, corners,
+                   args.max_iters, args.reps)
+    ladder = [
+        _rung("baseline_f32_block32", backend, *common_args,
+              config=tuning.DEFAULT),
+        _rung("tuned_f32", backend, *common_args, config=tuned_cfg),
+        _rung("tuned_bf16", backend, *common_args, precision="bf16",
+              config=tuned_cfg),
+    ]
+    base = ladder[0]["sources_per_sec"]
+    rep = {
+        "benchmark": "kernel_occupancy",
+        "metric": "sources/sec of the fixed-iteration Newton fit",
+        "device": jax.devices()[0].platform,
+        "tuned_config": dataclasses.asdict(tuned_cfg),
+        "sweep": {k: sweep[k] for k in ("elbo", "render", "winner")},
+        "ladder": ladder,
+        "speedup_vs_baseline": {
+            r["rung"]: r["sources_per_sec"] / base for r in ladder},
+    }
+    if args.smoke or args.golden:
+        rep["golden_bf16"] = _golden_bf16_check(tuned_cfg)
+    return rep
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sources", type=int, default=192)
+    ap.add_argument("--patch", type=int, default=16)
+    ap.add_argument("--max-iters", type=int, default=3)
+    ap.add_argument("--reps", type=int, default=1)
+    ap.add_argument("--backend", default=os.environ.get(
+        "REPRO_ELBO_BACKEND") or "pallas_interpret")
+    ap.add_argument("--golden", action="store_true",
+                    help="also run the bf16 golden-catalog parity check")
+    ap.add_argument("--regression-threshold", type=float, default=0.95,
+                    help="tuned rung must reach this fraction of "
+                         "baseline sources/sec")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small problem + reduced sweep; assert the "
+                         "ladder ordering and bf16 golden parity")
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.sources, args.max_iters = 64, 2
+
+    rep = run(args)
+    print(json.dumps(rep, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(json.dumps(rep, indent=2) + "\n")
+    if args.smoke:
+        sp = rep["speedup_vs_baseline"]
+        assert sp["tuned_f32"] >= args.regression_threshold, (
+            f"tuned blocks slower than the BLOCK=32 default: {sp}")
+        assert sp["tuned_bf16"] > 1.0, (
+            f"tuned+bf16 rung not faster than the f32 baseline: {sp}")
+        assert rep["golden_bf16"]["ok"], (
+            f"bf16 golden-catalog parity failed: {rep['golden_bf16']}")
+        print("SMOKE OK: ladder ordering + bf16 golden parity hold")
+    return rep
+
+
+def main_csv():
+    """CSV rows for benchmarks/run.py (small configuration)."""
+    rep = main(["--sources", "64", "--max-iters", "2"])
+    for r in rep["ladder"]:
+        common.emit(
+            f"kernel_occupancy.{r['rung']}", r["seconds_per_fit"] * 1e6,
+            f"sources_per_sec={r['sources_per_sec']:.2f};"
+            f"speedup={rep['speedup_vs_baseline'][r['rung']]:.2f}")
+
+
+if __name__ == "__main__":
+    main()

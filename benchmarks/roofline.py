@@ -1,108 +1,174 @@
-"""Roofline analysis over the dry-run sweep results (requirement (g)).
+"""Kernel utilization report: per-kernel FLOPs, bytes and lane occupancy.
 
-Reads results/dryrun/*.json (written by ``repro.launch.dryrun --all``) and
-derives, per (arch × shape × mesh):
+Analytic cost models for the repo's actual kernels — the three
+``poisson_elbo`` reductions and the GMM patch render — evaluated per
+(shape, block, lane) configuration and paired with a measured wall time:
 
-    compute    = FLOPs / (chips × 197 TFLOP/s bf16)
-    memory     = HBM bytes / (chips × 819 GB/s)
-    collective = per-device collective bytes / 50 GB/s per ICI link
-                 (+ DCN bytes / 25 GB/s for cross-pod traffic)
+    flops            static per-pixel op count × live pixels
+    bytes_logical    HBM traffic of the un-padded arrays
+    bytes_padded     HBM traffic actually moved, including the zero
+                     lanes from minor-dim padding and the zero sources
+                     from block padding
+    intensity        flops / bytes_logical (arithmetic intensity)
+    live_lane_frac   patch / padded minor dim — the fraction of every
+                     VPU row doing useful work
+    live_source_frac s / (s padded to a block multiple)
 
-FLOPs/HBM bytes come from the trip-count-aware jaxpr counter (global →
-divided by chips); collective bytes come from the per-device optimized
-HLO (already per-device), bf16-corrected for the CPU backend's f32
-normalization.  MODEL_FLOPS = 6·N(_active)·D for train, 2·N·D per token
-for serving.
+``live_lane_frac`` is the headline occupancy number this report exists
+for: a 16-pixel patch padded to the 128-wide TPU lane leaves 12.5% of
+every row live, and the tunable ``lane`` knob (``kernels/tuning.py``)
+exists to buy that waste back wherever the backend allows it.
+
+Rows print in the house ``name,us_per_call,derived`` CSV format and the
+full report is written as JSON next to the other benchmark outputs
+(``results/kernel_utilization.json`` by default).
 """
 from __future__ import annotations
 
-import glob
+try:
+    from benchmarks import common
+except ImportError:                # script-path invocation
+    import common
+
 import json
 import os
 
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.poisson_elbo import ops as elbo_ops
+from repro.kernels.poisson_elbo.poisson_elbo import BLOCK, LANE, _lane_pad
+from repro.kernels.render import ops as render_ops
+from repro.kernels.tuning import (_synthetic_elbo_inputs,
+                                  _synthetic_render_inputs)
+
+# nominal single-chip peaks (TPU v4-class) used for roofline fractions;
+# on the CPU interpreter these are labels, not targets
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
-ICI_BW = 50e9
-DCN_BW = 25e9
 
-ARCH_N = {     # total / active params (approx from configs)
-    "gemma3-4b": (4.5e9, 4.5e9),
-    "smollm-360m": (0.41e9, 0.41e9),
-    "qwen3-32b": (34.2e9, 34.2e9),
-    "deepseek-7b": (7.3e9, 7.3e9),
-    "mamba2-780m": (0.85e9, 0.85e9),
-    "llava-next-mistral-7b": (7.3e9, 7.3e9),
-    "zamba2-2.7b": (2.8e9, 2.8e9),
-    "musicgen-large": (1.6e9, 1.6e9),
-    "dbrx-132b": (132e9, 36e9),
-    "grok-1-314b": (314e9, 86e9),
-}
+# static per-pixel op counts of the fused kernels (log/exp counted as 1)
+ELBO_FLOPS_PER_PIX = {"poisson_elbo": 14, "poisson_elbo_grad": 22,
+                      "poisson_elbo_hess": 32}
+# per (pixel, mixture component) ops of the GMM render inner loop
+RENDER_FLOPS_PER_PIX_COMP = 24
 
-SHAPE_TOKENS = {
-    "train_4k": 4096 * 256,
-    "prefill_32k": 32768 * 32,
-    "decode_32k": 128,
-    "long_500k": 1,
-}
+F32 = 4
+BF16 = 2
 
 
-def model_flops(arch: str, shape: str) -> float:
-    tot, act = ARCH_N.get(arch, (0, 0))
-    toks = SHAPE_TOKENS[shape]
-    if shape == "train_4k":
-        return 6.0 * act * toks
-    return 2.0 * act * toks
+def _pads(s: int, patch: int, block: int, lane: int):
+    block = min(s, block)
+    s_pad = -(-s // block) * block
+    return s_pad, _lane_pad(patch, lane)
 
 
-def analyze(result: dict) -> dict:
-    chips = result["chips"]
-    flops_dev = result["flops_global"] / chips
-    hbm_dev = result["hbm_bytes_global"] / chips
-    coll = result["collectives"]
-    t_c = flops_dev / PEAK_FLOPS
-    t_m = hbm_dev / HBM_BW
-    ici = (coll["total"] - coll["dcn_total"]) / ICI_BW
-    dcn = coll["dcn_total"] / DCN_BW
-    t_x = ici + dcn
-    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
-              key=lambda kv: kv[1])
-    mf = model_flops(result["arch"], result["shape"])
-    step = max(t_c, t_m, t_x)   # perfectly-overlapped lower bound
-    return {
-        "arch": result["arch"], "shape": result["shape"],
-        "mesh": result["mesh"], "chips": chips,
-        "t_compute_ms": t_c * 1e3, "t_memory_ms": t_m * 1e3,
-        "t_collective_ms": t_x * 1e3, "t_dcn_ms": dcn * 1e3,
-        "bottleneck": dom[0],
-        "model_flops": mf,
-        "useful_flops_ratio": mf / max(result["flops_global"], 1.0),
-        "roofline_fraction": (mf / chips / PEAK_FLOPS) / max(step, 1e-12),
-        "temp_gib": (result["memory"]["temp_bytes"] or 0) / 2**30,
-        "note": result.get("note", ""),
-    }
+def elbo_cost(kernel: str, s: int, patch: int, block: int, lane: int,
+              curv_itemsize: int = F32) -> dict:
+    """FLOPs/bytes model of one fused Poisson-ELBO kernel launch."""
+    s_pad, p_pad = _pads(s, patch, block, lane)
+    pix, pix_pad = s * patch * patch, s_pad * patch * p_pad
+    flops = ELBO_FLOPS_PER_PIX[kernel] * pix
+    n_in, out_pix = 4, []
+    if kernel == "poisson_elbo_grad":
+        out_pix = [F32, F32]
+    elif kernel == "poisson_elbo_hess":
+        out_pix = [F32, F32, curv_itemsize, curv_itemsize]
+    bytes_logical = n_in * pix * F32 + sum(out_pix) * pix + s * F32
+    bytes_padded = (n_in * pix_pad * F32 + sum(out_pix) * pix_pad
+                    + s_pad * F32)
+    return dict(flops=flops, bytes_logical=bytes_logical,
+                bytes_padded=bytes_padded,
+                live_lane_frac=patch / p_pad,
+                live_source_frac=s / s_pad)
 
 
-def main(out_dir: str = "results/dryrun"):
+def render_cost(s: int, patch: int, k: int, block: int, lane: int) -> dict:
+    """FLOPs/bytes model of one GMM patch-render launch (K components)."""
+    s_pad, p_pad = _pads(s, patch, block, lane)
+    pix, pix_pad = s * patch * patch, s_pad * patch * p_pad
+    flops = RENDER_FLOPS_PER_PIX_COMP * pix * k
+    param_bytes = s * k * (1 + 3) * F32 + s * 2 * F32   # norm, covinv, mu
+    param_pad = s_pad * k * (1 + 3) * F32 + s_pad * 2 * F32
+    return dict(flops=flops, bytes_logical=param_bytes + pix * F32,
+                bytes_padded=param_pad + pix_pad * F32,
+                live_lane_frac=patch / p_pad,
+                live_source_frac=s / s_pad)
+
+
+def _measure(fn, iters: int = 3) -> float:
+    secs, _ = common.timeit(fn, warmup=1, iters=iters)
+    return secs
+
+
+def analyze(impl: str, flat: int, patch: int, block: int, lane: int,
+            k_gal: int = 18, curv: str = "f32", iters: int = 3,
+            seed: int = 0) -> list[dict]:
+    """Utilization rows for every kernel at one (shape, block, lane)."""
+    x, bg, e1, var = _synthetic_elbo_inputs(flat, patch, seed)
+    norm, covinv, mu = _synthetic_render_inputs(flat, k_gal, patch, seed)
+    curv_item = BF16 if curv == "bf16" else F32
+    runs = [
+        ("poisson_elbo",
+         lambda: elbo_ops.poisson_elbo(x, bg, e1, var, impl=impl,
+                                       block=block, lane=lane),
+         elbo_cost("poisson_elbo", flat, patch, block, lane)),
+        ("poisson_elbo_grad",
+         lambda: elbo_ops.poisson_elbo_grad(x, bg, e1, var, impl=impl,
+                                            block=block, lane=lane),
+         elbo_cost("poisson_elbo_grad", flat, patch, block, lane)),
+        ("poisson_elbo_hess",
+         lambda: elbo_ops.poisson_elbo_hess(x, bg, e1, var, impl=impl,
+                                            block=block, lane=lane,
+                                            curv=curv),
+         elbo_cost("poisson_elbo_hess", flat, patch, block, lane,
+                   curv_itemsize=curv_item)),
+        (f"render_gmm_k{k_gal}",
+         lambda: render_ops.render_gmm(norm, covinv, mu, patch, impl=impl,
+                                       block=block, lane=lane),
+         render_cost(flat, patch, k_gal, block, lane)),
+    ]
     rows = []
-    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
-        r = json.load(open(path))
-        if "skipped" in r:
-            print(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']},0,"
-                  f"SKIP:{r['skipped'][:60]}")
-            continue
-        if "flops_global" not in r:
-            continue
-        a = analyze(r)
-        rows.append(a)
-        print(f"roofline.{a['arch']}.{a['shape']}.{a['mesh']},"
-              f"{max(a['t_compute_ms'], a['t_memory_ms'], a['t_collective_ms']) * 1e3:.0f},"
-              f"compute={a['t_compute_ms']:.1f}ms;"
-              f"memory={a['t_memory_ms']:.1f}ms;"
-              f"collective={a['t_collective_ms']:.1f}ms;"
-              f"bottleneck={a['bottleneck']};"
-              f"useful_ratio={a['useful_flops_ratio']:.2f};"
-              f"roofline_frac={a['roofline_fraction']:.2%};"
-              f"temp={a['temp_gib']:.1f}GiB")
+    for kernel, fn, cost in runs:
+        secs = _measure(fn, iters=iters)
+        row = dict(kernel=kernel, impl=impl, flat=flat, patch=patch,
+                   block=block, lane=lane, curv=curv, seconds=secs,
+                   intensity=cost["flops"] / cost["bytes_logical"],
+                   gflops_s=cost["flops"] / secs / 1e9,
+                   gbytes_s=cost["bytes_padded"] / secs / 1e9,
+                   roofline_frac=(cost["flops"] / secs) / PEAK_FLOPS,
+                   **cost)
+        rows.append(row)
+    return rows
+
+
+def main(out_path: str = "results/kernel_utilization.json",
+         impl: str | None = None, iters: int = 3) -> list[dict]:
+    impl = impl or os.environ.get("REPRO_ELBO_BACKEND") \
+        or "pallas_interpret"
+    shapes = [(32, 16), (192, 16)]                 # (flat sources, patch)
+    configs = [(BLOCK, LANE), (64, 8)]             # (block, lane)
+    rows = []
+    for flat, patch in shapes:
+        for block, lane in configs:
+            if lane != LANE and impl == "pallas":
+                continue       # compiled backend requires 128-lane pads
+            rows.extend(analyze(impl, flat, patch, block, lane,
+                                iters=iters))
+    for a in rows:
+        common.emit(
+            f"roofline.{a['kernel']}.s{a['flat']}.p{a['patch']}"
+            f".b{a['block']}l{a['lane']}",
+            a["seconds"] * 1e6,
+            f"ai={a['intensity']:.2f};live_lane={a['live_lane_frac']:.3f};"
+            f"live_src={a['live_source_frac']:.3f};"
+            f"gflops={a['gflops_s']:.2f};gbytes={a['gbytes_s']:.2f}")
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump({"platform": jax.devices()[0].platform,
+                   "impl": impl, "rows": rows}, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {out_path}")
     return rows
 
 

@@ -1,7 +1,9 @@
 """Benchmark runner: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Roofline rows (from the
-dry-run sweep) are included when results/dryrun exists.
+Prints ``name,us_per_call,derived`` CSV rows.  The kernel utilization
+report (``benchmarks/roofline.py``) and the occupancy speed ladder
+(``benchmarks/kernel_occupancy.py``) run last; the roofline report also
+writes ``results/kernel_utilization.json``.
 """
 from __future__ import annotations
 
@@ -10,14 +12,14 @@ try:
 except ImportError:                # script-path invocation
     import common                  # noqa: F401
 
-import os
 import traceback
 
 
 def main() -> None:
     from benchmarks import (fig3_batch_scaling, fig4_weak_scaling,
                             fig5_strong_scaling, fig6_sources_per_sec,
-                            mesh_compaction, newton_fused, pipeline_e2e,
+                            kernel_occupancy, mesh_compaction,
+                            newton_fused, pipeline_e2e, roofline,
                             scheduler_adaptive, table1_accuracy)
     suites = [
         ("table1", table1_accuracy.main),
@@ -29,19 +31,14 @@ def main() -> None:
         ("newton_fused", newton_fused.main_csv),
         ("mesh_compaction", mesh_compaction.main_csv),
         ("pipeline_e2e", pipeline_e2e.main_csv),
+        ("roofline", roofline.main),
+        ("kernel_occupancy", kernel_occupancy.main_csv),
     ]
     for name, fn in suites:
         try:
             fn()
         except Exception:
             print(f"{name}.ERROR,0,{traceback.format_exc(limit=1)!r}")
-
-    if os.path.isdir("results/dryrun"):
-        from benchmarks import roofline
-        try:
-            roofline.main("results/dryrun")
-        except Exception:
-            print(f"roofline.ERROR,0,{traceback.format_exc(limit=1)!r}")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,19 @@ name, threaded through ``infer.make_objective`` / ``infer.run_inference``:
 Selection precedence: explicit argument > ``REPRO_ELBO_BACKEND`` env var >
 ``"jax"``.  Registration happens when ``core/batched_elbo.py`` is imported;
 ``get`` imports it lazily so there is no import cycle.
+
+Kernel backends additionally take two occupancy/precision knobs, threaded
+through every factory as keyword arguments (the ``jax`` backend accepts
+and ignores them):
+
+  * ``precision`` — ``"f32"`` (default) or ``"bf16"``: the
+    mixed-precision Hessian-assembly path (bf16 curvature/Jacobian
+    operands with f32 accumulation; the gradient path stays f32 — see
+    docs/backends.md).  Resolved with the same precedence via
+    ``REPRO_ELBO_PRECISION``.
+  * ``config`` — a ``kernels/tuning.KernelConfig`` of tuned block
+    shapes, ``"auto"`` for a disk-cache lookup, or ``None`` for the
+    untuned defaults.
 """
 from __future__ import annotations
 
@@ -24,9 +37,11 @@ import os
 from typing import Callable
 
 ENV_VAR = "REPRO_ELBO_BACKEND"
+ENV_PRECISION = "REPRO_ELBO_PRECISION"
 DEFAULT = "jax"
+PRECISIONS = ("f32", "bf16")
 
-# name -> factory(metas, priors) -> newton.BatchedObjective
+# name -> factory(metas, priors, **knobs) -> newton.BatchedObjective
 _REGISTRY: dict[str, Callable] = {}
 
 
@@ -47,6 +62,17 @@ def resolve(name: str | None = None) -> str:
         raise ValueError(
             f"unknown ELBO backend {name!r}; available: {available()}")
     return name
+
+
+def resolve_precision(precision: str | None = None) -> str:
+    """Same precedence as ``resolve``: arg > ``REPRO_ELBO_PRECISION`` >
+    ``"f32"``; validates the resolved name."""
+    precision = precision or os.environ.get(ENV_PRECISION) or "f32"
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown ELBO precision {precision!r}; "
+            f"available: {PRECISIONS}")
+    return precision
 
 
 def get(name: str | None = None) -> Callable:

@@ -46,6 +46,28 @@ Backends (registered with ``core/backends.py``):
   * ``pallas``           — compiled Pallas kernels (TPU).
   * ``pallas_interpret`` — kernels in interpreter mode (CPU CI).
   * ``ref``              — batched pipeline with the pure-jnp oracles.
+
+Every kernel backend takes two occupancy knobs (``make_batched_objective``
+keywords, threaded from ``infer.run_inference``):
+
+  * ``config`` — a ``kernels/tuning.KernelConfig`` with the tuned
+    source-block sizes and lane padding for the render and poisson_elbo
+    kernels (``None`` keeps the untuned defaults, ``"auto"`` consults
+    the autotuner's disk cache).
+  * ``precision`` — ``"f32"`` or ``"bf16"``.  The bf16 surface is chosen
+    *post-cancellation* (measured, not guessed — see docs/backends.md):
+    quantizing the kernel **inputs** (``x``, ``bg``, ``e1``, ``var``)
+    breaks the near-cancellation ``x/f − 1`` inside the converged
+    residual and lifts the gradient-noise floor far above the Newton
+    tolerance, so inputs, the value reduction and the gradient residuals
+    all stay f32.  What drops to bf16 is everything the **Hessian
+    assembly** streams: the per-pixel curvature fields emitted by the
+    ``poisson_elbo_hess`` kernel (written bf16 at the kernel boundary)
+    and the pixel-shaped moment-Jacobian operands of the JᵀWJ sandwich —
+    every such contraction accumulates in f32
+    (``preferred_element_type``).  A bf16-perturbed Hessian only bends
+    the optimization *path*; the fixed point (f32 gradient = 0) is
+    untouched, which is why the golden-catalog gate holds at rtol 1e-4.
 """
 from __future__ import annotations
 
@@ -57,6 +79,7 @@ import jax.numpy as jnp
 from repro.core import backends, elbo, model, newton
 from repro.core.model import ImageMeta
 from repro.core.priors import Priors
+from repro.kernels import tuning
 from repro.kernels.poisson_elbo import ops as elbo_ops
 from repro.kernels.render import ops as render_ops
 
@@ -85,7 +108,8 @@ def _moments_jnp(thetas: jnp.ndarray, corners: jnp.ndarray, metas: ImageMeta,
 
 
 def _moments_kernel(thetas: jnp.ndarray, corners: jnp.ndarray,
-                    metas: ImageMeta, patch: int, impl: str):
+                    metas: ImageMeta, patch: int, impl: str,
+                    config: tuning.KernelConfig = tuning.DEFAULT):
     """Kernel path for the patch moments: pack → render × 2 → algebra.
 
     Returns ``(e1, var, g_star, g_gal, e2)``, each ``[S, n_img, P, P]``.
@@ -93,7 +117,7 @@ def _moments_kernel(thetas: jnp.ndarray, corners: jnp.ndarray,
     grid, so one launch renders every patch of the batch.  The raw unit
     densities and the second moment ride along for the fused second-order
     path, which rebuilds the curvature chain from them without a second
-    render.
+    render.  ``config`` supplies the tuned render block shape.
     """
     s = thetas.shape[0]
     n = corners.shape[1]
@@ -116,9 +140,11 @@ def _moments_kernel(thetas: jnp.ndarray, corners: jnp.ndarray,
         return t.reshape((n, s) + t.shape[1:]).swapaxes(0, 1)
 
     g_star = unflat(render_ops.render_gmm(
-        flat(sn), flat(sc), flat(sm), patch, impl=impl))
+        flat(sn), flat(sc), flat(sm), patch, impl=impl,
+        block=config.render_block, lane=config.lane))
     g_gal = unflat(render_ops.render_gmm(
-        flat(gn), flat(gc), flat(gm), patch, impl=impl))
+        flat(gn), flat(gc), flat(gm), patch, impl=impl,
+        block=config.render_block, lane=config.lane))
 
     m1, m2 = jax.vmap(elbo.flux_moments)(v)           # [S, 2, B]
     l1 = m1[:, :, metas.band]                          # [S, 2, n]
@@ -136,13 +162,23 @@ def _moments_kernel(thetas: jnp.ndarray, corners: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 
-def _make_kernel_pixel_term(metas: ImageMeta, impl: str):
-    """[S] pixel-term sums via the fused kernels; VJP recomputes."""
+def _make_kernel_pixel_term(metas: ImageMeta, impl: str,
+                            config: tuning.KernelConfig = tuning.DEFAULT):
+    """[S] pixel-term sums via the fused kernels; VJP recomputes.
+
+    Value and gradient stay f32 under every precision setting: the
+    gradient defines the fixed point the Newton loop converges to, and
+    the converged residual is a near-cancellation that does not survive
+    input rounding (module docstring).  The bf16 surface lives entirely
+    in ``_make_second_order``.
+    """
+    kern = dict(impl=impl, block=config.elbo_block, lane=config.lane)
 
     def _value(thetas, x, bg, corners):
         patch = x.shape[-1]
-        e1, var = _moments_kernel(thetas, corners, metas, patch, impl)[:2]
-        return jnp.sum(elbo_ops.poisson_elbo(x, bg, e1, var, impl=impl),
+        e1, var = _moments_kernel(thetas, corners, metas, patch, impl,
+                                  config)[:2]
+        return jnp.sum(elbo_ops.poisson_elbo(x, bg, e1, var, **kern),
                        axis=1)
 
     @jax.custom_vjp
@@ -157,8 +193,7 @@ def _make_kernel_pixel_term(metas: ImageMeta, impl: str):
         patch = x.shape[-1]
         (e1, var), pullback = jax.vjp(
             lambda th: _moments_jnp(th, corners, metas, patch), thetas)
-        _, d_e1, d_var = elbo_ops.poisson_elbo_grad(x, bg, e1, var,
-                                                    impl=impl)
+        _, d_e1, d_var = elbo_ops.poisson_elbo_grad(x, bg, e1, var, **kern)
         c = ct[:, None, None, None]
         (d_theta,) = pullback((c * d_e1, c * d_var))
         return (d_theta, jnp.zeros_like(x), jnp.zeros_like(bg),
@@ -334,7 +369,9 @@ def _gmm_manual_sweep(u, ju, hu, dx, dy, cw):
     return jg, gpsi, cg
 
 
-def _make_second_order(metas: ImageMeta, priors: Priors, impl: str):
+def _make_second_order(metas: ImageMeta, priors: Priors, impl: str,
+                       config: tuning.KernelConfig = tuning.DEFAULT,
+                       precision: str = "f32"):
     """One-render-per-iteration (value, grad, Hessian) for the Newton loop.
 
     The chain rule for  pixel(θ) = Σ_k term(m_k(θ))  splits the exact
@@ -365,12 +402,30 @@ def _make_second_order(metas: ImageMeta, priors: Priors, impl: str):
         s, d_dim = thetas.shape
         n = corners.shape[1]
 
+        # Mixed-precision boundary (module docstring): inputs, value and
+        # gradient residuals are f32; under bf16 the kernel stores its
+        # curvature outputs bf16 and the JᵀWJ sandwich streams bf16
+        # operands into f32-accumulating einsums.  ``low`` marks every
+        # Hessian-assembly operand that crosses that boundary.  Where the
+        # hardware has no bf16 ALUs (CPU) the rounded operands are upcast
+        # back to f32 so XLA keeps its fast GEMM path — the round-trip
+        # reproduces the bf16 values exactly, so the result is
+        # platform-independent; only the storage dtype differs.
+        bf16 = precision == "bf16"
+        if bf16 and jax.devices()[0].platform == "tpu":
+            low = lambda t: t.astype(jnp.bfloat16)
+        elif bf16:
+            low = lambda t: t.astype(jnp.bfloat16).astype(jnp.float32)
+        else:
+            low = lambda t: t
+
         # ONE kernel render of the moments, then the fused second-order
         # reduction: value + residuals g and curvature blocks W per pixel.
         e1, var, gs, gg, e2 = _moments_kernel(
-            thetas, corners, metas, patch, impl)
+            thetas, corners, metas, patch, impl, config)
         val_pix, g1, g2, h11, h12 = elbo_ops.poisson_elbo_hess(
-            x, bg, e1, var, impl=impl)
+            x, bg, e1, var, impl=impl, block=config.elbo_block,
+            lane=config.lane, curv="bf16" if bf16 else "f32")
 
         # Change of basis (e1, var) → (e1, e2) with var = relu(e2 − e1²):
         # keeps ∂²/∂e2² ≡ 0, so W stays a 2×2 block with one zero entry.
@@ -408,7 +463,8 @@ def _make_second_order(metas: ImageMeta, priors: Priors, impl: str):
         pp = patch * patch
         fl = lambda t: t.reshape(s, n, pp)
         gs_r, gg_r = fl(gs), fl(gg)
-        gh1_r, gh2_r, w11_r, w12_r = map(fl, (gh1, gh2, w11, w12))
+        gh1_r, gh2_r = fl(gh1), fl(gh2)          # gradient path: f32
+        w11_r, w12_r = low(fl(w11)), low(fl(w12))  # sandwich: may be bf16
 
         # pixel offsets from the source center (patch grid is separable)
         grid = jnp.arange(patch, dtype=jnp.float32) + 0.5
@@ -439,16 +495,26 @@ def _make_second_order(metas: ImageMeta, priors: Priors, impl: str):
             + 2.0 * (dv[:, :, None] * gg_r)[..., None] * dgg_r
 
         # JᵀWJ, blockwise (MXU-batched contractions over all pixels).
+        # Under bf16 the Jacobian/curvature operands are stored low but
+        # every contraction accumulates f32 — the canonical MXU recipe.
+        f32acc = dict(preferred_element_type=jnp.float32)
+
         def sandwich(ja, jb):
-            cross = jnp.einsum("snkd,snk,snke->sde", ja, w12_r, jb)
-            return (jnp.einsum("snkd,snk,snke->sde", ja, w11_r, ja)
+            cross = jnp.einsum("snkd,snk,snke->sde", ja, w12_r, jb,
+                               **f32acc)
+            return (jnp.einsum("snkd,snk,snke->sde", ja, w11_r, ja,
+                               **f32acc)
                     + cross + jnp.swapaxes(cross, -1, -2))
 
         def sandwich_off(ja1, ja2, jb1, jb2):
-            return (jnp.einsum("snkd,snk,snke->sde", ja1, w11_r, jb1)
-                    + jnp.einsum("snkd,snk,snke->sde", ja1, w12_r, jb2)
-                    + jnp.einsum("snkd,snk,snke->sde", ja2, w12_r, jb1))
+            return (jnp.einsum("snkd,snk,snke->sde", ja1, w11_r, jb1,
+                               **f32acc)
+                    + jnp.einsum("snkd,snk,snke->sde", ja1, w12_r, jb2,
+                                 **f32acc)
+                    + jnp.einsum("snkd,snk,snke->sde", ja2, w12_r, jb1,
+                                 **f32acc))
 
+        j1q, j2q, j1p, j2p = map(low, (j1q, j2q, j1p, j2p))
         h_qq = sandwich(j1q, j2q)
         h_pp = sandwich(j1p, j2p)
         h_qp = sandwich_off(j1q, j2q, j1p, j2p)
@@ -497,14 +563,34 @@ def _make_second_order(metas: ImageMeta, priors: Priors, impl: str):
 
 
 def make_batched_objective(metas: ImageMeta, priors: Priors,
-                           backend: str = "jax") -> newton.BatchedObjective:
+                           backend: str = "jax", *,
+                           precision: str | None = None,
+                           config=None) -> newton.BatchedObjective:
     """The batch ELBO objective for ``newton.fit_batch``.
 
     All backends share the call signature
     ``(thetas [S, D], x [S, n, P, P], bg [S, n, P, P], corners [S, n, 2])``
     and agree to float32 tolerance; they differ only in how the pixel term
     is evaluated.
+
+    ``precision`` (``"f32"``/``"bf16"``; defers to ``REPRO_ELBO_PRECISION``
+    when ``None``) and ``config`` (a ``kernels/tuning.KernelConfig`` of
+    tuned block shapes, or ``None`` for the untuned defaults) only apply
+    to the kernel backends; the ``jax`` path ignores them.  The ``"auto"``
+    cache lookup is resolved by ``infer.run_inference``, which knows the
+    problem shape — here a config must already be concrete.
     """
+    config = config or tuning.DEFAULT
+    if not isinstance(config, tuning.KernelConfig):
+        raise TypeError(
+            f"config must be a kernels.tuning.KernelConfig or None (got "
+            f"{config!r}); 'auto' is resolved by infer.run_inference")
+    # precedence: explicit argument > a non-default config.precision >
+    # REPRO_ELBO_PRECISION > "f32"
+    precision = backends.resolve_precision(
+        precision or (config.precision if config.precision != "f32"
+                      else None))
+
     def per_source(theta, x, bg, corners):
         return elbo.elbo_patch(theta, x, bg, metas, corners, priors)
 
@@ -513,7 +599,7 @@ def make_batched_objective(metas: ImageMeta, priors: Priors,
     if backend not in ("pallas", "pallas_interpret", "ref"):
         raise ValueError(f"unknown ELBO backend {backend!r}")
 
-    pixel = _make_kernel_pixel_term(metas, backend)
+    pixel = _make_kernel_pixel_term(metas, backend, config)
 
     def value(thetas, x, bg, corners):
         return pixel(thetas, x, bg, corners) - _prior_terms(thetas, priors)
@@ -528,7 +614,8 @@ def make_batched_objective(metas: ImageMeta, priors: Priors,
     # The fully-fused second-order path: one moment render per call, the
     # poisson_elbo_hess kernel for residuals + curvature, JᵀWJ + Σ g·∇²m
     # assembly for the exact dense Hessian (see _make_second_order).
-    second_order = _make_second_order(metas, priors, backend)
+    second_order = _make_second_order(metas, priors, backend, config,
+                                      precision)
 
     def hessian(thetas, x, bg, corners):
         return second_order(thetas, x, bg, corners)[2]

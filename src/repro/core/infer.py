@@ -127,13 +127,19 @@ def extract_patches(images: jnp.ndarray, metas: ImageMeta,
 
 
 def make_objective(metas: ImageMeta, priors: Priors,
-                   backend: str | None = None) -> newton.BatchedObjective:
+                   backend: str | None = None,
+                   precision: str | None = None,
+                   kernel_config=None) -> newton.BatchedObjective:
     """The batched local-ELBO objective for the resolved backend.
 
     ``backend`` is one of ``core/backends.available()``; ``None`` defers to
     the ``REPRO_ELBO_BACKEND`` env var and then the ``"jax"`` default.
+    ``precision`` (``"f32"``/``"bf16"``) and ``kernel_config`` (a
+    ``kernels/tuning.KernelConfig`` of tuned block shapes) are forwarded
+    to the kernel backends; the ``jax`` backend ignores them.
     """
-    return backends.get(backend)(metas, priors)
+    return backends.get(backend)(metas, priors, precision=precision,
+                                 config=kernel_config)
 
 
 def _gather_batch(idx: np.ndarray, x, bg, corners, thetas):
@@ -214,6 +220,8 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
                   cost_model: decompose.CostModel | None = None,
                   passes: int = 1,
                   backend: str | None = None,
+                  precision: str | None = None,
+                  kernel_config=None,
                   adaptive: bool = False,
                   scheduler: DynamicScheduler | None = None,
                   compact_every: int | None = None,
@@ -230,7 +238,12 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
     ``backend`` selects the ELBO evaluation backend (``core/backends.py``):
     ``"jax"`` (default) for the portable path, ``"pallas"`` for the fused
     TPU kernels, ``"pallas_interpret"`` / ``"ref"`` for CPU validation of
-    the kernel pipeline.
+    the kernel pipeline.  ``precision`` (``"f32"``/``"bf16"``, the
+    mixed-precision render path) and ``kernel_config`` (tuned kernel
+    block shapes — a ``kernels/tuning.KernelConfig``, or ``"auto"`` to
+    consult the autotuner's disk cache for this problem shape, keyed on
+    ``(batch, n_img, patch)``) apply to the kernel backends only; see
+    docs/backends.md.
 
     ``adaptive=True`` closes the plan → measure → rebalance loop: only the
     next round is planned, measured per-source Newton iteration counts are
@@ -315,7 +328,14 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
 
     cm = cost_model or decompose.CostModel()
 
-    objective = make_objective(metas, priors, backend=backend)
+    if kernel_config == "auto":
+        from repro.kernels import tuning
+        kernel_config = tuning.resolve(
+            "auto", backends.resolve(backend), batch,
+            int(images.shape[0]), patch)
+    objective = make_objective(metas, priors, backend=backend,
+                               precision=precision,
+                               kernel_config=kernel_config)
 
     min_bucket = 4
     _jit_cache: dict = {}   # per-call: jitted fit/exchange wrappers

@@ -1,9 +1,20 @@
-"""Jitted wrapper for the Poisson-ELBO reduction kernel."""
+"""Jitted wrapper for the Poisson-ELBO reduction kernel.
+
+``block`` (sources per program) and ``lane`` (minor-dim padding
+multiple) are the tunable occupancy knobs — ``None`` keeps the kernel
+defaults (``BLOCK`` = 32, ``LANE`` = 128); ``kernels/tuning.py`` sweeps
+them per backend/shape and caches the winners.  All wrappers accept
+bf16 pixel inputs and return f32 (the kernels upcast on load and
+accumulate in f32); the one deliberate exception is
+``poisson_elbo_hess(curv="bf16")``, which stores the two curvature
+outputs in bf16 for the mixed-precision Hessian assembly.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.poisson_elbo.poisson_elbo import (
     poisson_elbo_grad_pallas, poisson_elbo_hess_pallas, poisson_elbo_pallas)
@@ -11,19 +22,22 @@ from repro.kernels.poisson_elbo.ref import (
     poisson_elbo_grad_ref, poisson_elbo_hess_ref, poisson_elbo_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def poisson_elbo(x, bg, e1, var, impl: str = "pallas_interpret"):
+@functools.partial(jax.jit, static_argnames=("impl", "block", "lane"))
+def poisson_elbo(x, bg, e1, var, impl: str = "pallas_interpret",
+                 block: int | None = None, lane: int | None = None):
     if impl == "ref":
         return poisson_elbo_ref(x, bg, e1, var)
     flat = x.reshape((-1,) + x.shape[-2:])
     out = poisson_elbo_pallas(
         flat, bg.reshape(flat.shape), e1.reshape(flat.shape),
-        var.reshape(flat.shape), interpret=(impl == "pallas_interpret"))
+        var.reshape(flat.shape), interpret=(impl == "pallas_interpret"),
+        block=block, lane=lane)
     return out.reshape(x.shape[:-2])
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def poisson_elbo_grad(x, bg, e1, var, impl: str = "pallas_interpret"):
+@functools.partial(jax.jit, static_argnames=("impl", "block", "lane"))
+def poisson_elbo_grad(x, bg, e1, var, impl: str = "pallas_interpret",
+                      block: int | None = None, lane: int | None = None):
     """Fused value + per-pixel gradient residuals.
 
     Returns (value [...], d_e1 [..., P, P], d_var [..., P, P]); leading
@@ -35,13 +49,17 @@ def poisson_elbo_grad(x, bg, e1, var, impl: str = "pallas_interpret"):
     flat = x.reshape((-1,) + x.shape[-2:])
     val, de1, dvar = poisson_elbo_grad_pallas(
         flat, bg.reshape(flat.shape), e1.reshape(flat.shape),
-        var.reshape(flat.shape), interpret=(impl == "pallas_interpret"))
+        var.reshape(flat.shape), interpret=(impl == "pallas_interpret"),
+        block=block, lane=lane)
     return (val.reshape(x.shape[:-2]), de1.reshape(x.shape),
             dvar.reshape(x.shape))
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def poisson_elbo_hess(x, bg, e1, var, impl: str = "pallas_interpret"):
+@functools.partial(jax.jit,
+                   static_argnames=("impl", "block", "lane", "curv"))
+def poisson_elbo_hess(x, bg, e1, var, impl: str = "pallas_interpret",
+                      block: int | None = None, lane: int | None = None,
+                      curv: str = "f32"):
     """Fused value + gradient residuals + per-pixel 2×2 curvature blocks.
 
     Returns ``(value [...], d_e1, d_var, h_e1e1, h_e1var)`` with every
@@ -49,13 +67,20 @@ def poisson_elbo_hess(x, bg, e1, var, impl: str = "pallas_interpret"):
     and therefore not emitted); leading batch dims are flattened into the
     kernel grid exactly like ``poisson_elbo``.  This is the single-pass
     second-order evaluation the fused Newton path consumes.
+
+    ``curv`` (``"f32"`` | ``"bf16"``) sets the storage dtype of the two
+    curvature outputs — the mixed-precision Hessian-assembly surface;
+    value and gradient residuals are always f32.
     """
+    curv_dtype = jnp.bfloat16 if curv == "bf16" else jnp.float32
     if impl == "ref":
-        return poisson_elbo_hess_ref(x, bg, e1, var)
+        out = poisson_elbo_hess_ref(x, bg, e1, var)
+        return out[:3] + tuple(a.astype(curv_dtype) for a in out[3:])
     flat = x.reshape((-1,) + x.shape[-2:])
     out = poisson_elbo_hess_pallas(
         flat, bg.reshape(flat.shape), e1.reshape(flat.shape),
-        var.reshape(flat.shape), interpret=(impl == "pallas_interpret"))
+        var.reshape(flat.shape), interpret=(impl == "pallas_interpret"),
+        block=block, lane=lane, curv_dtype=curv_dtype)
     val, pix = out[0], out[1:]
     return (val.reshape(x.shape[:-2]),) + tuple(
         a.reshape(x.shape) for a in pix)

@@ -6,12 +6,33 @@ correction, deviance normalization) with the patch reduction so the
 the hand-tuned inner kernel of Celeste's objective (paper §III-B).
 
 Grid: (ceil(S / block),).  Each program loads a *block* of source
-patches (pixels padded to the 128-lane minor dim with a validity mask,
+patches (pixels padded to a lane-aligned minor dim with a validity mask,
 sources zero-padded to a block multiple), computes the fused term on the
 VPU and reduces one scalar per source.  Blocking sources keeps each
 program's working set a few hundred KB of VMEM while cutting the grid —
 and with it the Pallas interpreter's per-program overhead on CPU — by
 ``block``×.
+
+Both the source-block size and the lane padding are *tunable*
+(``kernels/tuning.py`` sweeps them per backend and problem shape and
+caches the winner):
+
+  * ``block`` — sources per program.  Defaults to ``BLOCK`` (32); larger
+    blocks cut grid overhead, smaller blocks cut padded-source waste
+    when S is small or ragged.
+  * ``lane``  — the minor-dim padding multiple.  Defaults to ``LANE``
+    (128, the TPU VPU width — required for the compiled backend).  In
+    interpreter mode on CPU there is no lane constraint, so ``lane=8``
+    drops the padded-lane waste of small patches (a 16-pixel patch padded
+    to 128 lanes wastes 87.5% of every row).
+
+Inputs may be ``bfloat16``: the kernel upcasts each block to f32 on load
+and accumulates the reduction in f32, so only the HBM traffic — not the
+accumulation — pays the precision cut.  The mixed-precision policy in
+``core/batched_elbo.py`` keeps the inputs f32 (the converged residual
+``x/f − 1`` is a near-cancellation that bf16 inputs destroy) and instead
+asks the hess kernel for bf16 *curvature outputs* (``curv_dtype``) — the
+post-cancellation fields the JᵀWJ assembly streams back in.
 """
 from __future__ import annotations
 
@@ -22,11 +43,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 EPS = 1e-6
-BLOCK = 32
+BLOCK = 32    # default sources per program
+LANE = 128    # default minor-dim padding multiple (the TPU VPU width)
 
 
-def _block(s: int) -> int:
-    return min(s, BLOCK)
+def _block(s: int, block: int | None = None) -> int:
+    return min(s, block or BLOCK)
+
+
+def _lane_pad(patch: int, lane: int | None = None) -> int:
+    lane = lane or LANE
+    return max(lane, -(-patch // lane) * lane)
 
 
 def _pad_inputs(arrs, patch: int, p_pad: int, block: int):
@@ -41,12 +68,17 @@ def _lane_mask(block: int, patch: int, p_pad: int):
     return ci < patch
 
 
+def _loadf(ref):
+    """Block load, upcast to the f32 accumulation dtype (bf16 inputs)."""
+    return ref[...].astype(jnp.float32)
+
+
 def _elbo_kernel(x_ref, bg_ref, e1_ref, var_ref, out_ref, *, patch: int):
     b, _, p_pad = x_ref.shape
-    x = x_ref[...]
-    bg = bg_ref[...]
-    e1 = e1_ref[...]
-    var = var_ref[...]
+    x = _loadf(x_ref)
+    bg = _loadf(bg_ref)
+    e1 = _loadf(e1_ref)
+    var = _loadf(var_ref)
     f = jnp.maximum(bg + e1, EPS)
     logf = jnp.log(f) - var / (2.0 * f * f)
     term = x * (logf - jnp.log(jnp.maximum(x, 1.0))) - (f - x)
@@ -54,11 +86,12 @@ def _elbo_kernel(x_ref, bg_ref, e1_ref, var_ref, out_ref, *, patch: int):
     out_ref[:, 0] = jnp.sum(term, axis=(1, 2))
 
 
-def poisson_elbo_pallas(x, bg, e1, var, interpret: bool = False):
-    """x/bg/e1/var: [S, P, P] → [S] patch ELBO sums."""
+def poisson_elbo_pallas(x, bg, e1, var, interpret: bool = False,
+                        block: int | None = None, lane: int | None = None):
+    """x/bg/e1/var: [S, P, P] → [S] patch ELBO sums (always f32)."""
     s, patch, _ = x.shape
-    p_pad = max(128, -(-patch // 128) * 128)
-    blk = _block(s)
+    p_pad = _lane_pad(patch, lane)
+    blk = _block(s, block)
     (xp, bgp, e1p, varp), s_pad = _pad_inputs(
         [x, bg, e1, var], patch, p_pad, blk)
 
@@ -81,10 +114,10 @@ def _elbo_grad_kernel(x_ref, bg_ref, e1_ref, var_ref, out_ref, de1_ref,
     residuals ∂term/∂e1 and ∂term/∂var, fused with the value reduction so
     the forward intermediates (f, f², f³) never leave VMEM."""
     b, _, p_pad = x_ref.shape
-    x = x_ref[...]
-    bg = bg_ref[...]
-    e1 = e1_ref[...]
-    var = var_ref[...]
+    x = _loadf(x_ref)
+    bg = _loadf(bg_ref)
+    e1 = _loadf(e1_ref)
+    var = _loadf(var_ref)
     raw = bg + e1
     f = jnp.maximum(raw, EPS)
     f2 = f * f
@@ -100,7 +133,9 @@ def _elbo_grad_kernel(x_ref, bg_ref, e1_ref, var_ref, out_ref, de1_ref,
     dvar_ref[...] = jnp.where(valid, d_var, 0.0)
 
 
-def poisson_elbo_grad_pallas(x, bg, e1, var, interpret: bool = False):
+def poisson_elbo_grad_pallas(x, bg, e1, var, interpret: bool = False,
+                             block: int | None = None,
+                             lane: int | None = None):
     """x/bg/e1/var: [S, P, P] → (value [S], d_e1 [S, P, P], d_var [S, P, P]).
 
     ``d_e1``/``d_var`` are the per-pixel residuals ∂(patch sum)/∂e1 and
@@ -108,8 +143,8 @@ def poisson_elbo_grad_pallas(x, bg, e1, var, interpret: bool = False):
     ``core/batched_elbo.py`` chains through the GMM moments.
     """
     s, patch, _ = x.shape
-    p_pad = max(128, -(-patch // 128) * 128)
-    blk = _block(s)
+    p_pad = _lane_pad(patch, lane)
+    blk = _block(s, block)
     (xp, bgp, e1p, varp), s_pad = _pad_inputs(
         [x, bg, e1, var], patch, p_pad, blk)
 
@@ -136,10 +171,10 @@ def _elbo_hess_kernel(x_ref, bg_ref, e1_ref, var_ref, out_ref, de1_ref,
     of f are shared in VMEM, so curvature costs a handful of extra VPU ops
     on top of the gradient kernel instead of a separate pipeline pass."""
     b, _, p_pad = x_ref.shape
-    x = x_ref[...]
-    bg = bg_ref[...]
-    e1 = e1_ref[...]
-    var = var_ref[...]
+    x = _loadf(x_ref)
+    bg = _loadf(bg_ref)
+    e1 = _loadf(e1_ref)
+    var = _loadf(var_ref)
     raw = bg + e1
     f = jnp.maximum(raw, EPS)
     f2 = f * f
@@ -152,28 +187,38 @@ def _elbo_hess_kernel(x_ref, bg_ref, e1_ref, var_ref, out_ref, de1_ref,
     out_ref[:, 0] = jnp.sum(jnp.where(valid, term, 0.0), axis=(1, 2))
     de1_ref[...] = jnp.where(gate, d_f, 0.0)
     dvar_ref[...] = jnp.where(valid, -x / (2.0 * f2), 0.0)
-    h11_ref[...] = jnp.where(gate, -x * (1.0 / f2 + 3.0 * var / (f2 * f2)),
-                             0.0)
-    h12_ref[...] = jnp.where(gate, x / f3, 0.0)
+    h11_ref[...] = jnp.where(
+        gate, -x * (1.0 / f2 + 3.0 * var / (f2 * f2)),
+        0.0).astype(h11_ref.dtype)
+    h12_ref[...] = jnp.where(gate, x / f3, 0.0).astype(h12_ref.dtype)
 
 
-def poisson_elbo_hess_pallas(x, bg, e1, var, interpret: bool = False):
+def poisson_elbo_hess_pallas(x, bg, e1, var, interpret: bool = False,
+                             block: int | None = None,
+                             lane: int | None = None,
+                             curv_dtype=jnp.float32):
     """x/bg/e1/var: [S, P, P] → (value [S], d_e1, d_var, h_e1e1, h_e1var).
 
     The pixel arrays are the residuals and curvature blocks that
     ``core/batched_elbo.second_order`` contracts with the moment Jacobians
     (JᵀWJ + Σ g·∇²m) to assemble the exact dense Hessian without ever
     re-rendering the patch pipeline under forward-over-reverse AD.
+
+    ``curv_dtype`` sets the storage dtype of the two curvature outputs
+    only (value and gradient residuals are always f32): under the bf16
+    policy they are rounded once, in-kernel, before the HBM write —
+    halving the write traffic of 2 of the 4 pixel outputs.
     """
     s, patch, _ = x.shape
-    p_pad = max(128, -(-patch // 128) * 128)
-    blk = _block(s)
+    p_pad = _lane_pad(patch, lane)
+    blk = _block(s, block)
     (xp, bgp, e1p, varp), s_pad = _pad_inputs(
         [x, bg, e1, var], patch, p_pad, blk)
 
     kernel = functools.partial(_elbo_hess_kernel, patch=patch)
     spec = pl.BlockSpec((blk, patch, p_pad), lambda i: (i, 0, 0))
     pix = jax.ShapeDtypeStruct((s_pad, patch, p_pad), jnp.float32)
+    pix_c = jax.ShapeDtypeStruct((s_pad, patch, p_pad), curv_dtype)
     val, de1, dvar, h11, h12 = pl.pallas_call(
         kernel,
         grid=(s_pad // blk,),
@@ -181,7 +226,7 @@ def poisson_elbo_hess_pallas(x, bg, e1, var, interpret: bool = False):
         out_specs=[pl.BlockSpec((blk, 1), lambda i: (i, 0)),
                    spec, spec, spec, spec],
         out_shape=[jax.ShapeDtypeStruct((s_pad, 1), jnp.float32),
-                   pix, pix, pix, pix],
+                   pix, pix, pix_c, pix_c],
         interpret=interpret,
     )(xp, bgp, e1p, varp)
     crop = lambda a: a[:s, :, :patch]

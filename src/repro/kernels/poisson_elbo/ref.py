@@ -9,6 +9,11 @@ e1 and source variance var (delta-method term):
 
 and the kernel reduces ``term`` over the patch, returning one scalar per
 (source, image).  This is the pixel part of core/elbo.elbo_patch.
+
+Like the Pallas kernels, the oracles accept bf16 pixel inputs and
+upcast to f32 before any arithmetic (mixed-precision policy: only the
+array traffic is bf16, every accumulation is f32), so ref/pallas parity
+holds under either precision.
 """
 from __future__ import annotations
 
@@ -17,8 +22,13 @@ import jax.numpy as jnp
 EPS = 1e-6
 
 
+def _upcast(*arrs):
+    return tuple(a.astype(jnp.float32) for a in arrs)
+
+
 def poisson_elbo_ref(x, bg, e1, var):
     """x, bg, e1, var: [..., P, P] → [...] (sum over last two dims)."""
+    x, bg, e1, var = _upcast(x, bg, e1, var)
     f = jnp.maximum(bg + e1, EPS)
     logf = jnp.log(f) - var / (2.0 * f * f)
     term = x * (logf - jnp.log(jnp.maximum(x, 1.0))) - (f - x)
@@ -32,6 +42,7 @@ def poisson_elbo_grad_ref(x, bg, e1, var):
     residuals are the derivatives of the patch sum with respect to each
     pixel's e1 / var (zero where the EPS clamp is active).
     """
+    x, bg, e1, var = _upcast(x, bg, e1, var)
     raw = bg + e1
     f = jnp.maximum(raw, EPS)
     f2 = f * f
@@ -57,6 +68,7 @@ def poisson_elbo_hess_ref(x, bg, e1, var):
     by the EPS clamp (f constant where bg + e1 ≤ EPS), matching autodiff
     of the value oracle exactly.
     """
+    x, bg, e1, var = _upcast(x, bg, e1, var)
     raw = bg + e1
     f = jnp.maximum(raw, EPS)
     f2 = f * f

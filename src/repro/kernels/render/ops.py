@@ -36,10 +36,19 @@ def pack_galaxy(meta: cmodel.ImageMeta, flux, mu_rel, scale, ratio, angle,
     return ref.gmm_to_kernel_inputs(amp, cov, mu_rel)
 
 
-@functools.partial(jax.jit, static_argnames=("patch", "impl"))
-def render_gmm(norm, covinv, mu_rel, patch: int, impl: str = "pallas_interpret"):
-    """Dispatch: 'pallas' (TPU), 'pallas_interpret' (CPU check), 'ref'."""
+@functools.partial(jax.jit,
+                   static_argnames=("patch", "impl", "block", "lane"))
+def render_gmm(norm, covinv, mu_rel, patch: int,
+               impl: str = "pallas_interpret",
+               block: int | None = None, lane: int | None = None):
+    """Dispatch: 'pallas' (TPU), 'pallas_interpret' (CPU check), 'ref'.
+
+    ``block`` (sources per program) and ``lane`` (minor-dim padding
+    multiple) are the tunable occupancy knobs; ``None`` keeps the kernel
+    defaults (1 source per program, 128-lane padding).
+    """
     if impl == "ref":
         return ref.render_ref(norm, covinv, mu_rel, patch)
     return render_pallas(norm, covinv, mu_rel, patch,
-                         interpret=(impl == "pallas_interpret"))
+                         interpret=(impl == "pallas_interpret"),
+                         block=block, lane=lane)

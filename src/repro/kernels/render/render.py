@@ -1,15 +1,28 @@
 """Pallas TPU kernel: Gaussian-mixture patch rendering.
 
 This is the Celeste hot loop (paper §III-B: per-pixel expected flux from a
-source's GMM).  TPU adaptation (DESIGN.md §2.3): the grid is (sources,);
-each program renders one source's full patch in VMEM.  The patch is laid
-out [P, P_pad] with the trailing dim padded to the 128-lane VPU width, and
-all K mixture components are evaluated with an unrolled VPU loop —
-exp/multiply-add over an (8, 128)-tiled block, no HBM round trips for
-intermediates.
+source's GMM).  TPU adaptation (DESIGN.md §2.3): the grid is
+(ceil(S / block),); each program renders a *block* of sources' full
+patches in VMEM.  Patches are laid out [block, P, P_pad] with the
+trailing dim padded to a lane multiple, and all K mixture components are
+evaluated with an unrolled VPU loop — exp/multiply-add over an
+(8, 128)-tiled block, no HBM round trips for intermediates.
 
-Per-source parameters (norm/covinv/mu) ride along as (1, ·)-blocked VMEM
-operands indexed by the grid; they are tiny compared to the pixel block.
+Per-source parameters (norm/covinv/mu) ride along as (block, ·)-blocked
+VMEM operands indexed by the grid; they are tiny compared to the pixel
+block.
+
+Occupancy knobs (swept by ``kernels/tuning.py``):
+
+  * ``block`` — sources per program (default 1, the original layout).
+    Batching sources amortizes the per-program overhead — dominant for
+    the Pallas interpreter on CPU — at the cost of a bigger VMEM block.
+  * ``lane``  — minor-dim padding multiple (default 128, the VPU lane
+    width; required by the compiled TPU backend).  Interpreter mode has
+    no lane constraint, so small patches can drop the padded-lane waste.
+
+Parameters may be bf16 (mixed-precision render inputs); the kernel
+upcasts on load and always accumulates/emits f32 densities.
 """
 from __future__ import annotations
 
@@ -19,42 +32,62 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+LANE = 128
+
+
+def _lane_pad(patch: int, lane: int | None = None) -> int:
+    lane = lane or LANE
+    return max(lane, -(-patch // lane) * lane)
+
 
 def _render_kernel(norm_ref, covinv_ref, mu_ref, out_ref, *, patch: int,
                    num_comp: int):
-    """One source per program.  out_ref: [1, P, P_pad]."""
-    p_pad = out_ref.shape[-1]
-    # pixel-center coordinate planes, [P, P_pad]
+    """A block of sources per program.  out_ref: [block, P, P_pad]."""
+    b, _, p_pad = out_ref.shape
+    # pixel-center coordinate planes, [P, P_pad], broadcast over the block
     ri = jax.lax.broadcasted_iota(jnp.float32, (patch, p_pad), 0) + 0.5
     ci = jax.lax.broadcasted_iota(jnp.float32, (patch, p_pad), 1) + 0.5
-    dx = ri - mu_ref[0, 0]
-    dy = ci - mu_ref[0, 1]
-    acc = jnp.zeros((patch, p_pad), jnp.float32)
+    mu = mu_ref[...].astype(jnp.float32)
+    dx = ri[None] - mu[:, 0][:, None, None]          # [b, P, P_pad]
+    dy = ci[None] - mu[:, 1][:, None, None]
+    norm = norm_ref[...].astype(jnp.float32)
+    covinv = covinv_ref[...].astype(jnp.float32)
+    acc = jnp.zeros((b, patch, p_pad), jnp.float32)
+    per = lambda t: t[:, None, None]                 # [b] → [b, 1, 1]
     for k in range(num_comp):        # static unroll over mixture components
-        a = covinv_ref[0, k, 0]
-        b = covinv_ref[0, k, 1]
-        c = covinv_ref[0, k, 2]
-        q = a * dx * dx + 2.0 * c * dx * dy + b * dy * dy
-        acc = acc + norm_ref[0, k] * jnp.exp(-0.5 * q)
-    out_ref[0] = acc
+        a = per(covinv[:, k, 0])
+        bb = per(covinv[:, k, 1])
+        c = per(covinv[:, k, 2])
+        q = a * dx * dx + 2.0 * c * dx * dy + bb * dy * dy
+        acc = acc + per(norm[:, k]) * jnp.exp(-0.5 * q)
+    out_ref[...] = acc
 
 
 def render_pallas(norm: jnp.ndarray, covinv: jnp.ndarray, mu: jnp.ndarray,
-                  patch: int, interpret: bool = False) -> jnp.ndarray:
+                  patch: int, interpret: bool = False,
+                  block: int | None = None,
+                  lane: int | None = None) -> jnp.ndarray:
     """norm: [S, K]; covinv: [S, K, 3]; mu: [S, 2] → [S, patch, patch]."""
     s, k = norm.shape
-    p_pad = max(128, -(-patch // 128) * 128)   # lane-align the minor dim
+    blk = max(1, min(s, block or 1))
+    s_pad = -(-s // blk) * blk
+    p_pad = _lane_pad(patch, lane)   # lane-align the minor dim
+    if s_pad != s:
+        # zero-padded sources render harmlessly: norm 0 ⇒ density 0
+        pad = lambda a: jnp.pad(
+            a, ((0, s_pad - s),) + ((0, 0),) * (a.ndim - 1))
+        norm, covinv, mu = pad(norm), pad(covinv), pad(mu)
     kernel = functools.partial(_render_kernel, patch=patch, num_comp=k)
     out = pl.pallas_call(
         kernel,
-        grid=(s,),
+        grid=(s_pad // blk,),
         in_specs=[
-            pl.BlockSpec((1, k), lambda i: (i, 0)),
-            pl.BlockSpec((1, k, 3), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+            pl.BlockSpec((blk, k), lambda i: (i, 0)),
+            pl.BlockSpec((blk, k, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((blk, 2), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, patch, p_pad), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((s, patch, p_pad), jnp.float32),
+        out_specs=pl.BlockSpec((blk, patch, p_pad), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_pad, patch, p_pad), jnp.float32),
         interpret=interpret,
     )(norm, covinv, mu)
-    return out[:, :, :patch]
+    return out[:s, :, :patch]

@@ -1,0 +1,242 @@
+"""Autotuner for the ELBO/render kernel occupancy knobs.
+
+The Poisson-ELBO reduction kernels and the GMM render kernel expose two
+tunable shape parameters (``kernels/poisson_elbo``, ``kernels/render``):
+
+  * the **source-block size** — how many source patches one Pallas
+    program processes (``elbo_block`` for the three poisson_elbo
+    kernels, ``render_block`` for the render kernel), and
+  * the **lane padding multiple** — what the patch minor dim is padded
+    to (``lane``; 128 is the TPU VPU width and mandatory for the
+    compiled backend, while interpreter mode on CPU has no lane
+    constraint and small patches waste up to 87.5% of every row at 128).
+
+``autotune`` times the real kernels over candidate shapes on synthetic
+data of the caller's problem shape and returns the fastest
+:class:`KernelConfig`; the winner is cached on disk so steady-state runs
+pay zero tuning cost.
+
+Cache policy (see docs/backends.md):
+
+  * **key** — backend name, device platform, JAX version, and the
+    problem shape ``(s, n_img, patch)``.  One JSON file per key under
+    the cache directory.
+  * **location** — ``$REPRO_AUTOTUNE_DIR`` if set, else
+    ``~/.cache/repro-autotune``.
+  * **invalidation** — the JAX version and device platform are part of
+    the key, so upgrading either simply misses the cache and retunes;
+    stale entries are never silently reused across toolchains.  Entries
+    whose block/lane values fall outside the current candidate space are
+    still honored (they were measured), but ``store`` always rewrites
+    the full record.
+
+``BLOCK=32``/``LANE=128``/one-source-per-render-program remain the
+hard defaults (``DEFAULT``): an empty cache reproduces the untuned
+kernels bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+ENV_DIR = "REPRO_AUTOTUNE_DIR"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Tuned kernel shapes threaded through ``BatchedObjective``.
+
+    ``precision`` rides along so one object describes a full rung of the
+    speed ladder, but the autotuner itself only sweeps the shape knobs —
+    precision is a *policy* choice gated by accuracy, not a timing race.
+    """
+
+    elbo_block: int = 32     # sources per poisson_elbo program
+    render_block: int = 1    # sources per render program
+    lane: int = 128          # minor-dim padding multiple
+    precision: str = "f32"   # "f32" | "bf16" (Hessian-assembly operands)
+
+
+DEFAULT = KernelConfig()
+
+# candidate spaces for the sweep; ``lane != 128`` is interpreter-only
+ELBO_BLOCKS = (8, 16, 32, 64, 128)
+RENDER_BLOCKS = (1, 4, 8, 16)
+LANES = (8, 128)
+
+
+def cache_dir() -> str:
+    return os.environ.get(ENV_DIR) or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro-autotune")
+
+
+def cache_key(backend: str, s: int, n_img: int, patch: int) -> str:
+    platform = jax.devices()[0].platform
+    return (f"{backend}-{platform}-jax{jax.__version__}"
+            f"-s{s}-n{n_img}-p{patch}")
+
+
+def cache_path(backend: str, s: int, n_img: int, patch: int) -> str:
+    return os.path.join(cache_dir(),
+                        cache_key(backend, s, n_img, patch) + ".json")
+
+
+def load(backend: str, s: int, n_img: int, patch: int) -> KernelConfig | None:
+    """Cached winner for this key, or None on a miss/corrupt entry."""
+    path = cache_path(backend, s, n_img, patch)
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        fields = {f.name for f in dataclasses.fields(KernelConfig)}
+        return KernelConfig(**{k: v for k, v in raw["config"].items()
+                               if k in fields})
+    except (OSError, KeyError, TypeError, ValueError):
+        return None
+
+
+def store(config: KernelConfig, backend: str, s: int, n_img: int,
+          patch: int, report: dict | None = None) -> str:
+    path = cache_path(backend, s, n_img, patch)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    payload = {"key": cache_key(backend, s, n_img, patch),
+               "config": dataclasses.asdict(config),
+               "report": report or {}}
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    os.replace(tmp, path)   # atomic: concurrent tuners never tear a read
+    return path
+
+
+def resolve(config, backend: str, s: int, n_img: int,
+            patch: int) -> KernelConfig:
+    """Normalize a config argument: None → DEFAULT, ``"auto"`` → cache
+    lookup (DEFAULT on a miss), a KernelConfig passes through."""
+    if config is None:
+        return DEFAULT
+    if config == "auto":
+        return load(backend, s, n_img, patch) or DEFAULT
+    if isinstance(config, KernelConfig):
+        return config
+    raise TypeError(f"kernel config must be None, 'auto' or KernelConfig; "
+                    f"got {config!r}")
+
+
+# ---------------------------------------------------------------------------
+# The sweep
+# ---------------------------------------------------------------------------
+
+
+def _time(fn, iters: int = 2) -> float:
+    jax.block_until_ready(fn())          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters
+
+
+def _synthetic_elbo_inputs(flat: int, patch: int, seed: int = 0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    rate = 100.0
+    x = jax.random.poisson(k1, rate, (flat, patch, patch)).astype(
+        jnp.float32)
+    bg = jnp.full((flat, patch, patch), rate * 0.9, jnp.float32)
+    e1 = jax.random.uniform(k2, (flat, patch, patch)) * rate * 0.2
+    var = 0.1 * e1 * e1
+    return x, bg, e1, var
+
+
+def _synthetic_render_inputs(flat: int, k: int, patch: int, seed: int = 0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    norm = jax.random.uniform(k1, (flat, k), minval=0.05, maxval=1.0)
+    # well-conditioned inverse covariances (a, b, c) with ab > c²
+    diag = jax.random.uniform(k2, (flat, k, 2), minval=0.2, maxval=1.5)
+    covinv = jnp.stack([diag[..., 0], diag[..., 1],
+                        0.1 * jnp.sqrt(diag[..., 0] * diag[..., 1])],
+                       axis=-1)
+    mu = jax.random.uniform(k3, (flat, 2), minval=2.0, maxval=patch - 2.0)
+    return norm, covinv, mu
+
+
+def lane_candidates(backend: str, lanes=LANES) -> tuple:
+    """The compiled TPU backend requires 128-lane minor dims; only the
+    interpreter (and the jnp ref) may shrink the padding."""
+    if backend == "pallas":
+        return (128,)
+    return tuple(lanes)
+
+
+def autotune(backend: str, s: int, n_img: int, patch: int,
+             k_gal: int = 18,
+             elbo_blocks=ELBO_BLOCKS, render_blocks=RENDER_BLOCKS,
+             lanes=LANES, iters: int = 2, cache: bool = True,
+             seed: int = 0) -> tuple[KernelConfig, dict]:
+    """Sweep candidate block shapes on this problem shape; cache the winner.
+
+    The two knob families are independent (they parameterize different
+    ``pallas_call``s), so the sweep times them independently instead of
+    as a product: the elbo kernel over ``elbo_blocks × lanes`` and the
+    render kernel over ``render_blocks × lanes``, each on synthetic
+    arrays of the caller's ``(s·n_img, patch)`` flat batch.  The render
+    sweep uses the galaxy mixture size (``k_gal``) — the wider of the
+    two renders, hence the one that bounds VMEM.
+
+    Returns ``(winner, report)``; the report lists every timed candidate
+    (seconds per call) and is stored alongside the cached config.
+    """
+    from repro.kernels.poisson_elbo import ops as elbo_ops
+    from repro.kernels.render import ops as render_ops
+
+    if backend not in ("pallas", "pallas_interpret"):
+        raise ValueError(
+            f"autotune targets the kernel backends, not {backend!r}")
+    lanes = lane_candidates(backend, lanes)
+    flat = s * n_img
+    report: dict = {"backend": backend, "s": s, "n_img": n_img,
+                    "patch": patch, "flat": flat,
+                    "elbo": [], "render": []}
+
+    x, bg, e1, var = _synthetic_elbo_inputs(flat, patch, seed)
+    norm, covinv, mu = _synthetic_render_inputs(flat, k_gal, patch, seed)
+    best_e: dict = {}   # lane -> (seconds, block)
+    best_r: dict = {}
+    for lane in lanes:
+        for blk in elbo_blocks:
+            if blk > flat and blk != min(elbo_blocks):
+                continue    # clamped to min(flat, blk): skip duplicates
+            secs = _time(lambda b=blk, l=lane: elbo_ops.poisson_elbo_hess(
+                x, bg, e1, var, impl=backend, block=b, lane=l),
+                iters=iters)
+            report["elbo"].append(
+                {"block": blk, "lane": lane, "seconds": secs})
+            if lane not in best_e or secs < best_e[lane][0]:
+                best_e[lane] = (secs, blk)
+        for blk in render_blocks:
+            if blk > flat and blk != min(render_blocks):
+                continue
+            secs = _time(lambda b=blk, l=lane: render_ops.render_gmm(
+                norm, covinv, mu, patch, impl=backend, block=b, lane=l),
+                iters=iters)
+            report["render"].append(
+                {"block": blk, "lane": lane, "seconds": secs})
+            if lane not in best_r or secs < best_r[lane][0]:
+                best_r[lane] = (secs, blk)
+
+    # one lane serves both kernels (they share the pixel layout): pick
+    # the lane minimizing the summed best-per-kernel time, then each
+    # kernel keeps its own best block at that lane
+    lane = min(lanes, key=lambda l: best_e[l][0] + best_r[l][0])
+    winner = KernelConfig(elbo_block=best_e[lane][1],
+                          render_block=best_r[lane][1], lane=lane)
+    report["winner"] = dataclasses.asdict(winner)
+    if cache:
+        report["cache_path"] = store(winner, backend, s, n_img, patch,
+                                     report={k: report[k] for k in
+                                             ("elbo", "render", "winner")})
+    return winner, report

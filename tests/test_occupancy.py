@@ -1,0 +1,253 @@
+"""Occupancy-knob validation: every block/lane shape the autotuner can
+emit must be mathematically invisible, the padded-lane mask must hold,
+the autotune cache must round-trip, and the mixed-precision policy must
+keep the gradient path exact.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backends
+from repro.kernels import tuning
+from repro.kernels.poisson_elbo import ops as elbo_ops
+from repro.kernels.render import ops as render_ops
+from repro.kernels.render import ref as render_ref_mod
+
+
+def _elbo_inputs(s, patch, rate=100.0, seed=0):
+    key = jax.random.PRNGKey(seed + s)
+    x = jax.random.poisson(key, rate, (s, patch, patch)).astype(jnp.float32)
+    bg = jnp.full((s, patch, patch), rate * 0.9)
+    e1 = jax.random.uniform(key, (s, patch, patch)) * rate * 0.2
+    var = 0.1 * e1**2
+    return x, bg, e1, var
+
+
+def _render_inputs(s, k, patch, seed=0):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed + s), 4)
+    amp = jax.random.uniform(k1, (s, k), minval=0.1, maxval=2.0)
+    d = jax.random.uniform(k2, (s, k, 2), minval=0.5, maxval=4.0)
+    off = jax.random.uniform(k3, (s, k), minval=-0.4, maxval=0.4)
+    cov = (jnp.zeros((s, k, 2, 2))
+           .at[..., 0, 0].set(d[..., 0]).at[..., 1, 1].set(d[..., 1])
+           .at[..., 0, 1].set(off).at[..., 1, 0].set(off))
+    mu = jax.random.uniform(k4, (s, 2), minval=2.0, maxval=patch - 2.0)
+    return render_ref_mod.gmm_to_kernel_inputs(amp, cov, mu)
+
+
+# every shape the autotuner can emit, on ragged/edge source counts:
+# S=1 (single program, heavy padding), 31/33 (one off a block multiple),
+# 65 (just past two 32-blocks)
+@pytest.mark.parametrize("s", [1, 31, 33, 65])
+@pytest.mark.parametrize("block", sorted(set(tuning.ELBO_BLOCKS)))
+@pytest.mark.parametrize("lane", sorted(set(tuning.LANES)))
+def test_elbo_hess_parity_across_tuned_shapes(s, block, lane):
+    """The hess kernel (superset of value + grad outputs) must match the
+    ref oracle bit-for-bit-close under every (block, lane) candidate."""
+    x, bg, e1, var = _elbo_inputs(s, patch=16)
+    want = elbo_ops.poisson_elbo_hess(x, bg, e1, var, impl="ref")
+    got = elbo_ops.poisson_elbo_hess(x, bg, e1, var,
+                                     impl="pallas_interpret",
+                                     block=block, lane=lane)
+    for w, g in zip(want, got):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block,lane", [(8, 8), (32, 8), (128, 128)])
+def test_elbo_value_and_grad_parity_across_tuned_shapes(block, lane):
+    x, bg, e1, var = _elbo_inputs(33, patch=16)
+    np.testing.assert_allclose(
+        np.asarray(elbo_ops.poisson_elbo(x, bg, e1, var,
+                                         impl="pallas_interpret",
+                                         block=block, lane=lane)),
+        np.asarray(elbo_ops.poisson_elbo(x, bg, e1, var, impl="ref")),
+        rtol=1e-5, atol=1e-4)
+    want = elbo_ops.poisson_elbo_grad(x, bg, e1, var, impl="ref")
+    got = elbo_ops.poisson_elbo_grad(x, bg, e1, var,
+                                     impl="pallas_interpret",
+                                     block=block, lane=lane)
+    for w, g in zip(want, got):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("s", [1, 5, 33])
+@pytest.mark.parametrize("block", sorted(set(tuning.RENDER_BLOCKS)))
+@pytest.mark.parametrize("lane", sorted(set(tuning.LANES)))
+def test_render_parity_across_tuned_shapes(s, block, lane):
+    norm, covinv, mu = _render_inputs(s, k=6, patch=16)
+    want = render_ref_mod.render_ref(norm, covinv, mu, 16)
+    got = render_ops.render_gmm(norm, covinv, mu, 16,
+                                impl="pallas_interpret",
+                                block=block, lane=lane)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_padded_lanes_do_not_leak():
+    """The validity mask, not the zero padding, must kill padded lanes:
+    results are identical whatever the minor dim is padded to, even with
+    inputs whose padding region would poison an unmasked reduction."""
+    x, bg, e1, var = _elbo_inputs(3, patch=12)   # 12 is ragged vs lane=8
+    outs = [elbo_ops.poisson_elbo_hess(x, bg, e1, var,
+                                       impl="pallas_interpret",
+                                       block=2, lane=lane)
+            for lane in (8, 128)]
+    for a, b in zip(*outs):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bf16_curvature_outputs():
+    """curv="bf16" stores exactly the two curvature arrays in bf16 —
+    value and gradient residuals stay f32 — and kernel and oracle agree
+    under the identical rounding."""
+    x, bg, e1, var = _elbo_inputs(9, patch=16)
+    got = elbo_ops.poisson_elbo_hess(x, bg, e1, var,
+                                     impl="pallas_interpret",
+                                     block=4, lane=8, curv="bf16")
+    want = elbo_ops.poisson_elbo_hess(x, bg, e1, var, impl="ref",
+                                      curv="bf16")
+    assert [a.dtype for a in got] == [jnp.float32] * 3 + [jnp.bfloat16] * 2
+    for w, g in zip(want, got):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache + config resolution
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv(tuning.ENV_DIR, str(tmp_path))
+    cfg = tuning.KernelConfig(elbo_block=64, render_block=8, lane=8)
+    assert tuning.load("pallas_interpret", 32, 5, 16) is None
+    path = tuning.store(cfg, "pallas_interpret", 32, 5, 16,
+                        report={"elbo": []})
+    assert os.path.dirname(path) == str(tmp_path)
+    assert tuning.load("pallas_interpret", 32, 5, 16) == cfg
+    # the key carries backend + problem shape: other shapes still miss
+    assert tuning.load("pallas_interpret", 64, 5, 16) is None
+    assert tuning.load("pallas", 32, 5, 16) is None
+    # a corrupt entry reads as a miss, never an exception
+    with open(path, "w") as f:
+        f.write("{not json")
+    assert tuning.load("pallas_interpret", 32, 5, 16) is None
+
+
+def test_resolve_semantics(tmp_path, monkeypatch):
+    monkeypatch.setenv(tuning.ENV_DIR, str(tmp_path))
+    cfg = tuning.KernelConfig(elbo_block=16, render_block=4, lane=8)
+    assert tuning.resolve(None, "pallas_interpret", 8, 5, 16) \
+        == tuning.DEFAULT
+    assert tuning.resolve(cfg, "pallas_interpret", 8, 5, 16) == cfg
+    # "auto" on a cold cache falls back to the untuned defaults ...
+    assert tuning.resolve("auto", "pallas_interpret", 8, 5, 16) \
+        == tuning.DEFAULT
+    # ... and picks up the cached winner once one exists
+    tuning.store(cfg, "pallas_interpret", 8, 5, 16)
+    assert tuning.resolve("auto", "pallas_interpret", 8, 5, 16) == cfg
+    with pytest.raises(TypeError):
+        tuning.resolve({"elbo_block": 8}, "pallas_interpret", 8, 5, 16)
+
+
+def test_autotune_sweep_caches_winner(tmp_path, monkeypatch):
+    monkeypatch.setenv(tuning.ENV_DIR, str(tmp_path))
+    winner, report = tuning.autotune(
+        "pallas_interpret", 8, 3, 8, k_gal=4,
+        elbo_blocks=(8,), render_blocks=(1,), lanes=(8,), iters=1)
+    assert winner.elbo_block == 8 and winner.render_block == 1
+    assert winner.lane == 8
+    assert report["winner"] == dataclasses.asdict(winner)
+    assert tuning.load("pallas_interpret", 8, 3, 8) == winner
+    with pytest.raises(ValueError):
+        tuning.autotune("ref", 8, 3, 8)
+
+
+def test_lane_candidates_compiled_backend_pinned():
+    assert tuning.lane_candidates("pallas") == (128,)
+    assert set(tuning.lane_candidates("pallas_interpret")) \
+        == set(tuning.LANES)
+
+
+def test_resolve_precision_env(monkeypatch):
+    monkeypatch.delenv(backends.ENV_PRECISION, raising=False)
+    assert backends.resolve_precision() == "f32"
+    assert backends.resolve_precision("bf16") == "bf16"
+    monkeypatch.setenv(backends.ENV_PRECISION, "bf16")
+    assert backends.resolve_precision() == "bf16"
+    assert backends.resolve_precision("f32") == "f32"   # arg wins
+    with pytest.raises(ValueError):
+        backends.resolve_precision("f16")
+
+
+# ---------------------------------------------------------------------------
+# Mixed precision through the batched objective
+# ---------------------------------------------------------------------------
+
+
+def _small_objective_problem(s=4, patch=12, seed=3):
+    from repro.core import elbo, infer, synthetic
+    from repro.core.priors import default_priors
+    priors = default_priors()
+    sky = synthetic.sample_sky(jax.random.PRNGKey(seed), num_sources=s,
+                               field=64, priors=priors)
+    x, corners = infer.extract_patches(sky.images, sky.metas,
+                                       sky.truth.pos, patch)
+    bg = jnp.broadcast_to(sky.metas.sky[None, :, None, None], x.shape)
+    thetas = jax.vmap(lambda t: elbo.init_theta(t, priors))(sky.truth)
+    return sky.metas, priors, thetas, x, bg, corners
+
+
+def test_bf16_keeps_value_and_gradient_exact():
+    """The precision policy's core invariant: bf16 may only perturb the
+    Hessian.  Value and gradient out of second_order must be bitwise
+    identical to f32 — they define the Newton fixed point."""
+    from repro.core import batched_elbo
+    metas, priors, thetas, x, bg, corners = _small_objective_problem()
+    cfg = tuning.KernelConfig(elbo_block=8, render_block=4, lane=8)
+    obj32 = batched_elbo.make_batched_objective(
+        metas, priors, backend="pallas_interpret", config=cfg)
+    obj16 = batched_elbo.make_batched_objective(
+        metas, priors, backend="pallas_interpret", precision="bf16",
+        config=cfg)
+    v32, g32, h32 = obj32.second_order(thetas, x, bg, corners)
+    v16, g16, h16 = obj16.second_order(thetas, x, bg, corners)
+    np.testing.assert_array_equal(np.asarray(v16), np.asarray(v32))
+    np.testing.assert_array_equal(np.asarray(g16), np.asarray(g32))
+    # the Hessian is perturbed at bf16 rounding scale, no further
+    np.testing.assert_allclose(np.asarray(h16), np.asarray(h32),
+                               rtol=3e-2, atol=3e-2 * float(
+                                   np.max(np.abs(np.asarray(h32)))))
+
+
+def test_bf16_config_precision_rides_along():
+    """A KernelConfig carrying precision="bf16" switches the objective
+    without an explicit precision argument (the speed-ladder plumbing)."""
+    from repro.core import batched_elbo
+    metas, priors, thetas, x, bg, corners = _small_objective_problem()
+    cfg = tuning.KernelConfig(elbo_block=8, render_block=4, lane=8,
+                              precision="bf16")
+    obj = batched_elbo.make_batched_objective(
+        metas, priors, backend="pallas_interpret", config=cfg)
+    ref = batched_elbo.make_batched_objective(
+        metas, priors, backend="pallas_interpret", precision="bf16",
+        config=dataclasses.replace(cfg, precision="f32"))
+    _, _, h_a = obj.second_order(thetas, x, bg, corners)
+    _, _, h_b = ref.second_order(thetas, x, bg, corners)
+    np.testing.assert_array_equal(np.asarray(h_a), np.asarray(h_b))
+
+
+def test_make_batched_objective_rejects_auto_string():
+    from repro.core import batched_elbo
+    metas, priors, *_ = _small_objective_problem(s=2, patch=8)
+    with pytest.raises(TypeError):
+        batched_elbo.make_batched_objective(metas, priors,
+                                            backend="pallas_interpret",
+                                            config="auto")
