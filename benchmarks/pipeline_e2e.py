@@ -60,6 +60,8 @@ def run(grid=(2, 2), field=96, overlap=32, sources_per_field=6,
         "duplicates": st.metrics["duplicates"],
         "converged": sum(r.n_converged for r in st.fields),
         "fit": sum(r.n_owned for r in st.fields),
+        # REPRO_CHECKIFY=1 harvest (empty when the mode is off)
+        "checkify_errors": list(st.checkify_errors),
     }
 
 
@@ -98,6 +100,8 @@ def main():
         assert r["completeness"] >= 0.9, r
         assert r["purity"] >= 0.9, r
         assert r["duplicates"] == 0, r
+        # under REPRO_CHECKIFY=1 the sanitizer must come back clean
+        assert r["checkify_errors"] == [], r["checkify_errors"]
         print("SMOKE OK: completeness "
               f"{r['completeness']:.2f}, purity {r['purity']:.2f}, "
               f"0 duplicates over {r['fields_run']} fields")

@@ -38,6 +38,8 @@ from typing import Callable
 
 ENV_VAR = "REPRO_ELBO_BACKEND"
 ENV_PRECISION = "REPRO_ELBO_PRECISION"
+ENV_CHECKIFY = "REPRO_CHECKIFY"
+ENV_CHECKIFY_ERRORS = "REPRO_CHECKIFY_ERRORS"
 DEFAULT = "jax"
 PRECISIONS = ("f32", "bf16")
 
@@ -73,6 +75,44 @@ def resolve_precision(precision: str | None = None) -> str:
             f"unknown ELBO precision {precision!r}; "
             f"available: {PRECISIONS}")
     return precision
+
+
+def checkify_enabled() -> bool:
+    """True when the ``REPRO_CHECKIFY=1`` sanitizer mode is on.
+
+    In this mode ``infer.run_inference`` brackets every Newton segment
+    with a ``checkify.checkify``-functionalized objective probe plus a
+    post-segment host scan, surfacing tripped checks in
+    ``InferenceStats.checkify_errors``; objective factories can also
+    embed ``checkify.check`` guards directly
+    (``make_batched_objective(checkify_guards=True)``).  An
+    unfunctionalized check under plain ``jax.jit`` is a trace-time
+    error, so guards are only inserted when the consumer is known to be
+    checkified.
+    """
+    return os.environ.get(ENV_CHECKIFY) == "1"
+
+
+def checkify_error_set():
+    """The checkify error set selected by ``REPRO_CHECKIFY_ERRORS``.
+
+    ``"user"`` (default) runs only the explicit finite-output guards —
+    precise, no false positives.  ``"nan"``/``"div"``/``"float"``/
+    ``"index"``/``"all"`` add automatic instrumentation of every
+    primitive; note the kernel pipelines intentionally compute masked-out
+    padding lanes (``log``/``1/det`` on zero-padded mixture slots) whose
+    pre-mask non-finite intermediates the automatic modes will flag.
+    """
+    from jax.experimental import checkify
+    sets = {"user": checkify.user_checks, "nan": checkify.nan_checks,
+            "div": checkify.div_checks, "index": checkify.index_checks,
+            "float": checkify.float_checks, "all": checkify.all_checks}
+    name = os.environ.get(ENV_CHECKIFY_ERRORS, "user")
+    if name not in sets:
+        raise ValueError(
+            f"unknown {ENV_CHECKIFY_ERRORS} value {name!r}; "
+            f"available: {tuple(sets)}")
+    return sets[name]
 
 
 def get(name: str | None = None) -> Callable:

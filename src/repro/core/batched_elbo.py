@@ -562,10 +562,62 @@ def _make_second_order(metas: ImageMeta, priors: Priors, impl: str,
 # ---------------------------------------------------------------------------
 
 
+def _guard_objective(
+        obj: newton.BatchedObjective) -> newton.BatchedObjective:
+    """Wrap every objective entry point with finite-output checkify guards.
+
+    The guards are ``checkify.check`` calls, which are inert in eager
+    execution and a trace-time error under a plain ``jax.jit`` — callers
+    MUST functionalize with ``checkify.checkify`` before jitting
+    (``infer._fit_segment`` does; see ``backends.checkify_enabled``).
+    The checks live at the objective surface rather than inside the
+    kernels so the padded lanes the kernels intentionally compute and
+    mask out never trip them.
+    """
+    from jax.experimental import checkify
+
+    def _finite(name, t):
+        checkify.check(jnp.all(jnp.isfinite(t)),
+                       "non-finite ELBO " + name + " in batch "
+                       "(REPRO_CHECKIFY guard)")
+
+    def value(thetas, *args):
+        v = obj.value(thetas, *args)
+        _finite("value", v)
+        return v
+
+    def value_and_grad(thetas, *args):
+        v, g = obj.value_and_grad(thetas, *args)
+        _finite("value", v)
+        _finite("gradient", g)
+        return v, g
+
+    def hessian(thetas, *args):
+        h = obj.hessian(thetas, *args)
+        _finite("hessian", h)
+        return h
+
+    second_order = None
+    if obj.second_order is not None:
+        def second_order(thetas, *args):
+            v, g, h = obj.second_order(thetas, *args)
+            _finite("value", v)
+            _finite("gradient", g)
+            _finite("hessian", h)
+            return v, g, h
+
+    return newton.BatchedObjective(value=value,
+                                   value_and_grad=value_and_grad,
+                                   hessian=hessian,
+                                   second_order=second_order)
+
+
 def make_batched_objective(metas: ImageMeta, priors: Priors,
                            backend: str = "jax", *,
                            precision: str | None = None,
-                           config=None) -> newton.BatchedObjective:
+                           config=None,
+                           checkify_guards: bool | None = None
+                           ) -> newton.BatchedObjective:
     """The batch ELBO objective for ``newton.fit_batch``.
 
     All backends share the call signature
@@ -579,7 +631,15 @@ def make_batched_objective(metas: ImageMeta, priors: Priors,
     to the kernel backends; the ``jax`` path ignores them.  The ``"auto"``
     cache lookup is resolved by ``infer.run_inference``, which knows the
     problem shape — here a config must already be concrete.
+
+    ``checkify_guards`` (``None`` defers to ``REPRO_CHECKIFY=1``) embeds
+    ``jax.experimental.checkify`` finite-output guards on every entry
+    point; the caller that jits the objective must then functionalize
+    with ``checkify.checkify`` (see ``_guard_objective``).
     """
+    if checkify_guards is None:
+        checkify_guards = backends.checkify_enabled()
+    guard = _guard_objective if checkify_guards else (lambda o: o)
     config = config or tuning.DEFAULT
     if not isinstance(config, tuning.KernelConfig):
         raise TypeError(
@@ -595,7 +655,7 @@ def make_batched_objective(metas: ImageMeta, priors: Priors,
         return elbo.elbo_patch(theta, x, bg, metas, corners, priors)
 
     if backend == "jax":
-        return newton.batched_from_scalar(per_source)
+        return guard(newton.batched_from_scalar(per_source))
     if backend not in ("pallas", "pallas_interpret", "ref"):
         raise ValueError(f"unknown ELBO backend {backend!r}")
 
@@ -620,10 +680,10 @@ def make_batched_objective(metas: ImageMeta, priors: Priors,
     def hessian(thetas, x, bg, corners):
         return second_order(thetas, x, bg, corners)[2]
 
-    return newton.BatchedObjective(value=value,
-                                   value_and_grad=value_and_grad,
-                                   hessian=hessian,
-                                   second_order=second_order)
+    return guard(newton.BatchedObjective(value=value,
+                                         value_and_grad=value_and_grad,
+                                         hessian=hessian,
+                                         second_order=second_order))
 
 
 for _name in ("jax", "pallas", "pallas_interpret", "ref"):

@@ -66,6 +66,12 @@ class InferenceStats:
     # the adaptive scheduler's cost model consumes for real post-
     # compaction shard speeds
     bucket_history: list = dataclass_field(default_factory=list)
+    # REPRO_CHECKIFY=1 sanitizer harvest: one message per Newton segment
+    # whose entry probe tripped a checkify check (non-finite
+    # value/grad/hess, plus any automatic checks selected by
+    # REPRO_CHECKIFY_ERRORS) or whose post-segment host scan found
+    # non-finite outputs.  Always empty when the mode is off.
+    checkify_errors: list = dataclass_field(default_factory=list)
 
     @property
     def measured_imbalance(self) -> np.ndarray:
@@ -129,7 +135,9 @@ def extract_patches(images: jnp.ndarray, metas: ImageMeta,
 def make_objective(metas: ImageMeta, priors: Priors,
                    backend: str | None = None,
                    precision: str | None = None,
-                   kernel_config=None) -> newton.BatchedObjective:
+                   kernel_config=None,
+                   checkify_guards: bool | None = None
+                   ) -> newton.BatchedObjective:
     """The batched local-ELBO objective for the resolved backend.
 
     ``backend`` is one of ``core/backends.available()``; ``None`` defers to
@@ -137,9 +145,13 @@ def make_objective(metas: ImageMeta, priors: Priors,
     ``precision`` (``"f32"``/``"bf16"``) and ``kernel_config`` (a
     ``kernels/tuning.KernelConfig`` of tuned block shapes) are forwarded
     to the kernel backends; the ``jax`` backend ignores them.
+    ``checkify_guards`` (``None`` → ``REPRO_CHECKIFY=1``) embeds checkify
+    finite-output guards — jitting the result then requires
+    ``checkify.checkify`` functionalization (see ``batched_elbo``).
     """
     return backends.get(backend)(metas, priors, precision=precision,
-                                 config=kernel_config)
+                                 config=kernel_config,
+                                 checkify_guards=checkify_guards)
 
 
 def _gather_batch(idx: np.ndarray, x, bg, corners, thetas):
@@ -278,6 +290,16 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
     when compaction is off — that is the iteration×bucket-size accounting
     baseline) and per-shard slot occupancy in each round's
     ``RoundRecord.occupancy``.
+
+    ``REPRO_CHECKIFY=1`` turns on the sanitizer mode: every Newton
+    segment is bracketed by a ``jax.experimental.checkify``-
+    functionalized evaluation of the objective at segment entry (error
+    set selectable via ``REPRO_CHECKIFY_ERRORS``, default ``"user"`` —
+    the explicit finite guards) and a post-segment host scan of the fit
+    outputs; every tripped check lands as a message in
+    ``stats.checkify_errors`` instead of propagating NaNs silently.  The
+    fit loop itself cannot be checkify-functionalized (vmapped
+    while-loop); see docs/static_analysis.md.
     """
     field = int(images.shape[-1])
     if patch > field:
@@ -333,18 +355,63 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
         kernel_config = tuning.resolve(
             "auto", backends.resolve(backend), batch,
             int(images.shape[0]), patch)
+    # REPRO_CHECKIFY=1: the sanitizer mode.  The Newton fit itself cannot
+    # be checkify-functionalized (the trust-region subproblem is a
+    # vmapped while-loop, which checkify rejects), so the objective the
+    # fit consumes stays unguarded and the instrumentation brackets each
+    # segment instead: a checkified second_order probe at segment entry
+    # (full NaN/OOB provenance from checkify, padded slots masked) plus a
+    # post-segment host scan of the fit outputs.
+    checkify_on = backends.checkify_enabled()
+    checkify_errors: list[str] = []
     objective = make_objective(metas, priors, backend=backend,
                                precision=precision,
-                               kernel_config=kernel_config)
+                               kernel_config=kernel_config,
+                               checkify_guards=False)
 
     min_bucket = 4
     _jit_cache: dict = {}   # per-call: jitted fit/exchange wrappers
+
+    def _checkify_probe(tb, xb, bgb, cb, act, seg):
+        """One checkified ``second_order`` evaluation at segment entry.
+
+        ``checkify.checkify`` functionalizes the full objective pipeline
+        (explicit finite guards by default; NaN/div/OOB instrumentation
+        via ``REPRO_CHECKIFY_ERRORS``), so a tripped check names the
+        offending quantity.  Padded scheduler slots are masked out of the
+        finite checks — after compaction their contents are arbitrary.
+        """
+        if "chk_probe" not in _jit_cache:
+            from jax.experimental import checkify
+            so = newton._second_order_fn(objective)
+
+            def _probe(t, xx, bb, cc, aa):
+                v, g, h = so(t, xx, bb, cc)
+                for name, q in (("value", v), ("gradient", g),
+                                ("hessian", h)):
+                    fin = jnp.isfinite(q).reshape(q.shape[0], -1)
+                    checkify.check(
+                        jnp.all(fin.all(axis=1) | ~aa),
+                        "non-finite ELBO " + name + " at segment entry "
+                        "(REPRO_CHECKIFY probe)")
+                return v
+
+            _jit_cache["chk_probe"] = jax.jit(checkify.checkify(
+                _probe, errors=backends.checkify_error_set()))
+        flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]),
+                            (tb, xb, bgb, cb, act))
+        err, _ = _jit_cache["chk_probe"](*flat)
+        msg = err.get()
+        if msg:
+            checkify_errors.append(f"segment (max {seg} iters): {msg}")
 
     def _fit_segment(tb, xb, bgb, cb, act, radius, state, seg):
         """One Newton segment over [num_shards, W, ...] slot blocks —
         the single fit path for single-shard AND mesh rounds.  ``state``
         is ``None`` (fresh round) or the warm ``(value, grad, hess)``
         carried across a compaction boundary."""
+        if checkify_on:
+            _checkify_probe(tb, xb, bgb, cb, act, seg)
         if mesh is None:
             sq = jax.tree.map(lambda a: a[0], (tb, xb, bgb, cb, act,
                                                radius))
@@ -353,13 +420,28 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
                 max_iters=seg, gtol=gtol, init_radius=sq[5],
                 init_state=(None if state is None
                             else jax.tree.map(lambda a: a[0], state)))
-            return jax.tree.map(lambda a: a[None], res)
-        key = ("fit", seg, state is not None)
-        if key not in _jit_cache:
-            _jit_cache[key] = _sharded_fit(objective, mesh, data_axis,
-                                           gtol, seg, state is not None)
-        st = () if state is None else tuple(state)
-        return _jit_cache[key](tb, xb, bgb, cb, act, radius, *st)
+            res = jax.tree.map(lambda a: a[None], res)
+        else:
+            key = ("fit", seg, state is not None)
+            if key not in _jit_cache:
+                _jit_cache[key] = _sharded_fit(
+                    objective, mesh, data_axis, gtol, seg,
+                    state is not None)
+            st = () if state is None else tuple(state)
+            res = _jit_cache[key](tb, xb, bgb, cb, act, radius, *st)
+        if checkify_on:
+            # the fit loop is not checkify-functionalized (see above);
+            # a host scan of the segment outputs catches mid-segment
+            # non-finite escapes, minus in-kernel provenance
+            bad = np.asarray(act) & (
+                ~np.isfinite(np.asarray(res.value))
+                | ~np.isfinite(np.asarray(res.grad_norm)))
+            if bad.any():
+                checkify_errors.append(
+                    f"segment (max {seg} iters): non-finite "
+                    f"value/grad_norm in {int(bad.sum())} active slot(s) "
+                    "after the Newton segment (post-hoc scan)")
+        return res
 
     def _exchange(state_tree, live, dest_shard, dest_slot, out_rows,
                   moved):
@@ -611,7 +693,7 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
         rounds=rounds_done, total_sources=s, converged=int(conv.sum()),
         iters=iters, elbo_values=values,
         predicted_imbalance=pred_imb, adaptive=adaptive, history=history,
-        bucket_history=bucket_records)
+        bucket_history=bucket_records, checkify_errors=checkify_errors)
     return thetas, stats
 
 

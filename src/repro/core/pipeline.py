@@ -74,6 +74,10 @@ class PipelineStats:
     fetch: object = None            # data.images.FetchStats
     duplicates_removed: int = 0
     metrics: dict | None = None     # vs truth; None when truth withheld
+    # REPRO_CHECKIFY=1 harvest, aggregated over every per-field
+    # run_inference (see InferenceStats.checkify_errors); each entry is
+    # prefixed with the owning field index
+    checkify_errors: list = dataclass_field(default_factory=list)
 
     @property
     def fields_run(self) -> int:
@@ -271,6 +275,7 @@ def run_pipeline(survey, priors: Priors | None = None, *,
     # keyed by field index so a field replayed after a fault restore
     # overwrites its record instead of double-counting the telemetry
     records: dict[int, FieldRecord] = {}
+    checkify_errors: dict[int, list] = {}   # same replay-safe keying
 
     def step_fn(st, i):
         images, metas = store.fetch(i)
@@ -308,6 +313,8 @@ def run_pipeline(survey, priors: Priors | None = None, *,
                 "thetas": st["thetas"].at[i, :n].set(thetas_f),
             }
             conv, mean_iters = istats.converged, float(istats.iters.mean())
+            checkify_errors[i] = [f"field {fld.index}: {m}"
+                                  for m in istats.checkify_errors]
         else:
             st = {"count": st["count"].at[i].set(0),
                   "thetas": st["thetas"]}
@@ -358,7 +365,9 @@ def run_pipeline(survey, priors: Priors | None = None, *,
 
     stats = PipelineStats(fields=[records[k] for k in sorted(records)],
                           loop=loop, fetch=store.stats,
-                          duplicates_removed=removed)
+                          duplicates_removed=removed,
+                          checkify_errors=[m for k in sorted(checkify_errors)
+                                           for m in checkify_errors[k]])
     if getattr(survey, "truth", None) is not None:
         stats.metrics = detect.detection_metrics(
             np.asarray(catalog.pos), np.asarray(survey.truth.pos),

@@ -1,0 +1,14 @@
+"""Quarantined seed-era modules (the LLM training/serving stack).
+
+Nothing here is reachable from the Celeste inference pipeline
+(``repro.core`` / ``repro.kernels``); the modules are kept because their
+tests still pin useful generic behaviour (transformer/SSM layers, the
+AdamW + gradient-compression optimizers, the KV-cache invariants, the
+decode/flash attention kernels) that future PRs may mine for idiom.
+
+The boundary is one-way and machine-enforced: ``repro.legacy`` may
+import live modules, but a live module importing ``repro.legacy`` is a
+``dead_code/legacy-import`` finding in repro-lint
+(``python -m tools.analyze``), and the static-analysis passes skip this
+tree entirely.  Do not add new code here.
+"""

@@ -1,0 +1,183 @@
+"""Config system: architecture + input-shape + parallelism configs.
+
+Every assigned architecture is a ``ModelConfig`` in its own module under
+``repro.legacy.configs``; ``get_config(name)`` resolves them.  Input shapes are the
+four assigned LM shape cells plus the Celeste cells.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Literal
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                  # 0 → d_model // num_heads
+    qk_norm: bool = False
+    # attention pattern (gemma3-style interleaved sliding window)
+    local_window: int = 0              # 0 = all layers full attention
+    local_ratio: int = 0               # N local layers per 1 global
+    rope_theta: float = 1e4
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    # hybrid (Zamba2): shared attention block every k backbone layers
+    shared_attn_every: int = 0
+    # modality frontend stub
+    frontend: Literal["none", "vision", "audio"] = "none"
+    frontend_dim: int = 0              # vision patch embedding dim
+    frontend_len: int = 0              # #patch/frame positions in the seq
+    num_codebooks: int = 0             # musicgen parallel codebooks
+    # numerics / scale-out knobs
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    opt_state_dtype: str = "float32"   # bf16 for ≥100B models
+    remat: bool = True
+    seq_parallel: bool = False         # shard activations on seq over model
+    parallelism: str = "tp"            # "tp" (FSDP×TP) | "fsdp" (pure DP)
+    notes: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    def layer_is_local(self, i: int) -> bool:
+        if not self.local_ratio:
+            return False
+        return (i % (self.local_ratio + 1)) != self.local_ratio
+
+    def num_params(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hd = self.resolved_head_dim
+        attn = d * hd * self.num_heads + 2 * d * hd * self.num_kv_heads \
+            + hd * self.num_heads * d
+        mlp = 3 * d * f
+        if self.num_experts:
+            mlp *= self.num_experts
+        if self.family == "ssm":
+            di = self.ssm_expand * d
+            nh = di // self.ssm_head_dim
+            per = d * (2 * di + 2 * self.ssm_state + nh) + di * d
+            return self.num_layers * per + 2 * v * d
+        if self.family == "hybrid":
+            di = self.ssm_expand * d
+            nh = di // self.ssm_head_dim
+            per = d * (2 * di + 2 * self.ssm_state + nh) + di * d
+            shared = attn + mlp
+            return self.num_layers * per + shared + 2 * v * d
+        per = attn + mlp
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.num_codebooks:
+            emb = self.num_codebooks * v * d * 2
+        return self.num_layers * per + emb
+
+    def active_params(self) -> int:
+        """Parameters touched per token (MoE activates top_k of E)."""
+        if not self.num_experts:
+            return self.num_params()
+        d, f = self.d_model, self.d_ff
+        dense_mlp = 3 * d * f
+        total = self.num_params()
+        return total - self.num_layers * dense_mlp * (
+            self.num_experts - self.top_k)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: Literal["train", "prefill", "decode"]
+    seq_len: int
+    global_batch: int
+    # serving: decode kinds carry a KV cache of seq_len and emit 1 token
+    cache_dtype: str = "bfloat16"      # int8 enables quantized KV caches
+    microbatches: int = 1              # gradient accumulation (train only)
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+ARCH_NAMES = [
+    "gemma3_4b", "smollm_360m", "qwen3_32b", "deepseek_7b", "mamba2_780m",
+    "llava_next_mistral_7b", "zamba2_2p7b", "musicgen_large", "dbrx_132b",
+    "grok1_314b",
+]
+
+_ALIASES = {
+    "gemma3-4b": "gemma3_4b", "smollm-360m": "smollm_360m",
+    "qwen3-32b": "qwen3_32b", "deepseek-7b": "deepseek_7b",
+    "mamba2-780m": "mamba2_780m",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "zamba2-2.7b": "zamba2_2p7b", "musicgen-large": "musicgen_large",
+    "dbrx-132b": "dbrx_132b", "grok-1-314b": "grok1_314b",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = _ALIASES.get(name, name.replace("-", "_"))
+    mod = importlib.import_module(f"repro.legacy.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def reduced(cfg: ModelConfig, **over) -> ModelConfig:
+    """A smoke-test-sized config of the same family (tests/CPU)."""
+    kw = dict(
+        num_layers=min(cfg.num_layers, 4 if cfg.shared_attn_every else 2),
+        d_model=128,
+        num_heads=min(cfg.num_heads, 4),
+        num_kv_heads=min(cfg.num_kv_heads, 2),
+        head_dim=32,
+        d_ff=256,
+        vocab=512,
+        num_experts=min(cfg.num_experts, 4),
+        top_k=min(cfg.top_k, 2),
+        ssm_state=min(cfg.ssm_state, 16),
+        ssm_head_dim=32 if cfg.ssm_state else cfg.ssm_head_dim,
+        ssm_chunk=16,
+        local_window=min(cfg.local_window, 16),
+        shared_attn_every=2 if cfg.shared_attn_every else 0,
+        frontend_dim=64 if cfg.frontend_dim else 0,
+        frontend_len=8 if cfg.frontend_len else 0,
+        dtype="float32",
+        remat=False,
+    )
+    kw.update(over)
+    return replace(cfg, **kw)
+
+
+# shapes that don't apply per DESIGN.md §Arch-applicability
+def skip_reason(arch: ModelConfig, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k":
+        subquadratic = (arch.family in ("ssm", "hybrid")
+                        or arch.local_window > 0)
+        if not subquadratic:
+            return ("skipped: pure full-attention arch; long_500k requires "
+                    "sub-quadratic attention (DESIGN.md §3)")
+    return None

@@ -1,0 +1,19 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained.
+
+[hf:databricks/dbrx-base; unverified]
+"""
+from repro.legacy.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=10752,
+    vocab=100352,
+    num_experts=16,
+    top_k=4,
+    opt_state_dtype="bfloat16",   # ≥100B: quantized optimizer state
+)

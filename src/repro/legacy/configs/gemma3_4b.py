@@ -1,0 +1,22 @@
+"""gemma3-4b [dense] — 5:1 local:global sliding-window attention, 128k ctx.
+
+[hf:google/gemma-3-1b-pt; unverified]
+"""
+from repro.legacy.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    family="dense",
+    num_layers=34,
+    d_model=2560,
+    num_heads=8,
+    num_kv_heads=4,
+    d_ff=10240,
+    vocab=262144,
+    qk_norm=True,
+    local_window=1024,
+    local_ratio=5,            # 5 local layers per global layer
+    rope_theta=1e6,
+    tie_embeddings=True,
+    notes="head_dim = d_model/num_heads = 320 per assigned config",
+)

@@ -1,0 +1,22 @@
+"""llava-next-mistral-7b [vlm] — Mistral-7B backbone, anyres tiling.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+The vision tower is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings [B, frontend_len, frontend_dim] which a linear
+projector maps into the token stream.
+"""
+from repro.legacy.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab=32000,
+    frontend="vision",
+    frontend_dim=1024,
+    frontend_len=2880,       # anyres: 5 tiles × 576 patches
+)

@@ -1,0 +1,21 @@
+"""mamba2-780m [ssm] — SSD (state-space duality), attention-free.
+
+[arXiv:2405.21060; unverified]  vocab padded 50280 → 50432 (×256 alignment).
+"""
+from repro.legacy.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    num_layers=48,
+    d_model=1536,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab=50432,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    notes="attn-free; vocab 50280 padded to 50432 for sharding alignment",
+)

@@ -1,0 +1,21 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens.
+
+[arXiv:2306.05284; hf]
+The EnCodec frontend is a STUB per the assignment: input_specs() provides
+token ids for num_codebooks parallel codebooks (delay pattern upstream);
+embeddings are summed and there is one LM head per codebook.
+"""
+from repro.legacy.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab=2048,
+    frontend="audio",
+    num_codebooks=4,
+)

@@ -1,0 +1,21 @@
+"""zamba2-2.7b [hybrid] — Mamba2 backbone + shared attention blocks.
+
+[arXiv:2411.15242; hf]
+"""
+from repro.legacy.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=10240,
+    vocab=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    shared_attn_every=6,     # one weight-shared attn+mlp block per 6 layers
+)

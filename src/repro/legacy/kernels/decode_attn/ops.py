@@ -1,0 +1,47 @@
+"""Flash-decode wrapper: single-device or sequence-sharded combine.
+
+``sharded_decode_attention`` is the §Perf serving optimization: the KV
+cache's sequence dim is sharded over the ``model`` axis, every device runs
+the flash-decode kernel on its local slice, and the partials are combined
+with one psum of [B, H, hd+2] — versus all-gathering GBs of cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.legacy.kernels.decode_attn.decode_attn import decode_attention_pallas
+from repro.legacy.kernels.decode_attn import ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def decode_attention(q, k, v, valid_len, impl: str = "pallas_interpret"):
+    """Full (unsharded) flash-decode.  q: [B, H, hd] → [B, H, hd]."""
+    if impl == "ref":
+        parts = ref.decode_partial_ref(q, k, v, valid_len)
+    else:
+        parts = decode_attention_pallas(
+            q, k, v, valid_len, interpret=(impl == "pallas_interpret"))
+    return ref.combine_partials([parts]).astype(q.dtype)
+
+
+def sharded_decode_attention(q, k_local, v_local, valid_local, axis_name,
+                             impl: str = "ref"):
+    """Inside shard_map: per-shard partials + exact cross-shard combine.
+
+    k_local/v_local: this device's sequence slice; valid_local: #valid keys
+    in the local slice (0 if the write frontier hasn't reached it).
+    """
+    if impl == "ref":
+        acc, m, l = ref.decode_partial_ref(q, k_local, v_local, valid_local)
+    else:
+        acc, m, l = decode_attention_pallas(
+            q, k_local, v_local, valid_local,
+            interpret=(impl == "pallas_interpret"))
+    m_glob = jax.lax.pmax(m, axis_name)
+    w = jnp.exp(m - m_glob)
+    acc = jax.lax.psum(acc * w[..., None], axis_name)
+    l = jax.lax.psum(l * w, axis_name)
+    return (acc / jnp.maximum(l, 1e-20)[..., None]).astype(q.dtype)

@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, from the *compiled* artifact:
+  * memory_analysis()  — per-device bytes (proves the cell fits);
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline compute and
+                         memory terms;
+  * a collective-bytes breakdown parsed from the optimized HLO text
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), split ICI vs DCN (replica groups that span the
+    pod-axis stride are DCN), for the roofline collective term.
+
+Usage:
+  python -m repro.legacy.launch.dryrun --arch qwen3-32b --shape train_4k \
+      [--multi-pod] [--out results.json]
+  python -m repro.legacy.launch.dryrun --all  --out-dir results/
+"""
+import argparse
+import json
+import math
+import re
+import sys
+import time
+
+import numpy as np
+
+# Per-(arch, shape) gradient-accumulation factors: activation memory must
+# fit v5e HBM (16 GiB); chosen from memory_analysis iterations.
+MICROBATCHES = {
+    ("grok-1-314b", "train_4k"): 8,
+    ("dbrx-132b", "train_4k"): 8,
+    ("qwen3-32b", "train_4k"): 8,
+    ("deepseek-7b", "train_4k"): 2,
+    ("llava-next-mistral-7b", "train_4k"): 2,
+    ("gemma3-4b", "train_4k"): 2,
+    ("musicgen-large", "train_4k"): 2,
+    ("zamba2-2.7b", "train_4k"): 2,
+    ("mamba2-780m", "train_4k"): 2,
+}
+
+# decode cells whose bf16 cache exceeds HBM use int8 KV (DESIGN.md §4)
+INT8_CACHE = {
+    ("qwen3-32b", "decode_32k"),
+    ("deepseek-7b", "decode_32k"),
+    ("llava-next-mistral-7b", "decode_32k"),
+    ("dbrx-132b", "decode_32k"),
+    ("grok-1-314b", "decode_32k"),
+    ("musicgen-large", "decode_32k"),
+    ("zamba2-2.7b", "decode_32k"),
+}
+
+
+def collective_bytes_from_hlo(hlo_text: str, pod_stride: int = 256) -> dict:
+    """Sum operand bytes of every collective op in optimized HLO.
+
+    Returns totals per op kind and an ICI/DCN split: a collective whose
+    replica groups contain members ``pod_stride`` apart crosses pods (DCN).
+    """
+    dt_bytes = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+    kinds = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+    totals = {k: 0 for k in kinds}
+    dcn = {k: 0 for k in kinds}
+    count = {k: 0 for k in kinds}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+ = .* (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(-start)?\(", ls)
+        if not m:
+            continue
+        kind = m.group(1)
+        # operand list = text inside the outermost call parens
+        try:
+            args = ls.split("(", 1)[1].rsplit(")", 1)[0]
+        except IndexError:
+            continue
+        op_bytes = 0
+        for dt, dims in shape_re.findall(args):
+            if dt not in dt_bytes:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            op_bytes += n * dt_bytes[dt]
+        totals[kind] += op_bytes
+        count[kind] += 1
+        # DCN detection: source-target pairs / replica groups spanning pods
+        crosses = False
+        rg = re.search(r"replica_groups=\{(.*?)\}\}?", ls)
+        if rg:
+            first = rg.group(1).split("}")[0].replace("{", "")
+            ids = [int(t) for t in first.split(",") if t.strip().isdigit()]
+            if ids and (max(ids) - min(ids)) >= pod_stride:
+                crosses = True
+        st = re.search(r"source_target_pairs=\{(.*?)\}\}", ls)
+        if st:
+            pairs = re.findall(r"\{(\d+),(\d+)\}", st.group(1))
+            if any(abs(int(a) - int(b)) >= pod_stride for a, b in pairs):
+                crosses = True
+        if crosses:
+            dcn[kind] += op_bytes
+    return {"per_kind": totals, "dcn_per_kind": dcn, "counts": count,
+            "total": sum(totals.values()), "dcn_total": sum(dcn.values())}
+
+
+def build_step(arch: str, shape_name: str, mesh, microbatches=None,
+               cache_dtype=None, seq_shard_cache=False, block_q=1024,
+               block_k=1024, remat=None, seq_parallel=False,
+               parallelism=None, capacity_factor=None):
+    """Returns (fn, abstract_args, in_shardings, out_shardings, note)."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.legacy.configs.base import get_config, get_shape, skip_reason
+    from repro.legacy.launch import input_specs as IS
+    from repro.legacy.launch.train import make_train_step
+    from repro.legacy.launch.serve import make_serve_steps
+    from repro.legacy.models import model as M
+    from repro.legacy.optim import adamw
+    from repro.parallel import sharding
+
+    cfg = get_config(arch)
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if seq_parallel:
+        cfg = dataclasses.replace(cfg, seq_parallel=True)
+    if parallelism:
+        cfg = dataclasses.replace(cfg, parallelism=parallelism)
+    if capacity_factor:
+        cfg = dataclasses.replace(cfg, capacity_factor=capacity_factor)
+    shape = get_shape(shape_name)
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return None, None, None, None, reason
+
+    mb = microbatches or MICROBATCHES.get((cfg.name, shape_name), 1)
+    cd = cache_dtype or (
+        "int8" if (cfg.name, shape_name) in INT8_CACHE else "bfloat16")
+    shape = dataclasses.replace(shape, microbatches=mb, cache_dtype=cd)
+
+    p_sds = IS.abstract_params(cfg)
+    p_shard = sharding.param_shardings(p_sds, mesh)
+
+    if shape.kind == "train":
+        state_dtype = (jnp.bfloat16 if cfg.opt_state_dtype == "bfloat16"
+                       else jnp.float32)
+        step, in_sh, out_sh = make_train_step(cfg, mesh, microbatches=mb)
+        o_sds = jax.eval_shape(lambda p: adamw.init(p, state_dtype), p_sds)
+        e_sds = jax.tree.map(
+            lambda _: jax.ShapeDtypeStruct((), jnp.float32), p_sds)
+        e_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), e_sds)
+        in_sh = (in_sh[0], in_sh[1], e_sh, in_sh[3])
+        out_sh = (out_sh[0], out_sh[1], e_sh, out_sh[3])
+        batch = IS.batch_specs(cfg, shape)
+        args = (p_sds, o_sds, e_sds, batch)
+        note = f"microbatches={mb};policy={cfg.parallelism}" + (
+            ";seq_parallel" if cfg.seq_parallel else "")
+        fn = step
+        return fn, args, in_sh, out_sh, note
+
+    # serving
+    def ns(ndim_or_sds, shape=None):
+        sds_shape = shape if shape is not None else ndim_or_sds.shape
+        spec = sharding.data_spec(mesh, len(sds_shape))
+        return NamedSharding(mesh, sharding.sanitize(spec, sds_shape, mesh))
+
+    prefill_step, decode_step, sh = make_serve_steps(
+        cfg, mesh, seq_shard=seq_shard_cache)
+    caches = IS.abstract_caches(
+        cfg, dataclasses.replace(shape, cache_dtype=cd))
+    c_shard = sh["cache_fn"](caches)
+    b = shape.global_batch
+    if shape.kind == "prefill":
+        batch = IS.batch_specs(cfg, shape)
+        b_sh = jax.tree.map(ns, batch)
+        args = (p_sds, batch, caches)
+        in_sh = (p_shard, b_sh, c_shard)
+        logit_shape = ((b, 1, cfg.vocab) if not cfg.num_codebooks
+                       else (b, cfg.num_codebooks, 1, cfg.vocab))
+        out_sh = (ns(None, logit_shape), c_shard)
+        return prefill_step, args, in_sh, out_sh, f"cache={cd}"
+
+    # decode
+    toks = IS.decode_token_specs(cfg, shape)["tokens"]
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (p_sds, toks, caches, pos)
+    in_sh = (p_shard, ns(toks), c_shard, NamedSharding(mesh, P()))
+    logit_shape = ((b, 1, cfg.vocab) if not cfg.num_codebooks
+                   else (b, cfg.num_codebooks, 1, cfg.vocab))
+    out_sh = (ns(None, logit_shape), c_shard)
+    return decode_step, args, in_sh, out_sh, f"cache={cd}"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, **kw) -> dict:
+    import jax
+    from repro.launch.mesh import make_production_mesh
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = math.prod(mesh.devices.shape)
+    fn, args, in_sh, out_sh, note = build_step(arch, shape_name, mesh, **kw)
+    result = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "chips": n_chips, "note": note}
+    if fn is None:
+        result["skipped"] = note
+        return result
+
+    from repro.analysis import cost as AC
+
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        # trip-count-aware global cost from the jaxpr (XLA's cost_analysis
+        # counts while/scan bodies once — see analysis/cost.py)
+        jcost = AC.jaxpr_cost(fn, *args)
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = AC.hlo_collectives(hlo, pod_stride=256)
+
+    def g(obj, name):
+        try:
+            return int(getattr(obj, name))
+        except Exception:
+            return None
+
+    result.update({
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_global": jcost.flops,
+        "hbm_bytes_global": jcost.hbm_bytes,
+        "flops_detail": {k: v[0] for k, v in jcost.detail.items()},
+        "bytes_detail": {k: v[1] for k, v in jcost.detail.items()},
+        "xla_flops_raw": cost.get("flops", 0.0),
+        "xla_bytes_raw": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": g(mem, "argument_size_in_bytes"),
+            "output_bytes": g(mem, "output_size_in_bytes"),
+            "temp_bytes": g(mem, "temp_size_in_bytes"),
+            "alias_bytes": g(mem, "alias_size_in_bytes"),
+            "generated_code_bytes": g(mem, "generated_code_size_in_bytes"),
+        },
+        "collectives": coll,
+        "hlo_bytes": len(hlo),
+    })
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out")
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--microbatches", type=int)
+    ap.add_argument("--cache-dtype")
+    ap.add_argument("--seq-shard-cache", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--parallelism", choices=["tp", "fsdp"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--capacity-factor", type=float)
+    ap.add_argument("--block-q", type=int, default=1024)
+    ap.add_argument("--block-k", type=int, default=1024)
+    args = ap.parse_args()
+
+    kw = dict(microbatches=args.microbatches, cache_dtype=args.cache_dtype,
+              seq_shard_cache=args.seq_shard_cache,
+              seq_parallel=args.seq_parallel, parallelism=args.parallelism,
+              remat=(False if args.no_remat else None),
+              capacity_factor=args.capacity_factor,
+              block_q=args.block_q, block_k=args.block_k)
+
+    if args.all:
+        from repro.legacy.configs.base import ARCH_NAMES, SHAPES, get_config
+        os.makedirs(args.out_dir, exist_ok=True)
+        for an in ARCH_NAMES:
+            arch = get_config(an).name
+            for sn in SHAPES:
+                for mp in (False, True):
+                    tag = f"{an}_{sn}_{'multi' if mp else 'single'}"
+                    path = os.path.join(args.out_dir, tag + ".json")
+                    if os.path.exists(path):
+                        continue
+                    print(f"=== {tag}", flush=True)
+                    r = run_cell(arch, sn, mp, **kw)
+                    with open(path, "w") as f:
+                        json.dump(r, f, indent=1)
+        return
+
+    r = run_cell(args.arch, args.shape, args.multi_pod, **kw)
+    txt = json.dumps(r, indent=1)
+    print(txt)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(txt)
+    if "skipped" not in r:
+        print(f"\nOK: compiled {r['arch']}×{r['shape']} on {r['mesh']} "
+              f"({r['chips']} chips) flops={r['flops']:.3e} "
+              f"coll={r['collectives']['total']:.3e}B")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run contract).
+
+``input_specs(cfg, shape)`` returns the exact abstract inputs a
+train/prefill/decode step consumes for an (architecture × input-shape)
+cell — weak-type-correct, shardable, no device allocation.  The modality
+frontends are stubs per the assignment: the vision/audio entries are
+precomputed patch/frame embeddings or codebook token ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.legacy.configs.base import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract train/prefill batch."""
+    b = shape.global_batch
+    s = shape.seq_len
+    if cfg.num_codebooks:
+        return {"tokens": SDS((b, cfg.num_codebooks, s), jnp.int32)}
+    if cfg.frontend == "vision":
+        return {
+            "tokens": SDS((b, s - cfg.frontend_len), jnp.int32),
+            "patches": SDS((b, cfg.frontend_len, cfg.frontend_dim),
+                           jnp.float32),
+        }
+    return {"tokens": SDS((b, s), jnp.int32)}
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    if cfg.num_codebooks:
+        return {"tokens": SDS((b, cfg.num_codebooks, 1), jnp.int32)}
+    return {"tokens": SDS((b, 1), jnp.int32)}
+
+
+def abstract_params(cfg: ModelConfig):
+    from repro.legacy.models import model as M
+    return jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.ShapeDtypeStruct((2,),
+                                                              jnp.uint32))
+
+
+def abstract_caches(cfg: ModelConfig, shape: ShapeConfig):
+    from repro.legacy.models import model as M
+    dtype = jnp.int8 if shape.cache_dtype == "int8" else jnp.bfloat16
+    return M.init_caches(cfg, shape.global_batch, shape.seq_len,
+                         cache_dtype=dtype, abstract=True)

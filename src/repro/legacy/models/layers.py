@@ -1,0 +1,394 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (full and
+sliding-window, blockwise-online-softmax), SwiGLU MLP, capacity-based MoE.
+
+Pure functions over dict pytrees of parameters.  Weights carry *logical*
+sharding via parallel/sharding.py rules keyed on parameter path names.
+Attention uses a blockwise (flash-style) online-softmax implementation in
+pure JAX so 32k-token prefill never materializes an S×S score matrix; the
+Pallas TPU kernel in kernels/flash_attn is numerically equivalent (its
+ref.py delegates here) and is selected with ``attn_impl="pallas"``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# initialization helpers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_attention(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h * hd), dtype),
+        "wk": _dense_init(ks[1], (d, kv * hd), dtype),
+        "wv": _dense_init(ks[2], (d, kv * hd), dtype),
+        "wo": _dense_init(ks[3], (h * hd, d), dtype, fan_in=h * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def init_mlp(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(ks[0], (d, f), dtype),
+        "w_up": _dense_init(ks[1], (d, f), dtype),
+        "w_down": _dense_init(ks[2], (f, d), dtype, fan_in=f),
+    }
+
+
+def init_moe(key, cfg, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": _dense_init(ks[1], (e, d, f), dtype),
+        "w_up": _dense_init(ks[2], (e, d, f), dtype),
+        "w_down": _dense_init(ks[3], (e, f, d), dtype, fan_in=f),
+    }
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """Rotary embedding. x: [B, S, H, hd]; positions: [B, S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq    # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise (flash-style) causal attention — pure JAX
+# ---------------------------------------------------------------------------
+
+
+def _dequant(x, scale, out_dtype):
+    """Per-row int8 → float dequantization (no-op for float inputs)."""
+    if scale is None:
+        return x.astype(out_dtype) if x.dtype != out_dtype else x
+    return (x.astype(jnp.float32) * scale[..., None]).astype(out_dtype)
+
+
+def _block_attn(q, k, v, q_pos, k_pos, scale, window):
+    """One (q-block, k-block) online-softmax partial.
+
+    q: [B, G, R, Sq, hd] (G = kv heads, R = q heads per kv head);
+    k/v: [B, G, Sk, hd].  ``window`` is a *static* Python int (0 = full).
+    Returns (out_unnorm, m, l).
+    """
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask = mask & (k_pos[None, :] > (q_pos[:, None] - window))
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)                                   # [B,G,R,Sq]
+    safe_m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - safe_m[..., None])
+    p = jnp.where(jnp.isfinite(m)[..., None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out, jnp.where(jnp.isfinite(m), m, -jnp.inf), l
+
+
+def causal_attention(q, k, v, q_positions, k_positions, window=0,
+                     block_q=1024, block_k=1024, k_scale=None, v_scale=None,
+                     q_offset_static=True):
+    """Causal (optionally sliding-window) attention, O(block²) memory.
+
+    q: [B, Sq, H, hd]; k, v: [B, Sk, KV, hd] (GQA: KV divides H); k/v may be
+    int8 with per-(b, s, kv) ``*_scale`` — dequantized one k-block at a time
+    inside the scan, so a quantized KV cache is never materialized in float.
+
+    ``window`` is STATIC (Python int; 0 = full causal).  When
+    ``q_offset_static`` (prefill/train: q and k positions both start at 0),
+    each q-block only visits the k-blocks inside its causal/window range —
+    sliding-window layers (gemma3 local) pay O(S·window), not O(S²).
+    Returns [B, Sq, H, hd] in q.dtype.
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    cdtype = jnp.bfloat16 if q.dtype == jnp.bfloat16 else jnp.float32
+
+    qt = jnp.transpose(q, (0, 2, 1, 3)).reshape(b, kvh, rep, sq, hd)
+    kt = jnp.transpose(k, (0, 2, 1, 3))                       # [B,KV,Sk,hd]
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    ks = None if k_scale is None else jnp.transpose(k_scale, (0, 2, 1))
+    vs = None if v_scale is None else jnp.transpose(v_scale, (0, 2, 1))
+
+    sk = kt.shape[2]
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    nq, nk = sq // bq, sk // bk
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+
+    qb = qt.reshape(b, kvh, rep, nq, bq, hd)
+    kb = jnp.moveaxis(kt.reshape(b, kvh, nk, bk, hd), 2, 0)   # [nk,B,KV,bk,hd]
+    vb = jnp.moveaxis(vt.reshape(b, kvh, nk, bk, hd), 2, 0)
+    ksb = None if ks is None else jnp.moveaxis(
+        ks.reshape(b, kvh, nk, bk), 2, 0)
+    vsb = None if vs is None else jnp.moveaxis(
+        vs.reshape(b, kvh, nk, bk), 2, 0)
+    kp = k_positions.reshape(nk, bk)
+    qp = q_positions.reshape(nq, bq)
+
+    quant = ksb is not None
+
+    def run_qblock(qi, qpos, lo, hi):
+        """Online softmax of q-block ``qi`` over k-blocks [lo, hi)."""
+        def step(carry, inputs):
+            acc, m, l = carry
+            if quant:
+                ki, vi, ksi, vsi, kpos = inputs
+                kf = _dequant(ki, ksi, cdtype)
+                vf = _dequant(vi, vsi, cdtype)
+            else:
+                ki, vi, kpos = inputs
+                kf, vf = ki.astype(cdtype), vi.astype(cdtype)
+            o, mb, lb = _block_attn(qi, kf, vf, qpos, kpos, scale, window)
+            m_new = jnp.maximum(m, mb)
+            c1 = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+            c2 = jnp.where(jnp.isfinite(mb), jnp.exp(mb - m_new), 0.0)
+            acc = acc * c1[..., None] + o * c2[..., None]
+            l = l * c1 + lb * c2
+            return (acc, m_new, l), None
+
+        init = (jnp.zeros((b, kvh, rep, bq, hd), jnp.float32),
+                jnp.full((b, kvh, rep, bq), -jnp.inf),
+                jnp.zeros((b, kvh, rep, bq)))
+        xs = (kb[lo:hi], vb[lo:hi]) + (
+            (ksb[lo:hi], vsb[lo:hi]) if quant else ()) + (kp[lo:hi],)
+        (acc, m, l), _ = jax.lax.scan(step, init, xs)
+        return acc / jnp.maximum(l, 1e-20)[..., None]
+
+    outs = []
+    for i in range(nq):
+        if q_offset_static and sq == sk:
+            # aligned prefill/train: static causal (+window) k-block range
+            hi = i * bq // bk + (bq + bk - 1) // bk
+            lo = max(0, (i * bq - window) // bk) if window else 0
+        else:
+            lo, hi = 0, nk
+        outs.append(run_qblock(qb[:, :, :, i], qp[i], lo, min(hi, nk)))
+    out = jnp.stack(outs, axis=3)                   # [B,KV,R,nq,bq,hd]
+    out = out.reshape(b, h, sq, hd)
+    return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention layer (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+
+def attention_layer(p, x, cfg, positions, *, window=0, rope_theta=None,
+                    cache=None, cache_pos=None, block_q=1024, block_k=1024):
+    """Full attention layer.  x: [B, S, D].
+
+    cache: optional dict {"k": [B, S_max, KV, hd], "v": ..., plus int8
+    scales} for decode; cache_pos is the write offset (int scalar).
+    Returns (out [B, S, D], new_cache).
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, kv, hd)
+    v = (x @ p["wv"]).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    pos2d = positions[None, :].astype(jnp.int32) + jnp.zeros(
+        (b, 1), jnp.int32)
+    q = rope(q, pos2d, theta)
+    k = rope(k, pos2d, theta)
+
+    if cache is None:
+        out = causal_attention(q, k, v, positions, positions, window=window,
+                               block_q=block_q, block_k=block_k)
+        new_cache = None
+    elif s > 1:
+        # prefill: attend over the *fresh* k/v (q and k aligned at 0 →
+        # static causal/window block ranges, no cache round-trip), then
+        # write the cache for subsequent decode.
+        from repro.legacy.models import kvcache
+        out = causal_attention(q, k, v, positions, positions, window=window,
+                               block_q=block_q, block_k=block_k)
+        new_cache = kvcache.update(cache, k, v, cache_pos)
+        return out.reshape(b, s, h * hd) @ p["wo"], new_cache
+    else:
+        from repro.legacy.models import kvcache
+        cache = kvcache.update(cache, k, v, cache_pos)
+        kq, vq, ks, vs = kvcache.read(cache)
+        s_max = kq.shape[1]
+        if "pos" in cache:
+            # ring cache: every slot carries its absolute position; the
+            # causal+window mask keys off positions, so no rotation/slice
+            k_positions = cache["pos"]
+        elif window and window < s_max:
+            # linear cache + sliding window: slice a static-size span
+            # ending at the newest token — decode reads O(window)
+            span = min(s_max, ((window + s) + block_k - 1) // block_k
+                       * block_k)
+            start = jnp.clip(cache_pos + s - span, 0, s_max - span)
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, start, span, 1)
+            kq, vq = sl(kq), sl(vq)
+            ks = None if ks is None else sl(ks)
+            vs = None if vs is None else sl(vs)
+            k_positions = start + jnp.arange(span)
+        else:
+            k_positions = jnp.arange(s_max)
+        out = causal_attention(q, kq, vq, positions, k_positions,
+                               window=window, block_q=block_q,
+                               block_k=block_k, k_scale=ks, v_scale=vs,
+                               q_offset_static=False)
+        new_cache = cache
+    out = out.reshape(b, s, h * hd)
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_layer(p, x):
+    g = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    return (g * (x @ p["w_up"])) @ p["w_down"]
+
+
+def _moe_shard(tokens, router, w_gate, w_up, w_down, cfg, cap,
+               tp_axis=None):
+    """MoE forward for one data shard's tokens.
+
+    tokens: [n, d] (local).  w_*: [E, d, f_local] — the f dimension may be a
+    tensor-parallel slice; if so ``tp_axis`` names the mesh axis to psum
+    over.  Dispatch (router, top-k, capacity ranking, scatter) is entirely
+    local, so MoE adds no collective beyond the TP reduction.
+    """
+    n, d = tokens.shape
+    e, k = cfg.num_experts, cfg.top_k
+
+    logits = tokens.astype(jnp.float32) @ router               # [n, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(probs, k)                       # [n, k]
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    # rank of each (token, slot) among all assignments to its expert
+    onehot = jax.nn.one_hot(tope, e, dtype=jnp.int32)          # [n, k, E]
+    flat_oh = onehot.reshape(n * k, e)
+    rank = jnp.cumsum(flat_oh, axis=0) - flat_oh
+    rank = jnp.sum(rank * flat_oh, axis=-1)                    # [n*k]
+    expert = tope.reshape(n * k)
+    keep = rank < cap
+    slot = jnp.where(keep, expert * cap + rank, e * cap)       # trash row
+
+    buf = jnp.zeros((e * cap + 1, d), tokens.dtype)
+    buf = buf.at[slot].add(jnp.repeat(tokens, k, axis=0))
+    buf = buf[:-1].reshape(e, cap, d)
+
+    g = jax.nn.silu(jnp.einsum(
+        "ecd,edf->ecf", buf, w_gate,
+        preferred_element_type=jnp.float32)).astype(tokens.dtype)
+    up = jnp.einsum("ecd,edf->ecf", buf, w_up)
+    down = jnp.einsum("ecf,efd->ecd", g * up, w_down)          # [E, cap, d]
+
+    flat = down.reshape(e * cap, d)
+    gathered = jnp.where(keep[:, None],
+                         flat[jnp.minimum(slot, e * cap - 1)], 0.0)
+    w = topw.reshape(n * k, 1).astype(tokens.dtype)
+    out = jnp.sum((gathered * w).reshape(n, k, d), axis=1)     # [n, d]
+    if tp_axis is not None:
+        # combine before reducing: [n, d] is k·cf× smaller than [E, cap, d]
+        out = jax.lax.psum(out, tp_axis)
+
+    # auxiliary load-balancing loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(tope[:, 0], e), axis=0)
+    aux = e * jnp.sum(density * jnp.mean(probs, axis=0))
+    return out, aux
+
+
+def moe_layer(p, x, cfg, mesh=None, batch_axes=("pod", "data"),
+              tp_axis="model", dropless=False):
+    """Capacity-based top-k MoE.
+
+    On a mesh: tokens stay sharded over the batch axes, every device
+    dispatches its own tokens locally, expert FFNs are tensor-parallel over
+    ``tp_axis`` (experts replicated, f sliced) and combined with one psum —
+    the same collective profile as a dense TP FFN.  The all-to-all
+    expert-parallel variant lives in parallel/expert_parallel.py (§Perf).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+
+    def capacity(n):
+        # decode (dropless): every token keeps all top-k choices even if
+        # they collide on one expert — serving must not drop tokens
+        if dropless:
+            return n
+        return max(int(n * k / e * cfg.capacity_factor), 1)
+
+    if mesh is None:
+        n = b * s
+        out, aux = _moe_shard(x.reshape(n, d), p["router"], p["w_gate"],
+                              p["w_up"], p["w_down"], cfg, capacity(n))
+        return out.reshape(b, s, d), aux
+
+    from repro.parallel.sharding import shard_map
+    from jax.sharding import PartitionSpec as P
+    axes = tuple(a for a in batch_axes if a in mesh.shape)
+    n_batch = 1
+    for a in axes:
+        n_batch *= mesh.shape[a]
+    n_local = (b // n_batch) * s
+    cap = capacity(n_local)
+
+    def local(xl, router, wg, wu, wd):
+        nl = xl.shape[0] * xl.shape[1]
+        out, aux = _moe_shard(xl.reshape(nl, d), router, wg, wu, wd,
+                              cfg, cap, tp_axis=tp_axis)
+        aux = jax.lax.pmean(aux, axes)
+        return out.reshape(xl.shape), aux
+
+    out, aux = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axes, None, None), P(None, None), P(None, None, tp_axis),
+                  P(None, None, tp_axis), P(None, tp_axis, None)),
+        out_specs=(P(axes, None, None), P()),
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return out, aux

@@ -1,0 +1,542 @@
+"""Model assembly: config → params, forward, loss, prefill, decode.
+
+One generic decoder covers all ten assigned architectures:
+
+  * dense / MoE transformers scan over stacked per-layer params, with a
+    per-layer window array expressing gemma3's 5:1 local:global pattern
+    (window is a *traced* value, so one scan body serves both layer kinds);
+  * Mamba2 scans SSD blocks; Zamba2 scans blocks of (6 Mamba2 layers + one
+    weight-shared attention/MLP block);
+  * VLM/audio frontends are stubs per the assignment: precomputed patch
+    embeddings (projected) / per-codebook token ids (summed embeddings).
+
+Params are dict pytrees, stacked on a leading layer dim for ``lax.scan``;
+sharding comes from parallel/sharding.py name rules.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.legacy.models import layers, ssm
+from repro.parallel import sharding
+
+GLOBAL_WINDOW = 1 << 30     # "window" meaning full causal attention
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"ln1": jnp.ones((cfg.d_model,), dtype),
+         "ln2": jnp.ones((cfg.d_model,), dtype),
+         "attn": layers.init_attention(ks[0], cfg, dtype)}
+    if cfg.num_experts:
+        p["moe"] = layers.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = layers.init_mlp(ks[1], cfg, dtype)
+    return p
+
+
+def _stack(key, n, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg, key) -> dict:
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+    d = cfg.d_model
+
+    if cfg.num_codebooks:       # musicgen: per-codebook embeddings/heads
+        params["codebook_embed"] = (jax.random.normal(
+            ks[0], (cfg.num_codebooks, cfg.vocab, d), jnp.float32)
+            * 0.02).astype(dtype)
+        params["codebook_head"] = (jax.random.normal(
+            ks[1], (cfg.num_codebooks, d, cfg.vocab), jnp.float32)
+            / math.sqrt(d)).astype(dtype)
+    else:
+        params["embed"] = (jax.random.normal(
+            ks[0], (cfg.vocab, d), jnp.float32) * 0.02).astype(dtype)
+        if not cfg.tie_embeddings:
+            params["head"] = (jax.random.normal(
+                ks[1], (d, cfg.vocab), jnp.float32)
+                / math.sqrt(d)).astype(dtype)
+
+    if cfg.frontend == "vision":
+        params["vision_proj"] = (jax.random.normal(
+            ks[2], (cfg.frontend_dim, d), jnp.float32)
+            / math.sqrt(cfg.frontend_dim)).astype(dtype)
+
+    params["final_norm"] = jnp.ones((d,), dtype)
+
+    if cfg.family == "ssm":
+        params["layers"] = _stack(
+            ks[3], cfg.num_layers, lambda k: ssm.init_mamba(k, cfg, dtype))
+    elif cfg.family == "hybrid":
+        nb = cfg.num_layers // cfg.shared_attn_every
+        params["layers"] = _stack(
+            ks[3], nb, lambda k: jax.vmap(
+                lambda kk: ssm.init_mamba(kk, cfg, dtype))(
+                    jax.random.split(k, cfg.shared_attn_every)))
+        params["shared"] = _init_block(ks[4], cfg, dtype)
+    else:
+        params["layers"] = _stack(
+            ks[3], cfg.num_layers, lambda k: _init_block(k, cfg, dtype))
+    return params
+
+
+def layer_windows(cfg) -> jnp.ndarray:
+    """Per-layer attention window (traced into the scan)."""
+    if not cfg.local_ratio:
+        return jnp.full((cfg.num_layers,), GLOBAL_WINDOW, jnp.int32)
+    w = [cfg.local_window if cfg.layer_is_local(i) else GLOBAL_WINDOW
+         for i in range(cfg.num_layers)]
+    return jnp.asarray(w, jnp.int32)
+
+
+def layer_thetas(cfg) -> jnp.ndarray:
+    if not cfg.local_ratio:
+        return jnp.full((cfg.num_layers,), cfg.rope_theta, jnp.float32)
+    t = [1e4 if cfg.layer_is_local(i) else cfg.rope_theta
+         for i in range(cfg.num_layers)]
+    return jnp.asarray(t, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _policy(cfg):
+    return getattr(cfg, "parallelism", "tp")
+
+
+def _act_spec(cfg, mesh, x):
+    """Residual-stream sharding between blocks.  With sequence parallelism
+    the seq dim shards over ``model``: XLA then lowers each block's TP
+    all-reduce into reduce-scatter(+later all-gather) — half the bytes on
+    the wire (Korthikanti et al.), a §Perf beyond-paper optimization."""
+    seq_axis = ("model" if (cfg.seq_parallel and x.shape[1] > 1
+                            and _policy(cfg) == "tp") else None)
+    return sharding.act_spec(mesh, seq_axis=seq_axis, policy=_policy(cfg))
+
+
+def _attn_block(p, x, cfg, positions, window, theta, mesh, cache, cache_pos,
+                block_q, block_k):
+    p = sharding.gather_for_compute(p, mesh, _policy(cfg))  # FSDP: gather
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)  # activations
+    attn, cache = layers.attention_layer(
+        p["attn"], h, cfg, positions, window=window, rope_theta=theta,
+        cache=cache, cache_pos=cache_pos, block_q=block_q, block_k=block_k)
+    x = x + attn
+    x = sharding.constrain(x, mesh, _act_spec(cfg, mesh, x)) if mesh else x
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.num_experts:
+        ffn, aux = layers.moe_layer(p["moe"], h, cfg, mesh=mesh,
+                                    dropless=(x.shape[1] == 1))
+    else:
+        ffn, aux = layers.mlp_layer(p["mlp"], h), jnp.zeros((), jnp.float32)
+    x = x + ffn
+    if mesh:
+        x = sharding.constrain(x, mesh, _act_spec(cfg, mesh, x))
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# decoder trunk (scan over layers / blocks)
+# ---------------------------------------------------------------------------
+
+
+def decoder(params, cfg, x, positions, mesh=None, caches=None,
+            cache_pos=None, block_q=1024, block_k=1024):
+    """x: [B, S, D] → ([B, S, D], new_caches, aux_loss)."""
+    remat = cfg.remat
+
+    if cfg.family == "ssm":
+        def body(carry, inp):
+            h = carry
+            lp, cache = inp
+            lp = sharding.gather_for_compute(lp, mesh, _policy(cfg))
+            out, new_cache = ssm.mamba_layer(
+                lp, layers.rms_norm(h, lp["norm_in"], cfg.norm_eps),
+                cfg, cache=cache)
+            h = h + out
+            if mesh:
+                h = sharding.constrain(h, mesh, _act_spec(cfg, mesh, h))
+            return h, new_cache
+        if remat:
+            body = jax.checkpoint(body)
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+        return x, new_caches, jnp.zeros((), jnp.float32)
+
+    if cfg.family == "hybrid":
+        shared = params["shared"]
+        k_blocks = cfg.shared_attn_every
+
+        def body(carry, inp):
+            h = carry
+            lp, cache = inp       # lp: [k_blocks, ...] mamba params
+            ssm_cache, attn_cache = cache if cache is not None else \
+                (None, None)
+            new_ssm = []
+            for i in range(k_blocks):
+                sub = sharding.gather_for_compute(
+                    jax.tree.map(lambda a: a[i], lp), mesh, _policy(cfg))
+                sc = None if ssm_cache is None else \
+                    jax.tree.map(lambda a: a[i], ssm_cache)
+                out, nc = ssm.mamba_layer(
+                    sub, layers.rms_norm(h, sub["norm_in"], cfg.norm_eps),
+                    cfg, cache=sc)
+                h = h + out
+                new_ssm.append(nc)
+            h2, attn_cache, aux = _attn_block(
+                shared, h, cfg, positions, GLOBAL_WINDOW, cfg.rope_theta,
+                mesh, attn_cache, cache_pos, block_q, block_k)
+            new_ssm_stack = (None if new_ssm[0] is None else
+                             jax.tree.map(lambda *a: jnp.stack(a), *new_ssm))
+            return h2, (new_ssm_stack, attn_cache)
+        if remat:
+            body = jax.checkpoint(body)
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+        return x, new_caches, jnp.zeros((), jnp.float32)
+
+    # dense / moe transformer.  gemma3-style local:global patterns scan over
+    # *blocks* of (ratio+1) layers so each sub-layer's window is STATIC and
+    # sliding-window layers skip out-of-range k-blocks entirely.
+    period = cfg.local_ratio + 1 if cfg.local_ratio else 1
+    nb, tail = cfg.num_layers // period, cfg.num_layers % period
+
+    def sub_window(i):
+        if not cfg.local_ratio:
+            return 0
+        return cfg.local_window if i < cfg.local_ratio else 0
+
+    def sub_theta(i):
+        if not cfg.local_ratio:
+            return cfg.rope_theta
+        return 1e4 if i < cfg.local_ratio else cfg.rope_theta
+
+    def make_body(width, base):
+        def body(carry, inp):
+            h, aux_acc = carry
+            lp, cache = inp
+            new_locals, new_global = [], None
+            for i in range(width):
+                sub = jax.tree.map(lambda a: a[i], lp) if width > 1 else \
+                    jax.tree.map(lambda a: a, lp)
+                if cache is None:
+                    ci = None
+                elif cfg.local_ratio and width > 1:
+                    ring_part, full_part = cache
+                    ci = (jax.tree.map(lambda a: a[i], ring_part)
+                          if i < cfg.local_ratio else full_part)
+                elif width > 1:
+                    ci = jax.tree.map(lambda a: a[i], cache)
+                else:
+                    ci = cache
+                h, cn, aux = _attn_block(
+                    sub, h, cfg, positions, sub_window(base + i),
+                    sub_theta(base + i), mesh, ci, cache_pos,
+                    block_q, block_k)
+                aux_acc = aux_acc + aux
+                if cfg.local_ratio and width > 1 and i == cfg.local_ratio:
+                    new_global = cn
+                else:
+                    new_locals.append(cn)
+            if cache is None:
+                stacked = None
+            elif cfg.local_ratio and width > 1:
+                stacked = (jax.tree.map(lambda *a: jnp.stack(a),
+                                        *new_locals), new_global)
+            elif width > 1:
+                stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_locals)
+            else:
+                stacked = new_locals[0]
+            return (h, aux_acc), stacked
+        return jax.checkpoint(body) if remat else body
+
+    stacked = params["layers"]
+
+    def split_params(tree_):
+        main = jax.tree.map(
+            lambda a: a[:nb * period].reshape(
+                (nb, period) + a.shape[1:]) if period > 1
+            else a[:nb * period], tree_)
+        rest = (jax.tree.map(lambda a: a[nb * period:], tree_)
+                if tail else None)
+        return main, rest
+
+    main_p, tail_p = split_params(stacked)
+    if caches is None:
+        main_c, tail_c = None, None
+    elif cfg.local_ratio:
+        main_c, tail_c = caches        # pre-structured by init_caches
+    else:
+        main_c = caches
+        tail_c = None
+        if tail:
+            main_c = jax.tree.map(lambda a: a[:nb * period], caches)
+            tail_c = jax.tree.map(lambda a: a[nb * period:], caches)
+        if period > 1:
+            main_c = jax.tree.map(
+                lambda a: a.reshape((nb, period) + a.shape[1:]), main_c)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, aux), main_caches = jax.lax.scan(
+        make_body(period, 0), (x, aux0), (main_p, main_c))
+    if tail:
+        (x, aux), tail_caches = jax.lax.scan(
+            make_body(1, 0), (x, aux), (tail_p, tail_c))
+    else:
+        tail_caches = None
+
+    if caches is None:
+        new_caches = None
+    elif cfg.local_ratio:
+        new_caches = (main_caches, tail_caches)
+    else:
+        flat_main = jax.tree.map(
+            lambda a: a.reshape((nb * period,) + a.shape[2:])
+            if period > 1 else a, main_caches)
+        if tail:
+            new_caches = jax.tree.map(
+                lambda a, t: jnp.concatenate([a, t], axis=0),
+                flat_main, tail_caches)
+        else:
+            new_caches = flat_main
+    return x, new_caches, aux / cfg.num_layers
+
+
+# ---------------------------------------------------------------------------
+# embedding / heads / loss
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg, batch, mesh=None):
+    """batch → (x [B, S, D], positions [S], label_weights or None)."""
+    from jax.sharding import PartitionSpec as P
+    dtype = _dtype(cfg)
+    if mesh is not None:
+        sub = {k: params[k] for k in
+               ("embed", "codebook_embed", "vision_proj") if k in params}
+        params = {**params,
+                  **sharding.gather_for_compute(sub, mesh, _policy(cfg))}
+    if cfg.num_codebooks:
+        toks = batch["tokens"]                       # [B, K, S]
+        x = jnp.zeros(toks.shape[:1] + toks.shape[2:] + (cfg.d_model,),
+                      dtype)
+        for i in range(cfg.num_codebooks):
+            x = x + jnp.take(params["codebook_embed"][i], toks[:, i],
+                             axis=0)
+        s = toks.shape[2]
+        return x, jnp.arange(s), None
+    if cfg.frontend == "vision" and "patches" in batch:
+        toks = batch["tokens"]                       # [B, S_text]
+        patches = batch["patches"].astype(dtype)     # [B, P, F_dim]
+        pe = patches @ params["vision_proj"]
+        te = jnp.take(params["embed"], toks, axis=0).astype(dtype)
+        x = jnp.concatenate([pe, te], axis=1)
+        s = x.shape[1]
+        w = jnp.concatenate(
+            [jnp.zeros(pe.shape[:2]), jnp.ones(te.shape[:2])],
+            axis=1)                                  # loss on text only
+        return x, jnp.arange(s), w
+    toks = batch["tokens"]
+    x = jnp.take(params["embed"], toks, axis=0).astype(dtype)
+    return x, jnp.arange(toks.shape[1]), None
+
+
+def lm_head(params, cfg, mesh=None):
+    from jax.sharding import PartitionSpec as P
+    tp = "model" if _policy(cfg) == "tp" else None
+    if cfg.num_codebooks:
+        h = params["codebook_head"]                  # [K, D, V]
+        return sharding.constrain(h, mesh, P(None, None, tp))
+    if cfg.tie_embeddings:
+        h = params["embed"].T                        # [D, V]
+    else:
+        h = params["head"]
+    return sharding.constrain(h, mesh, P(None, tp))
+
+
+def chunked_ce(x, head, labels, weights=None, chunk=512, mesh=None):
+    """Cross-entropy over sequence chunks — never materializes [B, S, V].
+
+    x: [B, S, D]; head: [D, V]; labels: [B, S] (next-token, already shifted).
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, d)
+    lc = labels.reshape(b, nc, chunk)
+    wc = (jnp.ones((b, s)) if weights is None else weights).reshape(
+        b, nc, chunk)
+
+    def step(acc, inp):
+        xi, li, wi = inp                              # [B, c, D], [B, c]
+        logits = (xi @ head).astype(jnp.float32)      # [B, c, V]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(li, logits.shape[-1], dtype=jnp.float32)
+        correct = jnp.sum(logits * onehot, axis=-1)
+        loss = jnp.sum((logz - correct) * wi)
+        return (acc[0] + loss, acc[1] + jnp.sum(wi)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.zeros(()), jnp.zeros(())),
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(lc, 1, 0),
+         jnp.moveaxis(wc, 1, 0)))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg, batch, mesh=None, block_q=1024, block_k=1024):
+    """Next-token LM loss for a train batch."""
+    x, positions, w = embed_inputs(params, cfg, batch, mesh)
+    if mesh:
+        x = sharding.constrain(x, mesh, sharding.act_spec(mesh))
+    x, _, aux = decoder(params, cfg, x, positions, mesh=mesh,
+                        block_q=block_q, block_k=block_k)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = lm_head(params, cfg, mesh)
+
+    if cfg.num_codebooks:
+        toks = batch["tokens"]                        # [B, K, S]
+        losses = []
+        for i in range(cfg.num_codebooks):
+            lbl = jnp.concatenate(
+                [toks[:, i, 1:], toks[:, i, :1]], axis=1)
+            losses.append(chunked_ce(x, head[i], lbl, mesh=mesh))
+        loss = jnp.mean(jnp.stack(losses))
+    else:
+        toks = batch["tokens"]
+        if cfg.frontend == "vision" and "patches" in batch:
+            # labels only on text positions; x includes patch prefix
+            p_len = batch["patches"].shape[1]
+            lbl = jnp.concatenate([toks[:, 1:], toks[:, :1]], axis=1)
+            pad = jnp.zeros((toks.shape[0], p_len), lbl.dtype)
+            labels = jnp.concatenate([pad, lbl], axis=1)
+            loss = chunked_ce(x, head, labels, weights=w, mesh=mesh)
+        else:
+            labels = jnp.concatenate([toks[:, 1:], toks[:, :1]], axis=1)
+            loss = chunked_ce(x, head, labels, mesh=mesh)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def ring_size(cfg, block_k: int = 1024) -> int:
+    """Slot count for sliding-window ring caches (window + one block)."""
+    return cfg.local_window + block_k
+
+
+def init_caches(cfg, batch, max_seq, cache_dtype=jnp.bfloat16,
+                abstract=False, block_k=1024):
+    """Stacked caches matching the decoder scan layout.
+
+    Sliding-window archs (gemma3) get *ring* caches of O(window) slots for
+    local layers and full caches only for global layers, structured as
+    ((ring [nb, ratio, ...], full [nb, ...]), tail_ring [tail, ...]) to
+    match the block-structured layer scan.
+    """
+    from repro.legacy.models import kvcache
+    hd, kv = cfg.resolved_head_dim, cfg.num_kv_heads
+
+    def build():
+        if cfg.family == "ssm":
+            one = ssm.init_cache(batch, cfg)
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (cfg.num_layers,) + a.shape), one)
+        if cfg.family == "hybrid":
+            nb = cfg.num_layers // cfg.shared_attn_every
+            s_one = ssm.init_cache(batch, cfg)
+            ssm_c = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None, None],
+                    (nb, cfg.shared_attn_every) + a.shape), s_one)
+            a_one = kvcache.init(batch, max_seq, kv, hd, cache_dtype)
+            attn_c = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (nb,) + a.shape), a_one)
+            return (ssm_c, attn_c)
+        if cfg.local_ratio:
+            period = cfg.local_ratio + 1
+            nb = cfg.num_layers // period
+            tail = cfg.num_layers % period
+            w = ring_size(cfg, block_k)
+            ring_one = kvcache.init(batch, w, kv, hd, cache_dtype,
+                                    ring=True)
+            ring_c = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None, None], (nb, cfg.local_ratio) + a.shape),
+                ring_one)
+            full_one = kvcache.init(batch, max_seq, kv, hd, cache_dtype)
+            full_c = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (nb,) + a.shape),
+                full_one)
+            tail_c = (jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (tail,) + a.shape),
+                ring_one) if tail else None)
+            return ((ring_c, full_c), tail_c)
+        one = kvcache.init(batch, max_seq, kv, hd, cache_dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None],
+                                       (cfg.num_layers,) + a.shape), one)
+
+    if abstract:
+        return jax.eval_shape(build)
+    return jax.tree.map(jnp.asarray, build())
+
+
+def prefill(params, cfg, batch, caches, mesh=None, block_q=1024,
+            block_k=1024):
+    """Process a full prompt; returns (last-position logits, caches)."""
+    x, positions, _ = embed_inputs(params, cfg, batch, mesh)
+    if mesh:
+        x = sharding.constrain(x, mesh, sharding.act_spec(mesh))
+    x, caches, _ = decoder(params, cfg, x, positions, mesh=mesh,
+                           caches=caches, cache_pos=jnp.asarray(0),
+                           block_q=block_q, block_k=block_k)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = lm_head(params, cfg, mesh)
+    last = x[:, -1:]
+    if cfg.num_codebooks:
+        logits = jnp.einsum("bsd,kdv->bksv", last, head)
+    else:
+        logits = last @ head
+    return logits.astype(jnp.float32), caches
+
+
+def decode_step(params, cfg, tokens, caches, cache_pos, mesh=None,
+                block_k=1024):
+    """One decode step.  tokens: [B, 1] (or [B, K, 1] for codebooks).
+
+    The KV cache covers [0, cache_pos); new token is written at cache_pos.
+    """
+    batch = {"tokens": tokens}
+    x, _, _ = embed_inputs(params, cfg, batch, mesh)
+    positions = jnp.asarray([0]) + cache_pos
+    x, caches, _ = decoder(params, cfg, x, positions, mesh=mesh,
+                           caches=caches, cache_pos=cache_pos,
+                           block_q=1, block_k=block_k)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = lm_head(params, cfg, mesh)
+    if cfg.num_codebooks:
+        logits = jnp.einsum("bsd,kdv->bksv", x, head)
+    else:
+        logits = x @ head
+    return logits.astype(jnp.float32), caches

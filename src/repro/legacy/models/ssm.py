@@ -1,0 +1,201 @@
+"""Mamba2 (SSD — state-space duality) blocks, pure JAX.
+
+Implements the chunked SSD algorithm of Dao & Gu (arXiv:2405.21060): the
+sequence is split into chunks of Q tokens; within a chunk the dual
+"attention" form (quadratic in Q, matmul-friendly → MXU) is used, and a
+sequential ``lax.scan`` carries the [H, P, N] state across chunks.  Decode
+is the O(1) recurrent step.  The inter-chunk state recurrence mirrors the
+paper's Celeste decomposition shape: block-local compute with a bounded
+cross-block carry (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, heads, conv_dim
+
+
+def init_mamba(key, cfg, dtype):
+    d = cfg.d_model
+    d_inner, heads, conv_dim = dims(cfg)
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * n + heads          # z, x, B, C, dt
+    scale = 1.0 / math.sqrt(d)
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, in_dim), jnp.float32)
+                 * scale).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32) * 0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.full((heads,), -2.0, jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "norm_in": jnp.ones((d,), dtype),
+        "w_out": (jax.random.normal(ks[2], (d_inner, d), jnp.float32)
+                  / math.sqrt(d_inner)).astype(dtype),
+    }
+
+
+def _split(cfg, zxbcdt):
+    d_inner, heads, _ = dims(cfg)
+    n = cfg.ssm_state
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    b = zxbcdt[..., 2 * d_inner:2 * d_inner + n]
+    c = zxbcdt[..., 2 * d_inner + n:2 * d_inner + 2 * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n:]
+    return z, x, b, c, dt
+
+
+def _ssd_chunked(x, dt, a, bmat, cmat, cfg, init_state):
+    """Chunked SSD scan.
+
+    x: [B, S, H, P]; dt: [B, S, H]; a: [H] (negative);
+    bmat/cmat: [B, S, N] (single group, broadcast over heads).
+    Returns (y [B, S, H, P], final_state [B, H, P, N]).
+    """
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(cfg.ssm_chunk, s)
+    orig_s = s
+    if s % q:
+        # pad with dt = 0 tokens: zero state contribution, unit decay —
+        # the final state is unaffected; padded outputs are sliced off
+        pad = q - s % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // q
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h)
+    bc = bmat.reshape(bsz, nc, q, n)
+    cc = cmat.reshape(bsz, nc, q, n)
+
+    da = dtc * a                                   # [B, nc, Q, H] (negative)
+    cum = jnp.cumsum(da, axis=2)                   # within-chunk cumulative
+
+    # intra-chunk (dual/attention form): scores shared across heads via the
+    # single B/C group; decay L is per-head.
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc,
+                        preferred_element_type=jnp.float32)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,nc,Q,Q,H]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(causal[None, None, :, :, None],
+                      jnp.exp(decay), 0.0)
+    w = scores[..., None] * l_mat                  # [B, nc, Q, Q, H]
+    xdt = xc * dtc[..., None]                      # [B, nc, Q, H, P]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xdt.astype(jnp.float32))
+
+    # per-chunk state contribution and decay-to-end
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)   # [B, nc, Q, H]
+    s_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc,
+                         decay_end * dtc, xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])        # [B, nc, H]
+
+    # inter-chunk recurrence (sequential over chunks)
+    def step(state, inp):
+        s_c, dec = inp                             # [B,H,P,N], [B,H]
+        prev = state
+        state = prev * dec[..., None, None] + s_c
+        return state, prev
+
+    (final_state, prev_states) = jax.lax.scan(
+        step, init_state,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [B, nc, H, P, N]
+
+    # inter-chunk contribution: decay from chunk start then readout by C
+    in_decay = jnp.exp(cum)                        # [B, nc, Q, H]
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", cc, prev_states, in_decay)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)[:, :orig_s]
+    return y.astype(x.dtype), final_state
+
+
+def _causal_conv(x, w, b, conv_cache=None):
+    """Depthwise causal conv1d.  x: [B, S, C]; w: [K, C].
+
+    With a cache ([B, K-1, C] of trailing inputs) for decode.
+    """
+    k = w.shape[0]
+    if conv_cache is not None:
+        full = jnp.concatenate([conv_cache.astype(x.dtype), x], axis=1)
+        new_cache = full[:, -(k - 1):]
+    else:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+        full = jnp.concatenate([pad, x], axis=1)
+        new_cache = full[:, -(k - 1):]
+    out = sum(full[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(x.dtype), \
+        new_cache
+
+
+def mamba_layer(p, x, cfg, cache=None):
+    """One Mamba2 block.  x: [B, S, D] → [B, S, D].
+
+    cache: {"conv": [B, K-1, conv_dim], "state": [B, H, P, N]} for decode
+    (S == 1 recurrent step) or None for train/prefill (chunked scan).
+    """
+    bsz, s, d = x.shape
+    d_inner, heads, conv_dim = dims(cfg)
+    n = cfg.ssm_state
+    hp = cfg.ssm_head_dim
+
+    zxbcdt = x @ p["w_in"]
+    z, xs, bmat, cmat, dtr = _split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out, new_conv = _causal_conv(
+        conv_in, p["conv_w"], p["conv_b"],
+        None if cache is None else cache["conv"])
+    xs = conv_out[..., :d_inner].reshape(bsz, s, heads, hp)
+    bmat = conv_out[..., d_inner:d_inner + n]
+    cmat = conv_out[..., d_inner + n:]
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                       # [H], negative
+
+    if cache is None or s > 1:
+        init_state = (jnp.zeros((bsz, heads, hp, n), jnp.float32)
+                      if cache is None else cache["state"])
+        y, state = _ssd_chunked(xs, dt, a, bmat, cmat, cfg, init_state)
+    else:
+        # recurrent decode step
+        da = jnp.exp(dt[:, 0] * a)                 # [B, H]
+        state = cache["state"] * da[..., None, None] + jnp.einsum(
+            "bn,bh,bhp->bhpn", bmat[:, 0], dt[:, 0],
+            xs[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], state)[:, None]
+
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+
+    # gated RMSNorm then out-projection
+    from repro.legacy.models.layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_w"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    new_cache = (None if cache is None
+                 else {"conv": new_conv, "state": state})
+    return out, new_cache
+
+
+def init_cache(batch, cfg, dtype=jnp.float32):
+    d_inner, heads, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, heads, cfg.ssm_head_dim, cfg.ssm_state),
+                           jnp.float32),
+    }

@@ -1,0 +1,5 @@
+"""Entry-point script: roots the reachability walk."""
+from repro.core.pipeline import run
+
+if __name__ == "__main__":
+    print(run())

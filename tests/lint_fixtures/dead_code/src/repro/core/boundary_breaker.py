@@ -1,0 +1,3 @@
+"""Live module importing quarantined code -> legacy-import finding.
+(Also unreachable: nothing imports it.)"""
+from repro.legacy import old_stack  # noqa: F401

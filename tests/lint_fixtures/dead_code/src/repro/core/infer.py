@@ -1,0 +1,5 @@
+"""Live module: imported by pipeline."""
+
+
+def go():
+    return 42

@@ -1,0 +1,6 @@
+"""Live module: reached from the entry script."""
+from repro.core import infer  # noqa: F401
+
+
+def run():
+    return infer.go()

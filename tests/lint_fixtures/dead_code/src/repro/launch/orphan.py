@@ -1,0 +1,5 @@
+"""Dead module: nothing imports it -> unreachable-module."""
+
+
+def unused():
+    return None

@@ -1,0 +1,38 @@
+"""Seeded kernel-contract violations."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bad_kernel(x_ref, out_ref):
+    term = x_ref[...] * 2.0
+    out_ref[:, 0] = jnp.sum(term, axis=(1, 2))     # unmasked-reduction
+
+
+def bad_pallas_call(x):
+    s, patch, p_pad = x.shape
+    out = pl.pallas_call(
+        _bad_kernel,
+        grid=(s // 8, 2),
+        in_specs=[
+            # index_map takes 1 grid index, grid is 2-D  -> grid-mismatch
+            # block shape rank 3, index_map returns 2    -> grid-mismatch
+            # literal 32 and 128 in the shape            -> literal-block x2
+            pl.BlockSpec((32, patch, 128), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((8, 1), lambda i, j: (i, 0))],
+        # 2 out_specs entries vs 1 out_shape             -> handled below
+        out_shape=[jax.ShapeDtypeStruct((s, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((s, 1), jnp.float32)],
+        interpret=True,
+    )(x)
+    return out
+
+
+def bad_literal_knob(x):
+    from repro.kernels.poisson_elbo.bad import bad_pallas_call  # noqa: F401
+    return helper(x, block=32)                     # literal-block knob
+
+
+def helper(x, block=None):
+    return x

@@ -1,0 +1,34 @@
+"""The real kernel shape discipline, miniaturized — zero findings."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lane_mask(block, patch, p_pad):
+    ci = jax.lax.broadcasted_iota(jnp.int32, (block, patch, p_pad), 2)
+    return ci < patch
+
+
+def _good_kernel(x_ref, out_ref, *, patch: int):
+    b, _, p_pad = x_ref.shape
+    term = x_ref[...] * 2.0
+    term = jnp.where(_lane_mask(b, patch, p_pad), term, 0.0)
+    out_ref[:, 0] = jnp.sum(term, axis=(1, 2))
+
+
+def good_pallas_call(x, block: int | None = None):
+    s, patch, p_pad = x.shape
+    blk = block or 4
+    kernel = functools.partial(_good_kernel, patch=patch)
+    spec = pl.BlockSpec((blk, patch, p_pad), lambda i: (i, 0, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=(s // blk,),
+        in_specs=[spec],
+        out_specs=pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, 1), jnp.float32),
+        interpret=True,
+    )(x)
+    return out[:, 0]

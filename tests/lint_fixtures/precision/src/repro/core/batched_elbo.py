@@ -1,0 +1,30 @@
+"""Whitelisted post-cancellation assembly idioms (mirrors the real
+``_make_second_order``): bf16 is sanctioned here, and every GEMM on a
+bf16 operand carries ``preferred_element_type`` via the **f32acc splat."""
+import jax.numpy as jnp
+
+
+def _make_second_order(bf16: bool):
+    f32acc = dict(preferred_element_type=jnp.float32)
+    if bf16:
+        low = lambda t: t.astype(jnp.bfloat16)      # whitelisted site
+    else:
+        low = lambda t: t
+
+    def second_order(jq, w11):
+        w11_r = low(w11)
+        # GEMM on a bf16 operand WITH preferred_element_type — fine
+        h = jnp.einsum("sqp,sp->sq", jq, w11_r, **f32acc)
+        # GEMM on f32 operands without preferred — fine
+        g = jnp.einsum("sqp,sq->sp", jq, h)
+        return h, g
+
+    return second_order
+
+
+def bad_assembly_gemm(jq, w11, bf16: bool):
+    # NOT whitelisted: bf16 cast outside _make_second_order...
+    low = lambda t: t.astype(jnp.bfloat16)          # bf16-upstream
+    w11_r = low(w11)
+    # ...and the GEMM forgets preferred_element_type
+    return jnp.einsum("sqp,sp->sq", jq, w11_r)      # gemm-missing-preferred

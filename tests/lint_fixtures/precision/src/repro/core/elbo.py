@@ -1,0 +1,17 @@
+"""Seeded precision-policy violations (this module is upstream of the
+residual cancellation, so every low-precision token here is a finding)."""
+import jax.numpy as jnp
+
+
+def bad_upstream_cast(x):
+    y = x.astype(jnp.bfloat16)              # bf16-upstream (attr token)
+    return y
+
+
+def bad_upstream_string(x):
+    return x.astype("float16")              # bf16-upstream (string token)
+
+
+def bad_gemm_accum(a, b):
+    al = a.astype(jnp.bfloat16)             # bf16-upstream (attr token)
+    return jnp.einsum("ij,jk->ik", al, b)   # gemm-missing-preferred

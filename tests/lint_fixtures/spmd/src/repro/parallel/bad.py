@@ -1,0 +1,24 @@
+"""Seeded SPMD-uniformity violations."""
+import jax
+import jax.numpy as jnp
+
+
+def bad_axis_name(x):
+    y = jax.lax.psum(x, "batch")            # unknown-axis ("batch")
+    idx = jax.lax.axis_index("shard")       # unknown-axis ("shard")
+    return y, idx
+
+
+def bad_per_shard_shape(live, axis_name):
+    count = jnp.sum(live.astype(jnp.int32))     # local (per-shard) count
+    buf = jnp.zeros((count, 4))                 # per-shard-shape
+    return jax.lax.psum(buf, axis_name)
+
+
+def bad_per_shard_loop(live, axis_name):
+    count = jnp.sum(live.astype(jnp.int32))
+    total = jax.lax.psum(count, axis_name)
+    out = total
+    for _ in range(count):                      # per-shard loop bound
+        out = out + 1
+    return out

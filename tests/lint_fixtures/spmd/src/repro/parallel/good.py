@@ -1,0 +1,21 @@
+"""Negotiated-bucket idioms the pass must NOT flag (mirrors collectives)."""
+import jax
+import jax.numpy as jnp
+
+
+def good_negotiated(live, axis_name):
+    count = jnp.sum(live.astype(jnp.int32))     # per-shard, but...
+    total = jax.lax.psum(count, axis_name)      # ...negotiated here
+    maxc = jax.lax.pmax(count, axis_name)
+    bucket = jnp.maximum(4, total)
+    buf = jnp.zeros((8, 4))                     # static shape — fine
+    return buf, bucket, maxc
+
+
+def good_declared_axis(x):
+    y = jax.lax.psum(x, "data")                 # declared axis — fine
+    return jax.lax.pmax(y, axis_name="model")   # declared axis — fine
+
+
+def good_variable_axis(x, axis_name):
+    return jax.lax.psum(x, axis_name)           # not a literal — fine

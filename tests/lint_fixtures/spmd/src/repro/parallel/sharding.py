@@ -1,0 +1,12 @@
+"""Fixture axis declarations (the pass reads mesh axes from here)."""
+from jax.sharding import PartitionSpec as P
+
+AXES = ("pod", "data", "model")
+
+
+def row_spec(axis: str) -> P:
+    return P(axis)
+
+
+def data_spec() -> P:
+    return P(("pod", "data"), None)

@@ -1,0 +1,40 @@
+"""Seeded trace-safety violations: every construct here must be flagged."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_host_casts(x):
+    a = float(x)                    # host-cast
+    b = x.item()                    # host-cast
+    c = np.asarray(x)               # numpy-on-traced
+    return a + b + c
+
+
+@jax.jit
+def bad_control_flow(x):
+    if x > 0:                       # python-control-flow (if)
+        x = x + 1
+    while x < 10:                   # python-control-flow (while)
+        x = x * 2
+    total = x[0]
+    for v in x:                     # python-control-flow (for)
+        total = total + v
+    return total
+
+
+@jax.jit
+def bad_side_effect(x):
+    print("step", 1)                # side-effect
+    return x + 1
+
+
+def hidden(x):
+    # reachable from the jit root below through the call graph
+    return int(x)                   # host-cast
+
+
+@jax.jit
+def bad_transitive(x):
+    return hidden(x)

@@ -1,0 +1,42 @@
+"""Trace-safe idioms the pass must NOT flag (mirrors newton/infer)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def good_static_argnames(x, n):
+    out = x
+    for _ in range(n):              # n is static — fine
+        out = out + 1.0
+    if n > 3:                       # static — fine
+        out = out * 2.0
+    return out
+
+
+@jax.jit
+def good_shape_and_none(x, active=None):
+    s, d = x.shape                  # shapes are static — fine
+    if active is None:              # is-None check is static — fine
+        active = jnp.ones((s,), bool)
+    if d > 2:                       # derived from .shape — fine
+        x = x[:, :2]
+    return jnp.where(active[:, None], x, 0.0)
+
+
+def good_scalar_config(x, block: int | None = None, interpret: bool = False):
+    blk = block or 8                # annotated scalar config — static
+    if interpret:                   # fine
+        blk = 1
+    return x.reshape(-1, blk)
+
+
+@jax.jit
+def good_functional(x):
+    return jax.lax.cond(jnp.all(x > 0), lambda v: v + 1, lambda v: v - 1, x)
+
+
+@jax.jit
+def good_caller(x):
+    return good_scalar_config(x, block=4)

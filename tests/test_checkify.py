@@ -1,0 +1,99 @@
+"""REPRO_CHECKIFY=1 sanitizer mode: the checkify guards embedded in the
+objective surface non-finite escapes into InferenceStats.checkify_errors,
+stay silent on healthy runs, and stay OUT of the objective when the mode
+is off (an unfunctionalized check under plain jit is a trace error)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import checkify
+
+from repro.core import (backends, batched_elbo, elbo, heuristic, infer,
+                        synthetic)
+from repro.core.priors import default_priors
+
+
+@pytest.fixture(scope="module")
+def tiny_sky():
+    priors = default_priors()
+    sky = synthetic.sample_sky(jax.random.PRNGKey(3), num_sources=3,
+                               field=64, priors=priors)
+    cand = sky.truth.pos + 0.3 * jax.random.normal(
+        jax.random.PRNGKey(4), sky.truth.pos.shape)
+    est = heuristic.measure_catalog(sky.images, sky.metas, cand)
+    return sky, est, priors
+
+
+def test_clean_run_has_no_checkify_errors(tiny_sky, monkeypatch):
+    sky, est, priors = tiny_sky
+    monkeypatch.setenv(backends.ENV_CHECKIFY, "1")
+    _, stats = infer.run_inference(sky.images, sky.metas, est, priors,
+                                   patch=16, batch=3, max_iters=8)
+    assert stats.checkify_errors == []
+
+
+def test_nan_poison_is_harvested(tiny_sky, monkeypatch):
+    sky, est, priors = tiny_sky
+    monkeypatch.setenv(backends.ENV_CHECKIFY, "1")
+    poisoned = sky.images.at[:, 20:24, 20:24].set(jnp.nan)
+    _, stats = infer.run_inference(poisoned, sky.metas, est, priors,
+                                   patch=16, batch=3, max_iters=8)
+    assert stats.checkify_errors, "NaN pixels must trip the guards"
+    assert any("non-finite" in m for m in stats.checkify_errors)
+
+
+def test_same_poison_is_silent_when_mode_off(tiny_sky, monkeypatch):
+    sky, est, priors = tiny_sky
+    monkeypatch.delenv(backends.ENV_CHECKIFY, raising=False)
+    poisoned = sky.images.at[:, 20:24, 20:24].set(jnp.nan)
+    _, stats = infer.run_inference(poisoned, sky.metas, est, priors,
+                                   patch=16, batch=3, max_iters=8)
+    # without the sanitizer the NaNs propagate silently — exactly the
+    # failure mode the gate exists to surface
+    assert stats.checkify_errors == []
+    assert not np.isfinite(stats.elbo_values).all()
+
+
+def test_guarded_objective_requires_functionalization(tiny_sky):
+    """The guard contract: checks fire under checkify.checkify, and a
+    plain jit of a guarded objective is a loud trace-time error rather
+    than a silently-dropped check."""
+    sky, est, priors = tiny_sky
+    obj = batched_elbo.make_batched_objective(
+        sky.metas, priors, backend="jax", checkify_guards=True)
+    thetas = jax.jit(jax.vmap(
+        lambda s: elbo.init_theta(s, priors)))(est)
+    x, corners = infer.extract_patches(sky.images, sky.metas, est.pos, 16)
+    bg = jnp.full_like(x, 1e-2)
+
+    bad = thetas.at[0, 0].set(jnp.nan)
+    err, _ = jax.jit(checkify.checkify(
+        obj.value, errors=checkify.user_checks))(bad, x, bg, corners)
+    assert "non-finite" in (err.get() or "")
+
+    ok_err, _ = jax.jit(checkify.checkify(
+        obj.value, errors=checkify.user_checks))(thetas, x, bg, corners)
+    assert ok_err.get() is None
+
+    with pytest.raises(ValueError, match="functionalized"):
+        jax.jit(obj.value)(thetas, x, bg, corners)
+
+
+def test_env_off_means_no_guards(tiny_sky):
+    sky, est, priors = tiny_sky
+    obj = batched_elbo.make_batched_objective(
+        sky.metas, priors, backend="jax", checkify_guards=False)
+    x, corners = infer.extract_patches(sky.images, sky.metas, est.pos, 16)
+    thetas = jnp.zeros((3, 27), jnp.float32).at[:, :2].set(est.pos)
+    # plain jit must stay legal on the unguarded objective
+    jax.jit(obj.value)(thetas, x, jnp.full_like(x, 1e-2), corners)
+
+
+def test_checkify_error_set_selection(monkeypatch):
+    monkeypatch.setenv(backends.ENV_CHECKIFY_ERRORS, "all")
+    assert backends.checkify_error_set() == checkify.all_checks
+    monkeypatch.delenv(backends.ENV_CHECKIFY_ERRORS)
+    assert backends.checkify_error_set() == checkify.user_checks
+    monkeypatch.setenv(backends.ENV_CHECKIFY_ERRORS, "bogus")
+    with pytest.raises(ValueError, match="REPRO_CHECKIFY_ERRORS"):
+        backends.checkify_error_set()

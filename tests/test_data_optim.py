@@ -7,8 +7,8 @@ try:
 except ImportError:  # pragma: no cover - tiny deterministic fallback
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.data.tokens import PipelineConfig, TokenPipeline, _batch_for
-from repro.optim import adamw, compress
+from repro.legacy.data.tokens import PipelineConfig, TokenPipeline, _batch_for
+from repro.legacy.optim import adamw, compress
 
 
 def test_pipeline_deterministic_per_step_and_host():

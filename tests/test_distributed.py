@@ -51,8 +51,8 @@ assert rel < 0.05, rel
 def test_moe_layer_mesh_matches_single_device():
     out = _run("""
 mesh = make_test_mesh(data=2, model=4)
-from repro.configs.base import get_config, reduced
-from repro.models import layers, model as M
+from repro.legacy.configs.base import get_config, reduced
+from repro.legacy.models import layers, model as M
 cfg = reduced(get_config("dbrx_132b"), d_model=64, d_ff=64, num_experts=4, top_k=2)
 key = jax.random.PRNGKey(0)
 p = layers.init_moe(key, cfg, jnp.float32)
@@ -98,10 +98,10 @@ assert fd < 1e-3, fd
 def test_ddp_compressed_train_decreases_loss():
     out = _run("""
 mesh = make_test_mesh(data=8, model=1)
-from repro.configs.base import get_config, reduced
-from repro.models import model as M
-from repro.launch.train import make_ddp_compressed_step
-from repro.optim import compress
+from repro.legacy.configs.base import get_config, reduced
+from repro.legacy.models import model as M
+from repro.legacy.launch.train import make_ddp_compressed_step
+from repro.legacy.optim import compress
 cfg = reduced(get_config("smollm_360m"), num_layers=2, d_model=32, d_ff=64,
               vocab=128, num_heads=2, num_kv_heads=1, head_dim=16)
 key = jax.random.PRNGKey(0)
@@ -122,8 +122,8 @@ assert sum(losses[-5:]) / 5 < sum(losses[:5]) / 5 - 0.1
 def test_sharded_flash_decode_matches_full():
     out = _run("""
 mesh = make_test_mesh(data=1, model=8)
-from repro.kernels.decode_attn import ref as dref
-from repro.kernels.decode_attn.ops import sharded_decode_attention
+from repro.legacy.kernels.decode_attn import ref as dref
+from repro.legacy.kernels.decode_attn.ops import sharded_decode_attention
 b, h, kv, hd, s = 2, 8, 4, 32, 512
 q = jax.random.normal(jax.random.PRNGKey(0), (b, h, hd))
 k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, hd))
@@ -239,11 +239,11 @@ def test_dryrun_single_cell_small_mesh():
     subprocess (the production-mesh version runs in launch/dryrun.py)."""
     out = _run("""
 mesh = make_test_mesh(data=2, model=4)
-from repro.configs.base import get_config, reduced
+from repro.legacy.configs.base import get_config, reduced
 import dataclasses
-from repro.launch.train import make_train_step
-from repro.models import model as M
-from repro.optim import adamw
+from repro.legacy.launch.train import make_train_step
+from repro.legacy.models import model as M
+from repro.legacy.optim import adamw
 cfg = reduced(get_config("qwen3_32b"), num_heads=4, num_kv_heads=4)
 step, in_sh, out_sh = make_train_step(cfg, mesh, microbatches=2)
 p = jax.eval_shape(lambda k: M.init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))

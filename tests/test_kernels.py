@@ -12,10 +12,10 @@ from repro.kernels.poisson_elbo.ref import (poisson_elbo_grad_ref,
                                             poisson_elbo_ref)
 from repro.kernels.poisson_elbo.poisson_elbo import (
     poisson_elbo_grad_pallas, poisson_elbo_hess_pallas, poisson_elbo_pallas)
-from repro.kernels.flash_attn.ref import attention_ref
-from repro.kernels.flash_attn.flash_attn import flash_attention_pallas
-from repro.kernels.decode_attn import ref as dref
-from repro.kernels.decode_attn.decode_attn import decode_attention_pallas
+from repro.legacy.kernels.flash_attn.ref import attention_ref
+from repro.legacy.kernels.flash_attn.flash_attn import flash_attention_pallas
+from repro.legacy.kernels.decode_attn import ref as dref
+from repro.legacy.kernels.decode_attn.decode_attn import decode_attention_pallas
 
 
 @pytest.mark.parametrize("s,k,patch", [(1, 3, 8), (4, 6, 24), (7, 18, 24),

@@ -7,8 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import ARCH_NAMES, get_config, reduced
-from repro.models import model as M
+from repro.legacy.configs.base import ARCH_NAMES, get_config, reduced
+from repro.legacy.models import model as M
 
 KEY = jax.random.PRNGKey(0)
 
@@ -40,8 +40,8 @@ def test_arch_forward_loss(arch):
 
 @pytest.mark.parametrize("arch", ARCH_NAMES)
 def test_arch_train_step(arch):
-    from repro.launch.train import make_train_step
-    from repro.optim import adamw
+    from repro.legacy.launch.train import make_train_step
+    from repro.legacy.optim import adamw
     cfg = reduced(get_config(arch))
     params = M.init_params(cfg, KEY)
     opt = adamw.init(params)
@@ -98,9 +98,9 @@ def test_arch_prefill_decode_consistency(arch):
 
 def test_train_loss_decreases_smollm():
     """~200-step training sanity on the smallest arch: loss decreases."""
-    from repro.launch.train import make_train_step
-    from repro.optim import adamw
-    from repro.data.tokens import PipelineConfig, _batch_for
+    from repro.legacy.launch.train import make_train_step
+    from repro.legacy.optim import adamw
+    from repro.legacy.data.tokens import PipelineConfig, _batch_for
     cfg = reduced(get_config("smollm_360m"), num_layers=2, d_model=64,
                   d_ff=128, vocab=256)
     params = M.init_params(cfg, KEY)

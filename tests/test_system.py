@@ -53,7 +53,7 @@ def test_fit_priors_recovers_population():
 def test_ring_cache_keeps_last_window(w, s_new, pos):
     """Ring-cache invariant: after writing s_new tokens at ``pos``, the
     live slots hold exactly the last min(w, ·) positions written."""
-    from repro.models import kvcache
+    from repro.legacy.models import kvcache
     cache = kvcache.init(1, w, 1, 4, ring=True)
     k = jnp.arange(s_new, dtype=jnp.float32).reshape(1, s_new, 1, 1) \
         * jnp.ones((1, s_new, 1, 4))
@@ -65,7 +65,7 @@ def test_ring_cache_keeps_last_window(w, s_new, pos):
 
 
 def test_int8_cache_quantization_error_bounded():
-    from repro.models import kvcache
+    from repro.legacy.models import kvcache
     key = jax.random.PRNGKey(0)
     k = jax.random.normal(key, (2, 16, 4, 32))
     cache = kvcache.init(2, 16, 4, 32, dtype=jnp.int8)

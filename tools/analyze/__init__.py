@@ -1,0 +1,37 @@
+"""repro-lint: an invariant-enforcing static-analysis suite.
+
+Celeste's petascale result hinged on code that stays SPMD-uniform,
+numerically stable and type-inferable at scale; the authors found that
+class of bug by building Julia-level analysis tooling, not by testing.
+This package is the JAX-repo equivalent: five AST-based passes that
+encode the invariants this codebase's correctness arguments rely on,
+run as ``python -m tools.analyze`` and gated in CI.
+
+  * ``trace_safety``    — no host-side casts (``float``/``int``/``bool``/
+    ``.item()``/``np.asarray``), Python control flow, or side effects on
+    traced values inside functions reachable from ``jax.jit`` /
+    ``pl.pallas_call`` call sites (intra-repo call graph).
+  * ``spmd``            — collective ``axis_name``s must match the mesh
+    axes declared in ``parallel/sharding.py`` / ``launch/mesh.py``, and
+    no shapes or loop bounds computed from per-shard values (anything
+    not negotiated through ``psum``/``pmax``).
+  * ``precision``       — no bf16/f16 upstream of the ``poisson_elbo``
+    residual cancellation; bf16 only at the whitelisted
+    post-cancellation Hessian-assembly sites, and every GEMM touching a
+    bf16 operand must pass ``preferred_element_type``.
+  * ``kernel_contract`` — every ``pallas_call`` BlockSpec/grid/index-map
+    consistent, block/lane knobs from ``KernelConfig`` (no reintroduced
+    literals), padded-lane tensors masked before reductions.
+  * ``dead_code``       — modules unreachable from ``repro.core`` /
+    ``repro.kernels`` / the entry-point scripts are reported; the
+    quarantined ``repro.legacy`` tree is excluded, and non-legacy code
+    importing it is itself a finding.
+
+Grandfathered findings live in ``tools/analyze/baseline.json`` (every
+entry carries a reason string); a baseline entry that no longer matches
+any finding is *stale* and fails ``--strict`` so suppressions expire
+with the code they covered.  See docs/static_analysis.md.
+"""
+from __future__ import annotations
+
+from tools.analyze.base import Finding, Repo  # noqa: F401

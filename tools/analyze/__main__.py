@@ -1,0 +1,133 @@
+"""CLI driver: ``python -m tools.analyze [--strict] [--json] [passes...]``.
+
+Exit status 0 when every finding is baselined (and, under ``--strict``,
+no baseline entry is stale); 1 otherwise.  ``--emit-baseline`` prints a
+baseline skeleton for the current findings so new suppressions start
+from real fingerprints instead of hand-rolled hashes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from tools.analyze import baseline as baseline_mod
+from tools.analyze.base import Finding, Repo
+from tools.analyze.callgraph import CallGraph
+from tools.analyze import (
+    dead_code,
+    kernel_contract,
+    precision,
+    spmd,
+    trace_safety,
+)
+
+PASSES = ("trace_safety", "spmd", "precision", "kernel_contract",
+          "dead_code")
+
+
+def run_passes(repo: Repo, selected: list[str]) -> list[Finding]:
+    findings = list(repo.parse_errors)
+    cg = None
+    if "trace_safety" in selected or "kernel_contract" in selected:
+        cg = CallGraph(repo)
+    if "trace_safety" in selected:
+        findings.extend(trace_safety.run(cg))
+    if "spmd" in selected:
+        findings.extend(spmd.run(repo))
+    if "precision" in selected:
+        findings.extend(precision.run(repo))
+    if "kernel_contract" in selected:
+        findings.extend(kernel_contract.run(cg))
+    if "dead_code" in selected:
+        findings.extend(dead_code.run(repo))
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.analyze", description=__doc__
+    )
+    parser.add_argument("passes", nargs="*", choices=[[], *PASSES],
+                        default=[], help="subset of passes (default: all)")
+    parser.add_argument("--root", default=".",
+                        help="repository root to analyze")
+    parser.add_argument("--baseline", default=None,
+                        help="baseline JSON path "
+                        "(default: tools/analyze/baseline.json)")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="ignore the baseline entirely")
+    parser.add_argument("--strict", action="store_true",
+                        help="also fail on stale baseline entries")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="machine-readable output")
+    parser.add_argument("--emit-baseline", action="store_true",
+                        help="print a baseline skeleton for current "
+                        "findings and exit 0")
+    args = parser.parse_args(argv)
+
+    selected = list(args.passes) or list(PASSES)
+    t0 = time.monotonic()
+    repo = Repo(args.root)
+    findings = run_passes(repo, selected)
+
+    if args.no_baseline:
+        bl = baseline_mod.Baseline([])
+    else:
+        bl = baseline_mod.Baseline.load(args.baseline)
+
+    new = [f for f in findings if not bl.suppresses(f)]
+    stale = bl.stale_entries() if not args.no_baseline else []
+    elapsed = time.monotonic() - t0
+
+    if args.emit_baseline:
+        print(json.dumps(
+            {"findings": [
+                baseline_mod.Baseline.render_entry(f, "TODO: why is this ok")
+                for f in new
+            ]},
+            indent=2,
+        ))
+        return 0
+
+    if args.as_json:
+        print(json.dumps(
+            {
+                "passes": selected,
+                "elapsed_s": round(elapsed, 2),
+                "new": [f.__dict__ | {"fingerprint": f.fingerprint}
+                        for f in new],
+                "suppressed": len(findings) - len(new),
+                "stale_baseline": stale,
+            },
+            indent=2,
+        ))
+    else:
+        for f in new:
+            print(f.render())
+        if stale:
+            print()
+            for e in stale:
+                print(
+                    f"stale baseline entry {e['fingerprint']} "
+                    f"({e['pass']}/{e['rule']} {e['path']}): the finding it "
+                    "suppressed no longer exists — delete it from "
+                    "baseline.json"
+                )
+        print(
+            f"repro-lint: {len(selected)} passes, {len(findings)} findings "
+            f"({len(findings) - len(new)} baselined, {len(new)} new), "
+            f"{len(stale)} stale baseline entries, {elapsed:.1f}s",
+            file=sys.stderr,
+        )
+
+    if new:
+        return 1
+    if stale and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,200 @@
+"""Shared infrastructure for the repro-lint passes.
+
+A pass is a function ``run(repo) -> list[Finding]``.  ``Repo`` owns file
+discovery and a parse cache; ``Finding`` carries a content-addressed
+fingerprint so the baseline survives line-number drift.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import os
+from pathlib import Path
+
+# Dotted-prefix aliases every pass can assume.  Import resolution maps
+# local names (``jnp``, ``pl``, ...) onto these canonical prefixes.
+CANONICAL_ALIASES = {
+    "jax.numpy": "jax.numpy",
+    "numpy": "numpy",
+}
+
+SRC_PREFIX = "src/repro"
+LEGACY_PREFIX = "repro.legacy"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    pass_id: str          # e.g. "trace_safety"
+    rule: str             # e.g. "host-cast"
+    path: str             # repo-relative, posix separators
+    line: int
+    message: str
+    context: str = ""     # enclosing qualname, for fingerprint stability
+    snippet: str = ""     # normalized source line, for fingerprint stability
+
+    @property
+    def fingerprint(self) -> str:
+        key = "|".join(
+            (self.pass_id, self.rule, self.path, self.context, self.snippet)
+        )
+        return hashlib.sha256(key.encode()).hexdigest()[:16]
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.pass_id}/{self.rule}] {self.message}"
+
+
+class SourceFile:
+    """One parsed python file plus derived lookup tables."""
+
+    def __init__(self, root: Path, path: Path):
+        self.abspath = path
+        self.path = path.relative_to(root).as_posix()
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=self.path)
+        self.module = self._module_name()
+        # local name -> canonical dotted target ("jnp" -> "jax.numpy",
+        # "newton" -> "repro.core.newton", "fit_batch" -> "repro.core.newton.fit_batch")
+        self.imports: dict[str, str] = {}
+        self._collect_imports()
+
+    def _module_name(self) -> str:
+        parts = Path(self.path).with_suffix("").parts
+        if parts and parts[0] == "src":
+            parts = parts[1:]
+        if parts and parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+    def _collect_imports(self) -> None:
+        pkg = self.module.rsplit(".", 1)[0] if "." in self.module else ""
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    self.imports[alias.asname or alias.name.split(".")[0]] = (
+                        alias.name if alias.asname else alias.name.split(".")[0]
+                    )
+                    if alias.asname:
+                        self.imports[alias.asname] = alias.name
+            elif isinstance(node, ast.ImportFrom):
+                base = node.module or ""
+                if node.level:
+                    # resolve relative imports against this module's package
+                    up = pkg.split(".") if pkg else []
+                    up = up[: len(up) - (node.level - 1)] if node.level > 1 else up
+                    base = ".".join(up + ([base] if base else []))
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    target = f"{base}.{alias.name}" if base else alias.name
+                    self.imports[alias.asname or alias.name] = target
+
+    def source_line(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def resolve(self, node: ast.AST) -> str | None:
+        """Canonical dotted name for a Name/Attribute chain, or None."""
+        parts: list[str] = []
+        cur = node
+        while isinstance(cur, ast.Attribute):
+            parts.append(cur.attr)
+            cur = cur.value
+        if not isinstance(cur, ast.Name):
+            return None
+        head = self.imports.get(cur.id, cur.id)
+        return ".".join([head] + list(reversed(parts)))
+
+
+class Repo:
+    """File discovery + parse cache for the analysis root."""
+
+    # directories never analyzed (legacy is quarantined; the dead-code
+    # pass still flags non-legacy code that imports into it)
+    SKIP_DIRS = {
+        "__pycache__", ".git", ".github", "results", "build", "dist",
+        ".pytest_cache", "node_modules", "lint_fixtures",
+    }
+
+    def __init__(self, root: str | os.PathLike = "."):
+        self.root = Path(root).resolve()
+        self._files: dict[str, SourceFile] = {}
+        self._errors: list[Finding] = []
+        for path in sorted(self.root.rglob("*.py")):
+            rel = path.relative_to(self.root)
+            if any(part in self.SKIP_DIRS for part in rel.parts):
+                continue
+            try:
+                sf = SourceFile(self.root, path)
+            except SyntaxError as exc:
+                self._errors.append(
+                    Finding(
+                        pass_id="parse",
+                        rule="syntax-error",
+                        path=rel.as_posix(),
+                        line=exc.lineno or 0,
+                        message=str(exc),
+                        snippet=str(exc.msg),
+                    )
+                )
+                continue
+            self._files[sf.path] = sf
+
+    @property
+    def parse_errors(self) -> list[Finding]:
+        return list(self._errors)
+
+    def files(self, prefix: str | None = None) -> list[SourceFile]:
+        out = []
+        for path, sf in self._files.items():
+            if prefix is None or path.startswith(prefix):
+                out.append(sf)
+        return out
+
+    def src_files(self, include_legacy: bool = False) -> list[SourceFile]:
+        out = []
+        for sf in self.files(SRC_PREFIX):
+            if not include_legacy and sf.module.startswith(LEGACY_PREFIX):
+                continue
+            out.append(sf)
+        return out
+
+    def get(self, path: str) -> SourceFile | None:
+        return self._files.get(path)
+
+    def by_module(self, module: str) -> SourceFile | None:
+        for sf in self._files.values():
+            if sf.module == module:
+                return sf
+        return None
+
+
+def func_name(node: ast.AST) -> str:
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return node.name
+    return "<lambda>"
+
+
+def qualname_index(tree: ast.Module) -> dict[ast.AST, str]:
+    """Map every function/lambda node to a dotted qualname."""
+    out: dict[ast.AST, str] = {}
+
+    def visit(node: ast.AST, stack: tuple[str, ...]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = stack + (child.name,)
+                out[child] = ".".join(q)
+                visit(child, q)
+            elif isinstance(child, ast.Lambda):
+                q = stack + (f"<lambda:{child.lineno}>",)
+                out[child] = ".".join(q)
+                visit(child, q)
+            elif isinstance(child, ast.ClassDef):
+                visit(child, stack + (child.name,))
+            else:
+                visit(child, stack)
+
+    visit(tree, ())
+    return out

@@ -1,0 +1,64 @@
+"""Grandfathered-finding baseline.
+
+``tools/analyze/baseline.json`` holds the findings we accept on purpose,
+each with a mandatory ``reason``.  Entries key on the finding
+*fingerprint* (pass|rule|path|context|normalized snippet), so they
+survive line-number drift but expire the moment the underlying code
+changes or disappears — a stale entry fails ``--strict`` and must be
+deleted with the code it covered.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from tools.analyze.base import Finding
+
+DEFAULT_PATH = Path(__file__).parent / "baseline.json"
+
+
+class Baseline:
+    def __init__(self, entries: list[dict]):
+        self.entries = entries
+        self.by_fingerprint = {e["fingerprint"]: e for e in entries}
+        self.matched: set[str] = set()
+
+    @classmethod
+    def load(cls, path: Path | str | None = None) -> "Baseline":
+        path = Path(path) if path is not None else DEFAULT_PATH
+        if not path.exists():
+            return cls([])
+        data = json.loads(path.read_text())
+        entries = data["findings"] if isinstance(data, dict) else data
+        for e in entries:
+            if not e.get("reason"):
+                raise ValueError(
+                    f"baseline entry {e.get('fingerprint')} in {path} has "
+                    "no reason — every grandfathered finding must say why"
+                )
+        return cls(entries)
+
+    def suppresses(self, finding: Finding) -> bool:
+        hit = finding.fingerprint in self.by_fingerprint
+        if hit:
+            self.matched.add(finding.fingerprint)
+        return hit
+
+    def stale_entries(self) -> list[dict]:
+        return [
+            e
+            for e in self.entries
+            if e["fingerprint"] not in self.matched
+        ]
+
+    @staticmethod
+    def render_entry(finding: Finding, reason: str) -> dict:
+        return {
+            "fingerprint": finding.fingerprint,
+            "pass": finding.pass_id,
+            "rule": finding.rule,
+            "path": finding.path,
+            "context": finding.context,
+            "snippet": finding.snippet,
+            "reason": reason,
+        }

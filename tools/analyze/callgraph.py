@@ -1,0 +1,320 @@
+"""Intra-repo call graph and the traced-function closure.
+
+Trace-safety (and parts of the precision pass) need to know which
+functions execute under a JAX trace.  Roots are functions decorated
+with or passed into trace entry points (``jax.jit``, ``jax.vmap``,
+``lax.while_loop`` bodies, ``shard_map``, ``pl.pallas_call``,
+``custom_vjp`` fwd/bwd, objective bundles, ...); the closure follows
+lexically-resolvable calls and references through the repo.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from tools.analyze.base import Repo, SourceFile, qualname_index
+
+# call targets whose function-valued arguments run under trace
+TRACE_ENTRY_PREFIXES = (
+    "jax.jit",
+    "jax.vmap",
+    "jax.pmap",
+    "jax.grad",
+    "jax.value_and_grad",
+    "jax.jacfwd",
+    "jax.jacrev",
+    "jax.hessian",
+    "jax.vjp",
+    "jax.jvp",
+    "jax.linearize",
+    "jax.checkpoint",
+    "jax.remat",
+    "jax.eval_shape",
+    "jax.lax.while_loop",
+    "jax.lax.fori_loop",
+    "jax.lax.cond",
+    "jax.lax.switch",
+    "jax.lax.scan",
+    "jax.lax.associative_scan",
+    "jax.lax.map",
+    "jax.experimental.pallas.pallas_call",
+    "jax.experimental.shard_map.shard_map",
+    "jax.experimental.checkify.checkify",
+    "repro.parallel.sharding.shard_map",
+)
+
+# constructors whose function-valued arguments are later called under
+# jit (the Newton objective bundle)
+TRACED_BUNDLES = ("repro.core.newton.BatchedObjective",)
+
+TRACED_DECORATORS = (
+    "jax.jit",
+    "jax.custom_vjp",
+    "jax.custom_jvp",
+    "jax.vmap",
+)
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    sf: SourceFile
+    node: ast.FunctionDef | ast.AsyncFunctionDef | ast.Lambda
+    qualname: str          # module-local dotted qualname
+    traced: bool = False
+    trace_reason: str = ""
+    static_params: frozenset[str] = frozenset()
+
+    @property
+    def key(self) -> tuple[str, str]:
+        return (self.sf.module, self.qualname)
+
+
+class CallGraph:
+    def __init__(self, repo: Repo, files: list[SourceFile] | None = None):
+        self.repo = repo
+        self.files = files if files is not None else repo.src_files()
+        # (module, qualname) -> FuncInfo
+        self.funcs: dict[tuple[str, str], FuncInfo] = {}
+        # node identity -> FuncInfo (per file)
+        self._by_node: dict[int, FuncInfo] = {}
+        # edges: caller key -> set of callee keys
+        self.edges: dict[tuple[str, str], set[tuple[str, str]]] = {}
+        self._assign_cache: dict[str, dict[str, list[ast.expr]]] = {}
+        self._index()
+        self._mark_roots()
+        self._build_edges()
+        self._close()
+
+    # ------------------------------------------------------------------
+    def _index(self) -> None:
+        for sf in self.files:
+            for node, qual in qualname_index(sf.tree).items():
+                info = FuncInfo(sf=sf, node=node, qualname=qual)
+                self.funcs[info.key] = info
+                self._by_node[id(node)] = info
+
+    def info_for(self, node: ast.AST) -> FuncInfo | None:
+        return self._by_node.get(id(node))
+
+    def lookup(self, sf: SourceFile, name: str) -> FuncInfo | None:
+        """Resolve a bare name to a function: module-local first, then
+        a ``from repro.x import f`` / ``repro.x.f`` dotted reference."""
+        info = self.funcs.get((sf.module, name))
+        if info is not None:
+            return info
+        target = sf.resolve(ast.Name(id=name))
+        return self._lookup_dotted(target)
+
+    def _lookup_dotted(self, target: str | None) -> FuncInfo | None:
+        if not target or not target.startswith("repro."):
+            return None
+        module, _, func = target.rpartition(".")
+        return self.funcs.get((module, func))
+
+    def _assigns(self, sf: SourceFile, name: str) -> list[ast.expr]:
+        index = self._assign_cache.get(sf.path)
+        if index is None:
+            index = {}
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.Assign) and len(node.targets) == 1 and (
+                    isinstance(node.targets[0], ast.Name)
+                ):
+                    index.setdefault(node.targets[0].id, []).append(node.value)
+            self._assign_cache[sf.path] = index
+        return index.get(name, [])
+
+    def candidates(
+        self, sf: SourceFile, node: ast.AST, _depth: int = 0
+    ) -> list[FuncInfo]:
+        """Every FuncInfo an expression in function position may denote
+        (local rebinding like ``kernel = partial(_elbo_kernel, ...)`` can
+        make a bare name ambiguous across sibling functions)."""
+        if _depth > 4:
+            return []
+        if isinstance(node, ast.Name):
+            direct = self.lookup(sf, node.id)
+            if direct is not None:
+                return [direct]
+            out = []
+            for value in self._assigns(sf, node.id):
+                out.extend(self.candidates(sf, value, _depth + 1))
+            return out
+        info = self.resolve_callable(sf, node)
+        return [info] if info is not None else []
+
+    def resolve_callable(self, sf: SourceFile, node: ast.AST) -> FuncInfo | None:
+        """FuncInfo for an expression used in function position."""
+        if isinstance(node, (ast.Lambda, ast.FunctionDef)):
+            return self.info_for(node)
+        if isinstance(node, ast.Call):
+            # functools.partial(f, ...) — follow through to f; kwargs
+            # bound by the partial are static at trace time
+            tgt = sf.resolve(node.func)
+            if tgt in ("functools.partial", "partial") and node.args:
+                info = self.resolve_callable(sf, node.args[0])
+                if info is not None:
+                    bound = frozenset(
+                        kw.arg for kw in node.keywords if kw.arg
+                    )
+                    info.static_params = info.static_params | bound
+                return info
+            return None
+        target = sf.resolve(node)
+        if target is None:
+            return None
+        if "." not in target:
+            return self.lookup(sf, target)
+        info = self._lookup_dotted(target)
+        if info is not None:
+            return info
+        # module-local nested reference like "outer.inner" is not a
+        # thing at call sites; Attribute chains on objects are dynamic.
+        return None
+
+    # ------------------------------------------------------------------
+    def _mark(self, info: FuncInfo | None, reason: str) -> None:
+        if info is not None and not info.traced:
+            info.traced = True
+            info.trace_reason = reason
+
+    def _static_argnames(self, sf: SourceFile, call: ast.Call) -> frozenset[str]:
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                names = []
+                val = kw.value
+                if isinstance(val, ast.Constant) and isinstance(val.value, str):
+                    names = [val.value]
+                elif isinstance(val, (ast.Tuple, ast.List)):
+                    names = [
+                        e.value
+                        for e in val.elts
+                        if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                    ]
+                return frozenset(names)
+        return frozenset()
+
+    def _mark_roots(self) -> None:
+        for sf in self.files:
+            for node in ast.walk(sf.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self._root_from_decorators(sf, node)
+                elif isinstance(node, ast.Call):
+                    self._root_from_call(sf, node)
+        # factory idiom: a nested def returned by its enclosing function
+        # is a closure consumed under jit (objective/kernel factories)
+        for sf in self.files:
+            self._root_returned_closures(sf)
+
+    def _root_from_decorators(self, sf: SourceFile, node) -> None:
+        info = self.info_for(node)
+        for dec in node.decorator_list:
+            base = dec.func if isinstance(dec, ast.Call) else dec
+            target = sf.resolve(base)
+            if target in ("functools.partial", "partial") and isinstance(dec, ast.Call):
+                if dec.args:
+                    target = sf.resolve(dec.args[0])
+                    if target in TRACED_DECORATORS:
+                        self._mark(info, target)
+                        if info is not None:
+                            info.static_params = self._static_argnames(sf, dec)
+                continue
+            if target in TRACED_DECORATORS:
+                self._mark(info, target)
+                if info is not None and isinstance(dec, ast.Call):
+                    info.static_params = self._static_argnames(sf, dec)
+
+    def _root_from_call(self, sf: SourceFile, call: ast.Call) -> None:
+        target = sf.resolve(call.func)
+        # f.defvjp(fwd, bwd) / f.defjvp(...)
+        if isinstance(call.func, ast.Attribute) and call.func.attr in (
+            "defvjp",
+            "defjvp",
+            "defjvps",
+        ):
+            for arg in call.args:
+                for info in self.candidates(sf, arg):
+                    self._mark(info, "custom-vjp-rule")
+            return
+        if target is None:
+            return
+        tail = target.rsplit(".", 1)[-1]
+        is_entry = target in TRACE_ENTRY_PREFIXES or (
+            # tolerate re-exports (pl.pallas_call, sharding.shard_map, ...)
+            tail in ("pallas_call", "shard_map", "checkify")
+            and any(p.endswith("." + tail) for p in TRACE_ENTRY_PREFIXES)
+        )
+        if target in TRACED_BUNDLES or target.endswith(".BatchedObjective") or target == "BatchedObjective":
+            for arg in list(call.args) + [kw.value for kw in call.keywords]:
+                for info in self.candidates(sf, arg):
+                    self._mark(info, "objective-bundle")
+            return
+        if not is_entry:
+            return
+        statics = self._static_argnames(sf, call) if target == "jax.jit" else frozenset()
+        skip_kwargs = ("static_argnames", "axis_name", "mesh", "in_specs",
+                       "out_specs", "grid", "out_shape", "interpret")
+        for arg in list(call.args) + [
+            kw.value for kw in call.keywords if kw.arg not in skip_kwargs
+        ]:
+            for info in self.candidates(sf, arg):
+                self._mark(info, target)
+                if statics:
+                    info.static_params = info.static_params | statics
+
+    def _root_returned_closures(self, sf: SourceFile) -> None:
+        # for each function F, if it returns a Name bound to a nested
+        # def of F, mark that def traced ("factory closure")
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            nested = {
+                n.name: n
+                for n in ast.walk(node)
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) and n is not node
+            }
+            for ret in ast.walk(node):
+                if isinstance(ret, ast.Return) and isinstance(ret.value, ast.Name):
+                    inner = nested.get(ret.value.id)
+                    if inner is not None:
+                        self._mark(self.info_for(inner), "factory-closure")
+
+    # ------------------------------------------------------------------
+    def _build_edges(self) -> None:
+        for sf in self.files:
+            quals = qualname_index(sf.tree)
+            for node, _ in quals.items():
+                info = self.info_for(node)
+                if info is None:
+                    continue
+                callees = self.edges.setdefault(info.key, set())
+                body = node.body if not isinstance(node, ast.Lambda) else [node.body]
+                for stmt in body:
+                    for sub in ast.walk(stmt if isinstance(stmt, ast.AST) else node):
+                        # don't descend into nested function bodies: they
+                        # have their own entries; but a *reference* to a
+                        # nested/module function from traced code drags it in
+                        if isinstance(sub, ast.Name) and isinstance(
+                            sub.ctx, ast.Load
+                        ):
+                            callee = self.lookup(sf, sub.id)
+                            if callee is not None and callee.key != info.key:
+                                callees.add(callee.key)
+                        elif isinstance(sub, ast.Call):
+                            callee = self.resolve_callable(sf, sub.func)
+                            if callee is not None and callee.key != info.key:
+                                callees.add(callee.key)
+
+    def _close(self) -> None:
+        frontier = [k for k, info in self.funcs.items() if info.traced]
+        while frontier:
+            key = frontier.pop()
+            for callee in self.edges.get(key, ()):
+                info = self.funcs[callee]
+                if not info.traced:
+                    info.traced = True
+                    info.trace_reason = f"called-from:{key[1]}"
+                    frontier.append(callee)
+
+    # ------------------------------------------------------------------
+    def traced_functions(self) -> list[FuncInfo]:
+        return [info for info in self.funcs.values() if info.traced]

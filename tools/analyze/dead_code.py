@@ -1,0 +1,152 @@
+"""Pass 5: import-graph reachability / dead code.
+
+Builds the module-level import graph over ``src/repro`` and reports
+modules unreachable from the live roots: the ``repro.core`` /
+``repro.kernels`` packages and the entry-point scripts under
+``examples/`` and ``benchmarks/``.  Tests are deliberately *not* roots —
+a module only tests keep alive is exactly what this pass should surface.
+
+The quarantined ``repro.legacy`` tree (the seed-era LLM stack) is exempt
+from the unreachable report, but a non-legacy module importing it is a
+``legacy-import`` finding: the quarantine boundary is one-way.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analyze.base import LEGACY_PREFIX, Finding, Repo, SourceFile
+
+PASS_ID = "dead_code"
+
+ROOT_PACKAGES = ("repro.core", "repro.kernels")
+ENTRY_DIRS = ("examples/", "benchmarks/")
+
+
+def module_imports(sf: SourceFile) -> set[str]:
+    """Every ``repro.*`` module this file imports (incl. dynamic
+    ``importlib.import_module(f"repro.x.{name}")`` prefixes)."""
+    out: set[str] = set()
+    for target in sf.imports.values():
+        if target.startswith("repro"):
+            out.add(target)
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call):
+            target = sf.resolve(node.func) or ""
+            if target.endswith("import_module") and node.args:
+                arg = node.args[0]
+                if isinstance(arg, ast.JoinedStr):
+                    head = arg.values[0]
+                    if isinstance(head, ast.Constant) and str(
+                        head.value
+                    ).startswith("repro."):
+                        out.add(str(head.value).rstrip(".") + ".*")
+                elif isinstance(arg, ast.Constant) and str(
+                    arg.value
+                ).startswith("repro."):
+                    out.add(str(arg.value))
+    return out
+
+
+def run(repo: Repo) -> list[Finding]:
+    findings: list[Finding] = []
+    # module name -> SourceFile for everything under src/repro
+    modules: dict[str, SourceFile] = {
+        sf.module: sf for sf in repo.files("src/repro")
+    }
+
+    def resolve_import(target: str) -> set[str]:
+        """An import target may be a module, a symbol in a module, or a
+        dynamic prefix ``repro.x.*``."""
+        hits: set[str] = set()
+        if target.endswith(".*"):
+            prefix = target[:-2]
+            hits.update(m for m in modules if m.startswith(prefix))
+            return hits
+        if target in modules:
+            hits.add(target)
+        parent = target.rpartition(".")[0]
+        if parent in modules:
+            hits.add(parent)
+        return hits
+
+    # ---- reachability ------------------------------------------------
+    reachable: set[str] = set()
+    frontier: list[str] = []
+
+    def seed(sf: SourceFile) -> None:
+        for target in module_imports(sf):
+            for mod in resolve_import(target):
+                if mod not in reachable:
+                    reachable.add(mod)
+                    frontier.append(mod)
+
+    for name, sf in modules.items():
+        if name.startswith(ROOT_PACKAGES) and name in (
+            "repro.core", "repro.kernels"
+        ):
+            reachable.add(name)
+            frontier.append(name)
+    for sf in repo.files():
+        if sf.path.startswith(ENTRY_DIRS):
+            seed(sf)
+
+    while frontier:
+        sf = modules.get(frontier.pop())
+        if sf is not None:
+            seed(sf)
+
+    # package inits of reachable modules are reachable too
+    for mod in list(reachable):
+        parts = mod.split(".")
+        for i in range(1, len(parts)):
+            parent = ".".join(parts[:i])
+            if parent in modules:
+                reachable.add(parent)
+
+    # ---- findings ----------------------------------------------------
+    for name in sorted(modules):
+        sf = modules[name]
+        if name.startswith(LEGACY_PREFIX) or name == "repro":
+            continue
+        if name.startswith(ROOT_PACKAGES) and name in (
+            "repro.core", "repro.kernels"
+        ):
+            continue
+        if name not in reachable:
+            findings.append(
+                Finding(
+                    pass_id=PASS_ID,
+                    rule="unreachable-module",
+                    path=sf.path,
+                    line=1,
+                    message=(
+                        f"module `{name}` is unreachable from repro.core/"
+                        "repro.kernels/entry points — quarantine it under "
+                        "repro.legacy, delete it, or wire it in"
+                    ),
+                    context=name,
+                    snippet=name,
+                )
+            )
+
+    # one-way quarantine boundary
+    for name, sf in sorted(modules.items()):
+        if name.startswith(LEGACY_PREFIX):
+            continue
+        for target in module_imports(sf):
+            if target.startswith(LEGACY_PREFIX):
+                findings.append(
+                    Finding(
+                        pass_id=PASS_ID,
+                        rule="legacy-import",
+                        path=sf.path,
+                        line=1,
+                        message=(
+                            f"live module `{name}` imports quarantined "
+                            f"`{target}` — the legacy boundary is one-way"
+                        ),
+                        context=name,
+                        snippet=target,
+                    )
+                )
+    return findings

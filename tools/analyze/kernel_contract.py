@@ -1,0 +1,280 @@
+"""Pass 4: Pallas kernel contract.
+
+Every ``pl.pallas_call`` in the repo follows one shape discipline
+(docs/backends.md, kernels/poisson_elbo): a 1-D source-block grid,
+BlockSpecs whose index maps match the grid arity, tunable block/lane
+values threaded from ``kernels/tuning.KernelConfig``, and padded-lane
+tensors masked before any reduction.  Rules:
+
+  * ``grid-mismatch``      — a BlockSpec index-map lambda whose arity
+    differs from the grid tuple length, or whose returned index tuple
+    differs from the block-shape rank.
+  * ``out-arity``          — ``out_specs``/``out_shape`` sequences of
+    different lengths.
+  * ``literal-block``      — a magic block/lane integer literal
+    (8..512 powers of two) inside a BlockSpec shape, or a literal
+    ``block=``/``lane=`` kwarg at a kernel call site outside
+    ``kernels/tuning.py`` — these knobs must come from ``KernelConfig``.
+  * ``unmasked-reduction`` — a ``jnp.sum``/``max``/``mean``/``prod``
+    inside a kernel body whose operand has no ``jnp.where``/mask in its
+    lineage: padded lanes would leak into the reduction.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analyze.base import Finding, SourceFile, qualname_index
+from tools.analyze.callgraph import CallGraph
+
+PASS_ID = "kernel_contract"
+
+MAGIC_BLOCKS = {8, 16, 32, 64, 128, 256, 512}
+REDUCTIONS = {"sum", "max", "mean", "prod", "amax", "amin", "nanmax",
+              "nansum"}
+KNOB_KWARGS = {"block", "lane", "elbo_block", "render_block"}
+# files allowed to own literal knob values: the tuning module itself
+# (sweep grids + defaults) and the kernel modules' own BLOCK/LANE
+# module constants (Assign to UPPERCASE, handled below)
+KNOB_OWNER_SUFFIXES = ("kernels/tuning.py",)
+
+
+def run(cg: CallGraph) -> list[Finding]:
+    findings: list[Finding] = []
+    kernel_bodies: set[int] = set()
+    for sf in cg.files:
+        findings.extend(_check_file(sf, cg, kernel_bodies))
+    return findings
+
+
+def _check_file(
+    sf: SourceFile, cg: CallGraph, kernel_bodies: set[int]
+) -> list[Finding]:
+    findings: list[Finding] = []
+    quals = qualname_index(sf.tree)
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(sf.tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+
+    def context_of(node: ast.AST) -> str:
+        cur = node
+        while cur is not None:
+            if cur in quals:
+                return f"{sf.module}.{quals[cur]}"
+            cur = parents.get(cur)
+        return sf.module
+
+    def emit(rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        findings.append(
+            Finding(
+                pass_id=PASS_ID,
+                rule=rule,
+                path=sf.path,
+                line=line,
+                message=message,
+                context=context_of(node),
+                snippet=sf.source_line(line),
+            )
+        )
+
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        target = sf.resolve(node.func) or ""
+        tail = target.rsplit(".", 1)[-1]
+        if tail == "pallas_call":
+            _check_pallas_call(sf, cg, node, emit, kernel_bodies)
+        elif tail == "BlockSpec":
+            _check_blockspec_literals(sf, node, emit)
+        else:
+            _check_knob_kwargs(sf, node, emit)
+
+    # mask discipline inside every kernel body found so far in this file
+    for fnode in quals:
+        if id(fnode) in kernel_bodies and isinstance(
+            fnode, (ast.FunctionDef, ast.AsyncFunctionDef)
+        ):
+            findings.extend(_check_masking(sf, fnode, context_of))
+    return findings
+
+
+def _resolve_local(sf: SourceFile, cg: CallGraph, node: ast.expr,
+                   depth: int = 0) -> ast.expr:
+    """Follow simple local rebinding (``spec = pl.BlockSpec(...)``)."""
+    if depth > 4 or not isinstance(node, ast.Name):
+        return node
+    values = cg._assigns(sf, node.id)
+    if len(values) >= 1:
+        # all rebindings in this repo agree in shape; take the first
+        return _resolve_local(sf, cg, values[0], depth + 1)
+    return node
+
+
+def _spec_nodes(sf: SourceFile, cg: CallGraph, node: ast.expr) -> list[ast.Call]:
+    node = _resolve_local(sf, cg, node)
+    if isinstance(node, (ast.List, ast.Tuple)):
+        out = []
+        for e in node.elts:
+            out.extend(_spec_nodes(sf, cg, e))
+        return out
+    if isinstance(node, ast.Call):
+        tail = (sf.resolve(node.func) or "").rsplit(".", 1)[-1]
+        if tail == "BlockSpec":
+            return [node]
+    return []
+
+
+def _seq_len(sf: SourceFile, cg: CallGraph, node: ast.expr) -> int | None:
+    node = _resolve_local(sf, cg, node)
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return len(node.elts)
+    return None
+
+
+def _check_pallas_call(sf, cg, call, emit, kernel_bodies) -> None:
+    kwargs = {kw.arg: kw.value for kw in call.keywords if kw.arg}
+    # record kernel bodies for the masking check
+    if call.args:
+        for info in cg.candidates(sf, call.args[0]):
+            kernel_bodies.add(id(info.node))
+
+    grid_len = None
+    if "grid" in kwargs:
+        g = _resolve_local(sf, cg, kwargs["grid"])
+        if isinstance(g, ast.Tuple):
+            grid_len = len(g.elts)
+
+    specs: list[ast.Call] = []
+    for key in ("in_specs", "out_specs"):
+        if key in kwargs:
+            specs.extend(_spec_nodes(sf, cg, kwargs[key]))
+
+    for spec in specs:
+        args = list(spec.args)
+        shape = args[0] if args else None
+        index_map = args[1] if len(args) > 1 else None
+        for kw in spec.keywords:
+            if kw.arg == "index_map":
+                index_map = kw.value
+            elif kw.arg == "block_shape":
+                shape = kw.value
+        shape_len = len(shape.elts) if isinstance(shape, ast.Tuple) else None
+        if isinstance(index_map, ast.Lambda):
+            arity = len(index_map.args.args)
+            if grid_len is not None and arity != grid_len:
+                emit(
+                    "grid-mismatch",
+                    spec,
+                    f"BlockSpec index_map takes {arity} grid indices but "
+                    f"the grid is {grid_len}-dimensional",
+                )
+            ret = index_map.body
+            if isinstance(ret, ast.Tuple) and shape_len is not None and (
+                len(ret.elts) != shape_len
+            ):
+                emit(
+                    "grid-mismatch",
+                    spec,
+                    f"BlockSpec block shape has rank {shape_len} but its "
+                    f"index_map returns {len(ret.elts)} indices",
+                )
+        # literal-block check happens in the module-wide BlockSpec walk
+
+    if "out_specs" in kwargs and "out_shape" in kwargs:
+        n_specs = _seq_len(sf, cg, kwargs["out_specs"])
+        n_shapes = _seq_len(sf, cg, kwargs["out_shape"])
+        if n_specs is not None and n_shapes is not None and (
+            n_specs != n_shapes
+        ):
+            emit(
+                "out-arity",
+                call,
+                f"pallas_call declares {n_specs} out_specs but "
+                f"{n_shapes} out_shape entries",
+            )
+
+
+def _check_blockspec_literals(sf: SourceFile, spec: ast.Call, emit) -> None:
+    shape = spec.args[0] if spec.args else None
+    for kw in spec.keywords:
+        if kw.arg == "block_shape":
+            shape = kw.value
+    if not isinstance(shape, ast.Tuple):
+        return
+    for elt in shape.elts:
+        if isinstance(elt, ast.Constant) and elt.value in MAGIC_BLOCKS:
+            emit(
+                "literal-block",
+                elt,
+                f"literal block dim {elt.value} in a BlockSpec — thread it "
+                "from KernelConfig (kernels/tuning.py) so autotuning "
+                "stays in control",
+            )
+
+
+def _check_knob_kwargs(sf: SourceFile, call: ast.Call, emit) -> None:
+    if sf.path.endswith(KNOB_OWNER_SUFFIXES) or not sf.path.startswith("src/"):
+        return
+    for kw in call.keywords:
+        if kw.arg in KNOB_KWARGS and isinstance(kw.value, ast.Constant) and (
+            isinstance(kw.value.value, int)
+            and kw.value.value in MAGIC_BLOCKS
+        ):
+            emit(
+                "literal-block",
+                call,
+                f"literal `{kw.arg}={kw.value.value}` at a kernel call "
+                "site — pass the KernelConfig value instead",
+            )
+
+
+def _check_masking(sf: SourceFile, fnode, context_of) -> list[Finding]:
+    findings: list[Finding] = []
+    masked: set[str] = set()
+
+    def has_mask(expr: ast.expr) -> bool:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Call):
+                tail = (sf.resolve(n.func) or "").rsplit(".", 1)[-1]
+                if tail in ("where", "select", "masked_fill"):
+                    return True
+            if isinstance(n, ast.Name) and (
+                n.id in masked or "mask" in n.id or "valid" in n.id
+            ):
+                return True
+        return False
+
+    for stmt in ast.walk(fnode):
+        if isinstance(stmt, ast.Assign) and has_mask(stmt.value):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name):
+                    masked.add(tgt.id)
+        if not isinstance(stmt, ast.Call):
+            continue
+        target = sf.resolve(stmt.func) or ""
+        tail = target.rsplit(".", 1)[-1]
+        if tail not in REDUCTIONS or not target.startswith(
+            ("jax.numpy.", "numpy.")
+        ):
+            continue
+        operand = stmt.args[0] if stmt.args else None
+        if operand is None or has_mask(operand):
+            continue
+        line = stmt.lineno
+        findings.append(
+            Finding(
+                pass_id=PASS_ID,
+                rule="unmasked-reduction",
+                path=sf.path,
+                line=line,
+                message=(
+                    f"`{tail}` over a padded-lane tensor with no "
+                    "jnp.where/mask in its lineage — padded lanes leak "
+                    "into the reduction (mask first, see _lane_mask)"
+                ),
+                context=context_of(stmt),
+                snippet=sf.source_line(line),
+            )
+        )
+    return findings

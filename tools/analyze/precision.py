@@ -1,0 +1,247 @@
+"""Pass 3: precision policy.
+
+The ELBO objective subtracts ``x*(1/f + var/f^3)`` against 1 (the
+Poisson residual cancellation); docs/backends.md commits to f32 for
+everything upstream of that cancellation, with bf16 allowed only at the
+post-cancellation Hessian-assembly sites introduced in PR 6.  Rules:
+
+  * ``bf16-upstream``        — a bf16/f16 dtype token (``jnp.bfloat16``,
+    ``astype("bfloat16")``, ``dtype="float16"``...) anywhere in the
+    objective/kernel scope outside the whitelisted assembly functions.
+  * ``gemm-missing-preferred`` — an ``einsum``/``dot``/``matmul``/
+    ``dot_general`` with a bf16-tainted operand that does not pass
+    ``preferred_element_type`` (directly or via a ``**f32acc``-style dict
+    splat), which would let XLA accumulate in bf16.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analyze.base import Finding, Repo, SourceFile, qualname_index
+
+PASS_ID = "precision"
+
+# modules upstream of (or containing) the residual cancellation
+SCOPE_PREFIXES = (
+    "repro.kernels.poisson_elbo",
+    "repro.kernels.render",
+    "repro.core.elbo",
+    "repro.core.batched_elbo",
+    "repro.core.newton",
+    "repro.core.infer",
+    "repro.core.model",
+)
+
+# (module, function-qualname-component) pairs where bf16 is sanctioned:
+# the post-cancellation Hessian assembly (PR 6)
+WHITELIST = {
+    ("repro.core.batched_elbo", "_make_second_order"),
+    ("repro.kernels.poisson_elbo.ops", "poisson_elbo_hess"),
+    ("repro.kernels.poisson_elbo.poisson_elbo", "poisson_elbo_hess_pallas"),
+    ("repro.kernels.poisson_elbo.poisson_elbo", "_elbo_hess_kernel"),
+}
+
+LOW_DTYPE_ATTRS = {"jax.numpy.bfloat16", "jax.numpy.float16",
+                   "numpy.float16", "ml_dtypes.bfloat16"}
+LOW_DTYPE_STRINGS = {"bfloat16", "float16"}
+
+GEMM_TAILS = {"einsum", "dot", "matmul", "tensordot", "dot_general"}
+
+
+def run(repo: Repo) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in repo.src_files():
+        if not sf.module.startswith(SCOPE_PREFIXES):
+            continue
+        findings.extend(_check_file(sf))
+    return findings
+
+
+def _in_whitelist(module: str, qual: str) -> bool:
+    parts = qual.split(".")
+    return any(m == module and w in parts for m, w in WHITELIST)
+
+
+def _enclosing_qual(
+    node: ast.AST, parents: dict[ast.AST, ast.AST], quals: dict[ast.AST, str]
+) -> str:
+    cur = node
+    while cur is not None:
+        if cur in quals:
+            return quals[cur]
+        cur = parents.get(cur)
+    return "<module>"
+
+
+def _is_low_dtype(sf: SourceFile, node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and node.value in LOW_DTYPE_STRINGS:
+        return True
+    if isinstance(node, (ast.Attribute, ast.Name)):
+        return sf.resolve(node) in LOW_DTYPE_ATTRS
+    return False
+
+
+def _check_file(sf: SourceFile) -> list[Finding]:
+    findings: list[Finding] = []
+    quals = dict(qualname_index(sf.tree).items())
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(sf.tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+
+    def emit(rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        qual = _enclosing_qual(node, parents, quals)
+        findings.append(
+            Finding(
+                pass_id=PASS_ID,
+                rule=rule,
+                path=sf.path,
+                line=line,
+                message=message,
+                context=f"{sf.module}.{qual}",
+                snippet=sf.source_line(line),
+            )
+        )
+
+    # ---- rule 1: bf16 tokens outside the whitelist --------------------
+    for node in ast.walk(sf.tree):
+        if not _is_low_dtype(sf, node):
+            continue
+        qual = _enclosing_qual(node, parents, quals)
+        if _in_whitelist(sf.module, qual):
+            continue
+        token = (
+            node.value if isinstance(node, ast.Constant) else sf.resolve(node)
+        )
+        emit(
+            "bf16-upstream",
+            node,
+            f"low-precision dtype `{token}` upstream of the poisson_elbo "
+            "residual cancellation — f32 until after the cancellation "
+            "(docs/backends.md); whitelisted assembly sites live in "
+            "tools/analyze/precision.py",
+        )
+
+    # ---- rule 2: GEMMs on bf16 operands need preferred_element_type ---
+    # analyzed per *top-level* function so factory closures (sandwich,
+    # low, ...) share one taint environment
+    for node in sf.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            findings.extend(_GemmCheck(sf, node, emit).run())
+    return findings
+
+
+class _GemmCheck:
+    def __init__(self, sf: SourceFile, root, emit) -> None:
+        self.sf = sf
+        self.root = root
+        self.emit = emit
+        self.lowcasters: set[str] = set()   # callables that cast to bf16
+        self.tainted: set[str] = set()      # names holding bf16 operands
+        self.f32_dicts: set[str] = set()    # **splats carrying preferred_...
+
+    def _has_low_token(self, node: ast.AST) -> bool:
+        return any(_is_low_dtype(self.sf, n) for n in ast.walk(node))
+
+    def run(self) -> list[Finding]:
+        # 1. collect lowcaster callables and **f32acc dicts
+        for node in ast.walk(self.root):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and (
+                isinstance(node.targets[0], ast.Name)
+            ):
+                name = node.targets[0].id
+                val = node.value
+                if isinstance(val, (ast.Lambda, ast.IfExp)) and (
+                    self._has_low_token(val)
+                ):
+                    self.lowcasters.add(name)
+                if isinstance(val, ast.Call):
+                    tail = (self.sf.resolve(val.func) or "").rsplit(".", 1)[-1]
+                    if tail == "dict" and any(
+                        kw.arg == "preferred_element_type"
+                        for kw in val.keywords
+                    ):
+                        self.f32_dicts.add(name)
+                if isinstance(val, ast.Dict) and any(
+                    isinstance(k, ast.Constant)
+                    and k.value == "preferred_element_type"
+                    for k in val.keys
+                ):
+                    self.f32_dicts.add(name)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if node is not self.root and self._has_low_token(node):
+                    self.lowcasters.add(node.name)
+
+        # 2. taint names assigned through lowcasters or direct casts
+        for node in ast.walk(self.root):
+            if not isinstance(node, ast.Assign):
+                continue
+            if self._rhs_low(node.value):
+                for tgt in node.targets:
+                    self._bind(tgt)
+        # 3. check GEMMs
+        for node in ast.walk(self.root):
+            if isinstance(node, ast.Call):
+                self._check_gemm(node)
+        return []  # findings flow through self.emit
+
+    def _rhs_low(self, expr: ast.expr) -> bool:
+        if isinstance(expr, ast.Call):
+            func = expr.func
+            if isinstance(func, ast.Name) and func.id in self.lowcasters:
+                return True
+            if isinstance(func, ast.Attribute) and func.attr == "astype" and (
+                any(_is_low_dtype(self.sf, a) for a in expr.args)
+            ):
+                return True
+            # j1q, j2q = map(low, (j1q, j2q)) — taint through map()
+            if isinstance(func, ast.Name) and func.id == "map" and expr.args:
+                head = expr.args[0]
+                if isinstance(head, ast.Name) and head.id in self.lowcasters:
+                    return True
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            return any(self._rhs_low(e) for e in expr.elts)
+        if isinstance(expr, ast.IfExp):
+            return self._rhs_low(expr.body) or self._rhs_low(expr.orelse)
+        return False
+
+    def _bind(self, target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            self.tainted.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt)
+
+    def _operand_low(self, expr: ast.expr) -> bool:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Name) and n.id in self.tainted:
+                return True
+            if isinstance(n, ast.Call) and self._rhs_low(n):
+                return True
+        return False
+
+    def _check_gemm(self, call: ast.Call) -> None:
+        tail = (self.sf.resolve(call.func) or "").rsplit(".", 1)[-1]
+        if tail not in GEMM_TAILS:
+            return
+        if not any(self._operand_low(a) for a in call.args):
+            return
+        has_preferred = any(
+            kw.arg == "preferred_element_type"
+            or (
+                kw.arg is None
+                and isinstance(kw.value, ast.Name)
+                and kw.value.id in self.f32_dicts
+            )
+            for kw in call.keywords
+        )
+        if not has_preferred:
+            self.emit(
+                "gemm-missing-preferred",
+                call,
+                f"`{tail}` over a bf16 operand without "
+                "`preferred_element_type` — XLA may accumulate in bf16; "
+                "pass preferred_element_type=jnp.float32 (the **f32acc "
+                "idiom in batched_elbo)",
+            )

@@ -1,0 +1,318 @@
+"""Pass 2: SPMD uniformity.
+
+Two invariants from the negotiated-bucket protocol (PR 4,
+docs/scheduling.md):
+
+  * ``unknown-axis``      — every string-literal ``axis_name`` handed to a
+    collective (``psum``/``pmax``/``all_to_all``/``ppermute``/
+    ``axis_index``/...) or to ``shard_map`` specs must be one of the mesh
+    axes declared in ``parallel/sharding.py`` / ``launch/mesh.py``.
+  * ``per-shard-shape``   — inside any function that touches collectives,
+    a value produced by a *local* reduction (``jnp.sum(live)``,
+    ``count_nonzero``, ``axis_index``) must be negotiated through
+    ``psum``/``pmax`` before it may size an array, bound a loop, or feed a
+    ``reshape`` — otherwise shards disagree on shapes and ``shard_map``
+    deadlocks or miscompiles.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analyze.base import Finding, Repo, SourceFile, qualname_index
+
+PASS_ID = "spmd"
+
+AXIS_DECL_MODULES = ("repro.parallel.sharding", "repro.launch.mesh")
+
+COLLECTIVES = {
+    "psum", "pmax", "pmin", "pmean", "all_to_all", "ppermute",
+    "all_gather", "axis_index", "axis_size", "pshuffle", "psum_scatter",
+}
+# collective name -> positional index of axis_name
+AXIS_ARG_POS = {
+    "psum": 1, "pmax": 1, "pmin": 1, "pmean": 1, "all_gather": 1,
+    "all_to_all": 1, "ppermute": 1, "axis_index": 0, "axis_size": 0,
+    "psum_scatter": 1,
+}
+
+LOCAL_REDUCTIONS = {
+    "sum", "count_nonzero", "max", "min", "argmax", "argmin", "nonzero",
+}
+NEGOTIATORS = {"psum", "pmax", "pmin", "pmean"}
+# repo helpers that return negotiated/global quantities
+NEGOTIATOR_HELPERS = {"negotiated_bucket", "_axis_size", "axis_size",
+                      "negotiated_bucket_size"}
+
+SHAPE_CALLS = {
+    "zeros", "ones", "full", "empty", "arange", "linspace", "eye",
+    "zeros_like_shape", "broadcast_to", "reshape", "tile",
+}
+
+
+def declared_axes(repo: Repo) -> set[str]:
+    axes: set[str] = set()
+    for module in AXIS_DECL_MODULES:
+        sf = repo.by_module(module)
+        if sf is None:
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                target = sf.resolve(node.func) or ""
+                tail = target.rsplit(".", 1)[-1]
+                if tail in ("PartitionSpec", "P", "Mesh", "make_mesh",
+                            "NamedSharding"):
+                    for arg in ast.walk(node):
+                        if isinstance(arg, ast.Constant) and isinstance(
+                            arg.value, str
+                        ):
+                            axes.add(arg.value)
+            elif isinstance(node, (ast.Tuple, ast.List)):
+                vals = [
+                    e.value
+                    for e in node.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                ]
+                # an axes tuple is short strings only, e.g. ("pod", "data")
+                if vals and len(vals) == len(node.elts) and all(
+                    len(v) <= 8 and v.isidentifier() for v in vals
+                ):
+                    axes.update(vals)
+    return axes
+
+
+def run(repo: Repo) -> list[Finding]:
+    axes = declared_axes(repo)
+    findings: list[Finding] = []
+    for sf in repo.src_files():
+        findings.extend(_check_file(sf, axes))
+    return findings
+
+
+def _collective_tail(sf: SourceFile, call: ast.Call) -> str | None:
+    target = sf.resolve(call.func)
+    if target is None:
+        return None
+    tail = target.rsplit(".", 1)[-1]
+    if tail in COLLECTIVES and (
+        target.startswith("jax.lax.") or target == tail
+        or target.startswith("repro.parallel")
+    ):
+        return tail
+    return None
+
+
+def _check_file(sf: SourceFile, axes: set[str]) -> list[Finding]:
+    findings: list[Finding] = []
+    quals = qualname_index(sf.tree)
+
+    def emit(rule: str, node: ast.AST, message: str, context: str) -> None:
+        line = getattr(node, "lineno", 0)
+        findings.append(
+            Finding(
+                pass_id=PASS_ID,
+                rule=rule,
+                path=sf.path,
+                line=line,
+                message=message,
+                context=context,
+                snippet=sf.source_line(line),
+            )
+        )
+
+    # ---- axis-name literals anywhere in the file ----------------------
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        tail = _collective_tail(sf, node)
+        if tail is None:
+            continue
+        literal = None
+        for kw in node.keywords:
+            if kw.arg in ("axis_name", "axis"):
+                literal = kw.value
+        pos = AXIS_ARG_POS.get(tail)
+        if literal is None and pos is not None and len(node.args) > pos:
+            literal = node.args[pos]
+        if (
+            isinstance(literal, ast.Constant)
+            and isinstance(literal.value, str)
+            and axes
+            and literal.value not in axes
+        ):
+            emit(
+                "unknown-axis",
+                node,
+                f"collective `{tail}` uses axis {literal.value!r}, which is "
+                f"not a declared mesh axis {sorted(axes)}",
+                context=sf.module,
+            )
+
+    # ---- per-shard values in shape positions, per function ------------
+    for fnode, qual in quals.items():
+        if isinstance(fnode, ast.Lambda):
+            continue
+        uses_collectives = any(
+            isinstance(n, ast.Call) and _collective_tail(sf, n)
+            for n in ast.walk(fnode)
+        )
+        if not uses_collectives:
+            continue
+        findings.extend(
+            _ShardShape(sf, f"{sf.module}.{qual}").check(fnode)
+        )
+    return findings
+
+
+class _ShardShape:
+    """Ordered single-sweep taint: per-shard names vs negotiated names."""
+
+    def __init__(self, sf: SourceFile, context: str):
+        self.sf = sf
+        self.context = context
+        self.per_shard: set[str] = set()
+        self.findings: list[Finding] = []
+
+    def _emit(self, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        self.findings.append(
+            Finding(
+                pass_id=PASS_ID,
+                rule="per-shard-shape",
+                path=self.sf.path,
+                line=line,
+                message=message,
+                context=self.context,
+                snippet=self.sf.source_line(line),
+            )
+        )
+
+    def _tail(self, call: ast.Call) -> str:
+        target = self.sf.resolve(call.func) or ""
+        return target.rsplit(".", 1)[-1]
+
+    def _classify(self, expr: ast.expr) -> str:
+        """'per-shard' | 'global' | 'neutral' for an RHS expression."""
+        if isinstance(expr, ast.Call):
+            tail = self._tail(expr)
+            if tail in NEGOTIATORS or tail in NEGOTIATOR_HELPERS:
+                return "global"
+            if tail == "axis_index":
+                return "per-shard"
+            if tail in LOCAL_REDUCTIONS:
+                # local reduction of shard-resident data
+                return "per-shard"
+            args = list(expr.args) + [kw.value for kw in expr.keywords]
+            if any(self._classify(a) == "per-shard" for a in args):
+                return "per-shard"
+            return "neutral"
+        if isinstance(expr, ast.Name):
+            return "per-shard" if expr.id in self.per_shard else "neutral"
+        if isinstance(expr, ast.BinOp):
+            kinds = {self._classify(expr.left), self._classify(expr.right)}
+            return "per-shard" if "per-shard" in kinds else "neutral"
+        if isinstance(expr, ast.UnaryOp):
+            return self._classify(expr.operand)
+        if isinstance(expr, ast.IfExp):
+            kinds = {self._classify(expr.body), self._classify(expr.orelse)}
+            return "per-shard" if "per-shard" in kinds else "neutral"
+        if isinstance(expr, ast.Attribute) and isinstance(
+            expr.value, ast.Name
+        ):
+            # x.shape etc on a per-shard *count* doesn't exist; attrs of
+            # arrays are static — neutral
+            return "neutral"
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            if any(self._classify(e) == "per-shard" for e in expr.elts):
+                return "per-shard"
+            return "neutral"
+        return "neutral"
+
+    def _mentions_per_shard(self, expr: ast.expr) -> bool:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Name) and n.id in self.per_shard:
+                return True
+            if isinstance(n, ast.Call) and self._tail(n) == "axis_index":
+                return True
+        return False
+
+    def check(self, fnode: ast.AST) -> list[Finding]:
+        body = getattr(fnode, "body", [])
+        self._sweep(body)
+        return self.findings
+
+    def _sweep(self, body: list[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # nested defs share the enclosing taint environment
+                self._sweep(stmt.body)
+                continue
+            if isinstance(stmt, ast.Assign):
+                kind = self._classify(stmt.value)
+                for tgt in stmt.targets:
+                    self._bind(tgt, kind)
+            elif isinstance(stmt, ast.AugAssign):
+                if self._classify(stmt.value) == "per-shard":
+                    self._bind(stmt.target, "per-shard")
+            elif isinstance(stmt, (ast.If, ast.While, ast.For)):
+                if isinstance(stmt, ast.For) and isinstance(
+                    stmt.iter, ast.Call
+                ) and self._tail(stmt.iter) == "range":
+                    if any(
+                        self._mentions_per_shard(a) for a in stmt.iter.args
+                    ):
+                        self._emit(
+                            stmt,
+                            "loop bound computed from a per-shard value — "
+                            "negotiate it with psum/pmax first",
+                        )
+                self._sweep(stmt.body)
+                self._sweep(getattr(stmt, "orelse", []))
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                self._sweep(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                self._sweep(stmt.body)
+                for h in stmt.handlers:
+                    self._sweep(h.body)
+                self._sweep(stmt.orelse)
+                self._sweep(stmt.finalbody)
+            # shape-position checks on every expression in the stmt
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Call):
+                    self._check_shape_call(node)
+
+    def _bind(self, target: ast.AST, kind: str) -> None:
+        if isinstance(target, ast.Name):
+            if kind == "per-shard":
+                self.per_shard.add(target.id)
+            else:
+                self.per_shard.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt, kind)
+
+    def _check_shape_call(self, call: ast.Call) -> None:
+        tail = self._tail(call)
+        shape_args: list[ast.expr] = []
+        if tail in ("zeros", "ones", "full", "empty", "arange", "eye"):
+            if call.args:
+                shape_args.append(call.args[0])
+            for kw in call.keywords:
+                if kw.arg == "shape":
+                    shape_args.append(kw.value)
+        elif tail in ("reshape", "broadcast_to", "tile"):
+            target = self.sf.resolve(call.func) or ""
+            if target.startswith(("jax.numpy.", "numpy.")):
+                shape_args.extend(call.args[1:])  # jnp.reshape(x, shape)
+            else:
+                shape_args.extend(call.args)      # x.reshape(*shape)
+        elif tail == "fori_loop":
+            shape_args.extend(call.args[:2])
+        for arg in shape_args:
+            if self._mentions_per_shard(arg):
+                self._emit(
+                    call,
+                    f"`{tail}` sized by a per-shard value — shards will "
+                    "disagree; negotiate via psum/pmax "
+                    "(see collectives.negotiated_bucket)",
+                )
+                return

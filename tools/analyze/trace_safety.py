@@ -1,0 +1,312 @@
+"""Pass 1: trace-safety.
+
+Inside every function reachable from a ``jax.jit`` / ``pl.pallas_call``
+call site (see :mod:`tools.analyze.callgraph`), flag operations that
+force a traced value back onto the host:
+
+  * ``host-cast``           — ``float()``/``int()``/``bool()``/``complex()``,
+    ``.item()``/``.tolist()`` on a traced value
+  * ``numpy-on-traced``     — ``np.asarray``/``np.array``/any ``numpy.*``
+    call fed a traced value
+  * ``python-control-flow`` — Python ``if``/``while``/``for``/``assert``
+    whose condition (or iterable) derives from a traced value
+  * ``side-effect``         — ``print``/``open``/environ mutation inside
+    traced code
+
+The taint seed is the function's parameters minus ``static_argnames``;
+shape/dtype/ndim attribute reads and ``x is None`` checks are untainted,
+matching the repo's jit idioms.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analyze.base import Finding, SourceFile
+from tools.analyze.callgraph import CallGraph, FuncInfo
+
+PASS_ID = "trace_safety"
+
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "at"}
+HOST_CASTS = {"float", "int", "bool", "complex"}
+HOST_METHODS = {"item", "tolist", "block_until_ready"}
+UNTAINTING_CALLS = {"len", "isinstance", "type", "hasattr", "getattr", "id"}
+SIDE_EFFECT_CALLS = {"print", "open", "input", "breakpoint"}
+# jax.debug.* is the sanctioned way to print under trace
+ALLOWED_EFFECT_PREFIXES = ("jax.debug.",)
+
+
+def run(cg: CallGraph) -> list[Finding]:
+    findings: list[Finding] = []
+    for info in cg.traced_functions():
+        findings.extend(_check_function(info))
+    return findings
+
+
+_SCALAR_ANNOTATIONS = {"int", "bool", "str", "float", "bytes"}
+
+
+def _static_annotation(annotation: ast.expr | None) -> bool:
+    """True for scalar-typed params (``block: int | None``): static config
+    the caller closes over at trace time, not traced arrays."""
+    if annotation is None:
+        return False
+    try:
+        text = ast.unparse(annotation)
+    except Exception:
+        return False
+    for ch in "|[],":
+        text = text.replace(ch, " ")
+    tokens = set(text.split()) - {"None", "Optional", "Union"}
+    return bool(tokens) and tokens <= _SCALAR_ANNOTATIONS
+
+
+def _scalar_default(default: ast.expr | None) -> bool:
+    return isinstance(default, ast.Constant) and isinstance(
+        default.value, (bool, int, float, str)
+    )
+
+
+def _check_function(info: FuncInfo) -> list[Finding]:
+    node = info.node
+    if isinstance(node, ast.Lambda):
+        return []  # single expression; the checks below need statements
+    analyzer = _Taint(info)
+    analyzer.visit_body(node.body)
+    return analyzer.findings
+
+
+class _Taint:
+    def __init__(self, info: FuncInfo):
+        self.info = info
+        self.sf: SourceFile = info.sf
+        self.findings: list[Finding] = []
+        self.tainted: set[str] = set()
+        node = info.node
+        args = node.args
+        positional = list(args.posonlyargs) + list(args.args)
+        defaults: dict[str, ast.expr] = {}
+        for a, d in zip(positional[::-1], args.defaults[::-1]):
+            defaults[a.arg] = d
+        for a, d in zip(args.kwonlyargs, args.kw_defaults):
+            if d is not None:
+                defaults[a.arg] = d
+        for a in (
+            positional
+            + list(args.kwonlyargs)
+            + ([args.vararg] if args.vararg else [])
+            + ([args.kwarg] if args.kwarg else [])
+        ):
+            if a.arg in info.static_params or a.arg == "self":
+                continue
+            if _static_annotation(a.annotation) or _scalar_default(
+                defaults.get(a.arg)
+            ):
+                # scalar-annotated config params (block: int | None,
+                # interpret: bool = False, ...) are static at trace time
+                continue
+            self.tainted.add(a.arg)
+
+    # -- helpers -------------------------------------------------------
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        line = getattr(node, "lineno", 0)
+        self.findings.append(
+            Finding(
+                pass_id=PASS_ID,
+                rule=rule,
+                path=self.sf.path,
+                line=line,
+                message=message,
+                context=f"{self.sf.module}.{self.info.qualname}",
+                snippet=self.sf.source_line(line),
+            )
+        )
+
+    def is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.BinOp):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_tainted(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not None` is the sanctioned static check
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return self.is_tainted(node.left) or any(
+                self.is_tainted(c) for c in node.comparators
+            )
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        if isinstance(node, ast.Call):
+            return self._call_taint(node)
+        return False
+
+    def _call_taint(self, call: ast.Call) -> bool:
+        target = self.sf.resolve(call.func)
+        base = (target or "").split(".")[0]
+        if target in UNTAINTING_CALLS or base in UNTAINTING_CALLS:
+            return False
+        if target in HOST_CASTS:
+            # result is a concrete python scalar; the *flag* happens in
+            # visit-side checks, not here
+            return False
+        args = list(call.args) + [kw.value for kw in call.keywords]
+        return any(self.is_tainted(a) for a in args)
+
+    def _assign(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._assign(elt, tainted)
+        elif isinstance(target, ast.Starred):
+            self._assign(target.value, tainted)
+        # attribute/subscript stores don't create new taint roots
+
+    # -- statement walk ------------------------------------------------
+    def visit_body(self, body: list[ast.stmt]) -> None:
+        for stmt in body:
+            self.visit_stmt(stmt)
+
+    def visit_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # nested defs are analyzed as their own traced entries
+        if isinstance(stmt, ast.Assign):
+            self._scan_expr(stmt.value)
+            tainted = self.is_tainted(stmt.value)
+            for target in stmt.targets:
+                self._assign(target, tainted)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._scan_expr(stmt.value)
+            self._assign(stmt.target, self.is_tainted(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            self._scan_expr(stmt.value)
+            if self.is_tainted(stmt.value):
+                self._assign(stmt.target, True)
+        elif isinstance(stmt, ast.If):
+            self._scan_expr(stmt.test)
+            if self.is_tainted(stmt.test):
+                self._emit(
+                    "python-control-flow",
+                    stmt,
+                    "Python `if` on a traced condition — use jnp.where/lax.cond",
+                )
+            self.visit_body(stmt.body)
+            self.visit_body(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            self._scan_expr(stmt.test)
+            if self.is_tainted(stmt.test):
+                self._emit(
+                    "python-control-flow",
+                    stmt,
+                    "Python `while` on a traced condition — use lax.while_loop",
+                )
+            self.visit_body(stmt.body)
+            self.visit_body(stmt.orelse)
+        elif isinstance(stmt, ast.For):
+            self._scan_expr(stmt.iter)
+            if self.is_tainted(stmt.iter):
+                self._emit(
+                    "python-control-flow",
+                    stmt,
+                    "Python `for` over a traced iterable — use lax.scan/fori_loop",
+                )
+            self._assign(stmt.target, self.is_tainted(stmt.iter))
+            self.visit_body(stmt.body)
+            self.visit_body(stmt.orelse)
+        elif isinstance(stmt, ast.Assert):
+            self._scan_expr(stmt.test)
+            if self.is_tainted(stmt.test):
+                self._emit(
+                    "python-control-flow",
+                    stmt,
+                    "assert on a traced value — use checkify.check",
+                )
+        elif isinstance(stmt, ast.Return) and stmt.value is not None:
+            self._scan_expr(stmt.value)
+        elif isinstance(stmt, ast.Expr):
+            self._scan_expr(stmt.value)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._scan_expr(item.context_expr)
+            self.visit_body(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.visit_body(stmt.body)
+            for handler in stmt.handlers:
+                self.visit_body(handler.body)
+            self.visit_body(stmt.orelse)
+            self.visit_body(stmt.finalbody)
+        elif isinstance(stmt, (ast.Raise, ast.Pass, ast.Break, ast.Continue)):
+            pass
+        elif isinstance(stmt, (ast.Import, ast.ImportFrom, ast.Global, ast.Nonlocal)):
+            pass
+        elif isinstance(stmt, ast.Delete):
+            pass
+        else:
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self._scan_expr(child)
+
+    # -- expression-level checks --------------------------------------
+    def _scan_expr(self, expr: ast.expr) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, (ast.Lambda,)):
+                continue
+            if isinstance(node, ast.Call):
+                self._check_call(node)
+
+    def _check_call(self, call: ast.Call) -> None:
+        target = self.sf.resolve(call.func)
+        args = list(call.args) + [kw.value for kw in call.keywords]
+        any_tainted = any(self.is_tainted(a) for a in args)
+
+        if target in HOST_CASTS and any_tainted:
+            self._emit(
+                "host-cast",
+                call,
+                f"`{target}()` on a traced value forces host sync — "
+                "keep it as an array or mark the argument static",
+            )
+            return
+        if (
+            isinstance(call.func, ast.Attribute)
+            and call.func.attr in HOST_METHODS
+            and self.is_tainted(call.func.value)
+        ):
+            self._emit(
+                "host-cast",
+                call,
+                f"`.{call.func.attr}()` on a traced value forces host sync",
+            )
+            return
+        if target is not None and target.split(".")[0] == "numpy" and any_tainted:
+            self._emit(
+                "numpy-on-traced",
+                call,
+                f"`{target}` on a traced value falls back to host numpy — use jnp",
+            )
+            return
+        if target in SIDE_EFFECT_CALLS:
+            # even print(static) is flagged: it fires once per retrace,
+            # not per step, which is never what the author meant
+            self._emit(
+                "side-effect",
+                call,
+                f"`{target}()` inside traced code — use jax.debug.print or hoist "
+                "to the host caller",
+            )
