@@ -1,7 +1,9 @@
-"""Sharded, asynchronous, atomic checkpointing with elastic restore.
+"""Sharded, asynchronous, atomic checkpointing with elastic restore and
+content integrity.
 
 Layout per step:  <dir>/step_<k>.tmp/ → (atomic rename) → <dir>/step_<k>/
-    manifest.json         tree structure, shapes, dtypes, step
+    manifest.json         tree structure, shapes, dtypes, step, and a
+                          per-leaf SHA-256 over the raw array bytes
     arr_<i>.npy           one file per leaf (process-local shard on
                           multi-host; full array single-host)
     COMMITTED             sentinel written last — a checkpoint without it
@@ -12,12 +14,20 @@ Fault-tolerance contract (paper-scale runs):
     the filesystem;
   * the rename+sentinel makes partial writes invisible, so a preemption
     mid-save can never corrupt the restore path;
+  * the sentinel guards *completeness*, the per-leaf checksums guard
+    *content*: a truncated leaf, a flipped byte, or a missing file is
+    detected on restore (``CheckpointCorruptError``) and
+    ``restore_latest`` falls back to the next-older committed step
+    instead of crashing (the corrupt directory is renamed to
+    ``step_<k>.corrupt`` so later scans skip it);
   * ``restore`` reshards to whatever mesh/sharding the *new* job uses
     (elastic scaling: restart on a different device count just works);
-  * ``latest_step`` scans for the newest COMMITTED checkpoint.
+  * ``latest_step`` scans for the newest COMMITTED checkpoint, ignoring
+    stray non-numeric ``step_*`` directories.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -29,9 +39,21 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class CheckpointCorruptError(RuntimeError):
+    """A committed checkpoint failed integrity verification (unreadable
+    leaf, checksum mismatch, manifest damage).  Distinct from the
+    *structural* ``ValueError`` raised when the checkpoint simply does
+    not match the template tree — corruption is recoverable by falling
+    back to an older step; a structure mismatch is not."""
+
+
 def _tree_paths(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
+
+
+def _leaf_sha256(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
 
 
 class Checkpointer:
@@ -54,6 +76,7 @@ class Checkpointer:
             "num_leaves": len(host_leaves),
             "shapes": [list(l.shape) for l in host_leaves],
             "dtypes": [str(l.dtype) for l in host_leaves],
+            "sha256": [_leaf_sha256(l) for l in host_leaves],
             "time": time.time(),
         }
 
@@ -98,29 +121,82 @@ class Checkpointer:
     def steps(self) -> list[int]:
         out = []
         for name in os.listdir(self.dir):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                if os.path.exists(os.path.join(self.dir, name, "COMMITTED")):
-                    out.append(int(name.split("_")[1]))
+            if not name.startswith("step_") or name.endswith(".tmp"):
+                continue
+            try:
+                step = int(name.split("_", 1)[1])
+            except ValueError:
+                continue    # stray step_abc / step_5.corrupt directories
+            if os.path.exists(os.path.join(self.dir, name, "COMMITTED")):
+                out.append(step)
         return sorted(out)
 
     def latest_step(self) -> int | None:
         steps = self.steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int, template):
+    def _read_manifest(self, path: str) -> dict | None:
+        """The parsed manifest, or None for pre-integrity checkpoints
+        written before the manifest carried checksums (still restorable,
+        just unverifiable)."""
+        mpath = os.path.join(path, "manifest.json")
+        if not os.path.exists(mpath):
+            return None
+        try:
+            with open(mpath) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointCorruptError(
+                f"unreadable manifest at {mpath}: {e}") from e
+
+    def restore(self, step: int, template, verify: bool = True):
         """Restore into the sharding/dtype layout of ``template``.
 
         ``template`` may be arrays or ShapeDtypeStructs with ``.sharding``;
         elastic restarts pass a template built on the *new* mesh and each
         leaf is device_put to its new sharding.
+
+        With ``verify=True`` every leaf is checked against the manifest
+        (readable, recorded shape/dtype, SHA-256 over the raw bytes);
+        any mismatch raises ``CheckpointCorruptError``.  A checkpoint
+        whose *structure* disagrees with the template (leaf count, leaf
+        shapes) raises ``ValueError`` — that is a changed state
+        definition, not disk corruption, and no older step will fix it.
         """
         path = os.path.join(self.dir, f"step_{step}")
         if not os.path.exists(os.path.join(path, "COMMITTED")):
             raise FileNotFoundError(f"no committed checkpoint at {path}")
         leaves, treedef = _tree_paths(template)
+        manifest = self._read_manifest(path)
+        if manifest is not None and manifest.get("num_leaves") != len(leaves):
+            raise ValueError(
+                f"checkpoint step {step} has {manifest.get('num_leaves')} "
+                f"leaves but the template tree has {len(leaves)} — the "
+                "state structure changed between save and restore "
+                "(e.g. a new slab field); this checkpoint cannot be "
+                "restored into this template")
+        sums = (manifest or {}).get("sha256")
         out = []
         for i, tmpl in enumerate(leaves):
-            arr = np.load(os.path.join(path, f"arr_{i}.npy"))
+            fpath = os.path.join(path, f"arr_{i}.npy")
+            try:
+                arr = np.load(fpath)
+            except Exception as e:   # missing, truncated, mangled header
+                raise CheckpointCorruptError(
+                    f"leaf {i} of step {step} unreadable: {e}") from e
+            if verify and manifest is not None:
+                rec_shape = tuple(manifest["shapes"][i])
+                rec_dtype = manifest["dtypes"][i]
+                if tuple(arr.shape) != rec_shape or \
+                        str(arr.dtype) != rec_dtype:
+                    raise CheckpointCorruptError(
+                        f"leaf {i} of step {step}: loaded "
+                        f"{arr.dtype}{list(arr.shape)} but manifest "
+                        f"recorded {rec_dtype}{list(rec_shape)}")
+                if sums is not None and _leaf_sha256(arr) != sums[i]:
+                    raise CheckpointCorruptError(
+                        f"leaf {i} of step {step}: SHA-256 mismatch "
+                        "(bit corruption)")
             if tuple(arr.shape) != tuple(tmpl.shape):
                 raise ValueError(
                     f"leaf {i}: checkpoint shape {arr.shape} != template "
@@ -132,3 +208,34 @@ class Checkpointer:
             else:
                 out.append(jnp.asarray(arr, dtype))
         return jax.tree_util.tree_unflatten(treedef, out)
+
+    def quarantine_step(self, step: int) -> None:
+        """Rename a corrupt checkpoint to ``step_<k>.corrupt`` so it
+        never re-enters ``steps()`` scans (and a future save of the same
+        step number does not collide with the damaged directory)."""
+        path = os.path.join(self.dir, f"step_{step}")
+        dest = path + ".corrupt"
+        if os.path.exists(dest):
+            shutil.rmtree(dest, ignore_errors=True)
+        if os.path.exists(path):
+            os.rename(path, dest)
+
+    def restore_latest(self, template, *,
+                       log=lambda s: None):
+        """Restore the newest committed checkpoint that passes
+        verification, falling back step by step past corrupted ones.
+
+        Returns ``(state, step, corrupt_skipped)`` or ``None`` when no
+        committed checkpoint survives.  Structural mismatches
+        (``ValueError``) propagate — an older step cannot fix those.
+        """
+        skipped = 0
+        for step in reversed(self.steps()):
+            try:
+                return self.restore(step, template), step, skipped
+            except (CheckpointCorruptError, FileNotFoundError) as e:
+                log(f"checkpoint step {step} corrupt ({e}); "
+                    "falling back to an older step")
+                self.quarantine_step(step)
+                skipped += 1
+        return None

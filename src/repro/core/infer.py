@@ -49,6 +49,23 @@ from repro.parallel import collectives, sharding
 from repro.runtime.scheduler import DynamicScheduler, RoundRecord
 
 
+# Per-source fit quality (int8; carried into the pipeline's catalog slab
+# and stitch output so downstream consumers can filter degraded fits):
+# 0 is a nominal fit; 1..3 name the degradation-ladder rung that
+# recovered the source after a non-finite harvest; QUALITY_FAILED marks
+# sources no rung could fit (theta reset to the seed catalog, never
+# reported converged).
+QUALITY_OK = 0
+QUALITY_REF = 1          # refit on the "ref" backend
+QUALITY_F32 = 2          # + forced f32 end-to-end
+QUALITY_CAUTIOUS = 3     # + shrunk initial trust radius
+QUALITY_FAILED = 4
+QUALITY_LABELS = {QUALITY_OK: "ok", QUALITY_REF: "ref",
+                  QUALITY_F32: "ref+f32",
+                  QUALITY_CAUTIOUS: "ref+f32+small-tr",
+                  QUALITY_FAILED: "failed"}
+
+
 @dataclass
 class InferenceStats:
     rounds: int
@@ -72,6 +89,18 @@ class InferenceStats:
     # REPRO_CHECKIFY_ERRORS) or whose post-segment host scan found
     # non-finite outputs.  Always empty when the mode is off.
     checkify_errors: list = dataclass_field(default_factory=list)
+    # [S] int8 per-source quality flags (QUALITY_* above); zeros for a
+    # clean run
+    quality: np.ndarray | None = None
+    # sources harvested as non-finite out of the main Newton segments
+    # (each then walked the degradation ladder)
+    harvested: int = 0
+
+    @property
+    def degraded(self) -> int:
+        """Sources that needed any degradation-ladder rung (or failed)."""
+        return 0 if self.quality is None else int((self.quality
+                                                   > QUALITY_OK).sum())
 
     @property
     def measured_imbalance(self) -> np.ndarray:
@@ -237,6 +266,7 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
                   adaptive: bool = False,
                   scheduler: DynamicScheduler | None = None,
                   compact_every: int | None = None,
+                  chaos: Any = None, chaos_tag: Any = 0,
                   progress: Any = None):
     """Run Celeste VI over a full field.  Returns (thetas [S, D], stats).
 
@@ -300,6 +330,21 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
     ``stats.checkify_errors`` instead of propagating NaNs silently.  The
     fit loop itself cannot be checkify-functionalized (vmapped
     while-loop); see docs/static_analysis.md.
+
+    **Graceful degradation** (docs/fault_tolerance.md): after every
+    Newton segment the result rows are harvested for non-finite
+    theta/value/gradient (``newton.nonfinite_rows``); harvested sources
+    are masked out of the batch — their poison never lands in ``thetas``
+    — and refit through a three-rung degradation ladder (restart from
+    the seed theta on the ``ref`` backend → forced f32 → shrunk initial
+    trust radius).  The rung that recovered each source lands in
+    ``stats.quality`` (``QUALITY_*``); sources no rung could fit keep
+    their seed theta with ``QUALITY_FAILED`` and are never reported
+    converged.  A clean run takes none of these paths and its outputs
+    are bit-identical to a build without them.  ``chaos`` (a
+    ``runtime/chaos.ChaosHarness``) may additionally inject non-finite
+    rows deterministically per ``(chaos_tag, source id)`` to exercise the
+    harvest.
     """
     field = int(images.shape[-1])
     if patch > field:
@@ -315,7 +360,8 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
                 InferenceStats(rounds=0, total_sources=0, converged=0,
                                iters=np.zeros(0, np.int64),
                                elbo_values=np.zeros(0, np.float64),
-                               predicted_imbalance=0.0, adaptive=adaptive))
+                               predicted_imbalance=0.0, adaptive=adaptive,
+                               quality=np.zeros(0, np.int8)))
 
     # ---- phase 1+2: images & catalog in memory, neighbor backgrounds ----
     def neighbor_background(catalog, positions):
@@ -338,6 +384,9 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
 
     thetas = jax.jit(jax.vmap(
         lambda src: elbo.init_theta(src, priors)))(init_catalog)
+    # seed snapshot: degradation-ladder refits (and failed sources)
+    # restart from here, never from a possibly-poisoned partial fit
+    thetas0 = thetas
 
     # ---- scheduling (decomposition scheme) ----
     def catalog_features(catalog):
@@ -476,6 +525,11 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
     iters = np.zeros(s, np.int64)
     values = np.zeros(s, np.float64)
     conv = np.zeros(s, bool)
+    # global ids harvested as non-finite in the CURRENT pass; routed
+    # through the degradation ladder after the rounds finish.  Cleared at
+    # each pass start — a later pass refits every source, so only the
+    # final pass's harvest needs rescue.
+    poisoned: set[int] = set()
     history: list[RoundRecord] = []
     bucket_records: list[newton.BucketRecord] = []
     rounds_done = 0
@@ -562,12 +616,27 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
             gn_seg = np.asarray(res.grad_norm)
             rad_seg = np.asarray(res.radius)
             seg_conv = np.asarray(res.converged) | (gn_seg < gtol)
-            thetas = thetas.at[jnp.asarray(gids)].set(
-                res.theta.reshape(num_shards * w, -1)[valid.reshape(-1)])
+            # --- non-finite harvest: poisoned rows never land in thetas;
+            # they leave the batch here and walk the degradation ladder
+            # after the rounds finish ---
+            bad2d = newton.nonfinite_rows(res) & valid
+            if chaos is not None and gids.size:
+                inj = np.zeros(cur.shape, bool)
+                inj[valid] = chaos.newton_rows(chaos_tag, gids)
+                bad2d |= inj
+            ok2d = valid & ~bad2d
+            okg = cur[ok2d]
+            thetas = thetas.at[jnp.asarray(okg)].set(
+                res.theta.reshape(num_shards * w, -1)[ok2d.reshape(-1)])
             round_iters[gids] += it_seg[valid]
             src_shard[gids] = np.nonzero(valid)[0]
-            values[gids] = np.asarray(res.value)[valid]
-            conv[gids] = seg_conv[valid]
+            values[okg] = np.asarray(res.value)[ok2d]
+            conv[okg] = seg_conv[ok2d]
+            if bad2d.any():
+                badg = cur[bad2d]
+                poisoned.update(int(g) for g in badg)
+                values[badg] = np.nan
+                conv[badg] = False
             for sh in range(num_shards):
                 sh_iters = int(it_seg[sh].max(initial=0))
                 bucket_records.append(newton.BucketRecord(
@@ -575,7 +644,8 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
                     iters=sh_iters, seconds=dt / num_shards))
                 live_iters[sh] += it_seg[sh].sum()
                 padded_iters[sh] += w * sh_iters
-            live_np = valid & ~seg_conv & (rad_seg > newton.MIN_RADIUS)
+            live_np = valid & ~seg_conv & ~bad2d \
+                & (rad_seg > newton.MIN_RADIUS)
             if (compact_every is None or used >= max_iters
                     or not live_np.any()):
                 break
@@ -647,6 +717,7 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
         # list the scheduler keeps appending to)
         history_start = len(sched.history)
         for p in range(passes):
+            poisoned.clear()
             src_cat = init_catalog
             if p > 0:  # refinement: neighbors + plan from fitted catalog
                 src_cat = infer_catalog(thetas)
@@ -672,6 +743,7 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
     else:
         pos_np, feats = catalog_features(init_catalog)
         for p in range(passes):
+            poisoned.clear()
             if p > 0:  # refinement: neighbors + plan from fitted catalog
                 fitted = infer_catalog(thetas)
                 x, corners, bg = neighbor_background(fitted, fitted.pos)
@@ -689,11 +761,58 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
                              passes * len(plan.batches))
         pred_imb = plan.predicted_imbalance
 
+    # ---- degradation ladder: rescue the harvested sources ----
+    # Each rung restarts from the SEED theta (thetas0) on the reference
+    # backend — the most numerically conservative evaluator — escalating
+    # to forced f32 and then a shrunk initial trust radius.  The first
+    # rung that returns finite rows wins; leftovers keep the seed theta
+    # with QUALITY_FAILED and are never reported converged.
+    quality = np.zeros(s, np.int8)
+    harvested = len(poisoned)
+    if poisoned:
+        pending = np.array(sorted(poisoned), np.int64)
+        quality[pending] = QUALITY_FAILED
+        rungs = ((QUALITY_REF, precision, 1.0),
+                 (QUALITY_F32, "f32", 1.0),
+                 (QUALITY_CAUTIOUS, "f32", 0.125))
+        for rung, rung_prec, rung_radius in rungs:
+            if pending.size == 0:
+                break
+            ladder_obj = make_objective(metas, priors, backend="ref",
+                                        precision=rung_prec,
+                                        checkify_guards=False)
+            gi = jnp.asarray(pending)
+            res = newton.fit_batch(
+                ladder_obj, thetas0[gi], x[gi], bg[gi], corners[gi],
+                active=jnp.ones(pending.size, bool),
+                max_iters=max_iters, gtol=gtol,
+                init_radius=jnp.full((pending.size,), rung_radius,
+                                     jnp.float32))
+            ok = ~newton.nonfinite_rows(res)
+            if ok.any():
+                ok_ids = pending[ok]
+                thetas = thetas.at[jnp.asarray(ok_ids)].set(
+                    np.asarray(res.theta)[ok])
+                values[ok_ids] = np.asarray(res.value)[ok]
+                conv[ok_ids] = (np.asarray(res.converged)
+                                | (np.asarray(res.grad_norm) < gtol))[ok]
+                iters[ok_ids] += np.asarray(res.iters)[ok]
+                quality[ok_ids] = rung
+            pending = pending[~ok]
+        if pending.size:
+            # no rung fit these: report the seed estimate, flagged, so
+            # downstream consumers see a finite (if uninformative) row
+            thetas = thetas.at[jnp.asarray(pending)].set(
+                thetas0[jnp.asarray(pending)])
+            values[pending] = np.nan
+            conv[pending] = False
+
     stats = InferenceStats(
         rounds=rounds_done, total_sources=s, converged=int(conv.sum()),
         iters=iters, elbo_values=values,
         predicted_imbalance=pred_imb, adaptive=adaptive, history=history,
-        bucket_history=bucket_records, checkify_errors=checkify_errors)
+        bucket_history=bucket_records, checkify_errors=checkify_errors,
+        quality=quality, harvested=harvested)
     return thetas, stats
 
 

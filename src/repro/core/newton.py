@@ -85,6 +85,21 @@ class BatchedObjective(NamedTuple):
     second_order: Callable | None = None  # -> ([S], [S, D], [S, D, D])
 
 
+def nonfinite_rows(res: NewtonResult) -> np.ndarray:
+    """[S] bool: rows of a (blocked) ``NewtonResult`` whose returned
+    theta, value, or gradient contain non-finite entries — the harvest
+    predicate for degraded-mode refits (``core/infer.run_inference``).
+
+    Inactive/padding rows report finite placeholders (theta untouched,
+    value 0, zero gradient) and are NOT flagged; the ``inf`` grad_norm
+    sentinel of an all-inactive batch is deliberately ignored — callers
+    mask padding with their own ``active`` bookkeeping."""
+    theta_ok = np.isfinite(np.asarray(res.theta)).all(axis=-1)
+    val_ok = np.isfinite(np.asarray(res.value))
+    grad_ok = np.isfinite(np.asarray(res.grad)).all(axis=-1)
+    return ~(theta_ok & val_ok & grad_ok)
+
+
 def batched_from_scalar(objective: Callable) -> BatchedObjective:
     """Lift a per-source scalar objective to the batched API via vmap."""
     vag = jax.vmap(jax.value_and_grad(objective))

@@ -65,6 +65,8 @@ class FieldRecord:
     detect_seconds: float
     fit_seconds: float
     mean_iters: float
+    n_degraded: int = 0     # sources that needed a degradation-ladder rung
+    bad_pixels: int = 0     # non-finite pixels sanitized before detection
 
 
 @dataclass
@@ -78,10 +80,17 @@ class PipelineStats:
     # run_inference (see InferenceStats.checkify_errors); each entry is
     # prefixed with the owning field index
     checkify_errors: list = dataclass_field(default_factory=list)
+    # fields quarantined by the fault loop ([fault.QuarantineRecord]):
+    # holes in the catalog, not crashes — see docs/fault_tolerance.md
+    quarantined: list = dataclass_field(default_factory=list)
 
     @property
     def fields_run(self) -> int:
         return len(self.fields)
+
+    @property
+    def fields_quarantined(self) -> int:
+        return len(self.quarantined)
 
 
 @dataclass
@@ -90,6 +99,10 @@ class PipelineResult:
     thetas: np.ndarray          # [N, THETA_DIM] variational params
     field_of: np.ndarray        # [N] owning field (row-major grid index)
     stats: PipelineStats
+    # [N] int8 per-source fit quality (infer.QUALITY_*); 0 is nominal,
+    # 1..3 the degradation-ladder rung that recovered the source,
+    # infer.QUALITY_FAILED an unrecoverable fit (seed theta reported)
+    quality: np.ndarray | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -241,6 +254,8 @@ def run_pipeline(survey, priors: Priors | None = None, *,
                  refit_priors: bool = True,
                  checkpoint_dir: str | None = None, ckpt_keep: int = 3,
                  max_retries: int = 3, fault_injector=None,
+                 chaos=None, quarantine: bool = True,
+                 nan_pixel_tolerance: float = 0.01,
                  progress=None,
                  log=lambda s: None) -> PipelineResult:
     """Run the full survey pipeline; returns the stitched global catalog.
@@ -257,18 +272,38 @@ def run_pipeline(survey, priors: Priors | None = None, *,
     and a new ``run_pipeline`` call with the same directory resumes after
     the last committed field — the replayed fields are deterministic, so
     an interrupted-then-resumed run reproduces the uninterrupted catalog
-    bit-for-bit.  ``fault_injector``/``max_retries`` are forwarded to
+    bit-for-bit.  Checkpoints carry per-leaf checksums; a corrupted step
+    is skipped (and quarantined on disk) in favor of the next-older
+    committed one.  ``fault_injector``/``max_retries`` are forwarded to
     ``run_loop`` (tests use them to simulate node failures and kills).
+
+    **Fault-domain isolation** (docs/fault_tolerance.md): every field
+    runs through a ``fault.FieldQueue`` even without a checkpoint
+    directory.  Transient failures (fetch IO, injected node faults)
+    retry with exponential backoff; a field that fails every retry is
+    **quarantined** with ``quarantine=True`` (the default here — the
+    survey continues, the field becomes a hole recorded in
+    ``stats.quarantined``, and stitching simply never sees its sources)
+    or re-raised with ``quarantine=False`` (legacy crash-on-poison).
+    Fields whose non-finite pixel fraction exceeds
+    ``nan_pixel_tolerance`` raise ``fault.PoisonFailure`` (→ quarantine);
+    smaller fractions are sanitized in place with the per-image median
+    and counted in ``FieldRecord.bad_pixels``.  ``chaos`` (a
+    ``runtime/chaos.ChaosHarness``) threads deterministic fault
+    injection through the loop, the store, and per-field inference.
 
     ``backend``/``adaptive``/``compact_every`` forward to
     ``infer.run_inference`` per field, so the fused-kernel and elastic-
-    compaction paths compose with the pipeline unchanged.
+    compaction paths compose with the pipeline unchanged.  Per-source
+    fit quality (``infer.QUALITY_*``, from the degradation ladder) rides
+    in the checkpoint slab and lands in ``PipelineResult.quality``.
     """
     priors = priors or default_priors()
-    store = store or SurveyStore(survey)
+    store = store or SurveyStore(survey, chaos=chaos)
     nf = len(survey.fields)
     state = {
         "count": jnp.zeros((nf,), jnp.int32),
+        "quality": jnp.zeros((nf, cap_per_field), jnp.int8),
         "thetas": jnp.zeros((nf, cap_per_field, elbo.THETA_DIM),
                             jnp.float32),
     }
@@ -278,9 +313,33 @@ def run_pipeline(survey, priors: Priors | None = None, *,
     checkify_errors: dict[int, list] = {}   # same replay-safe keying
 
     def step_fn(st, i):
-        images, metas = store.fetch(i)
+        try:
+            images, metas = store.fetch(i)
+        except OSError as e:
+            # fetch IO errors (the store already retried its prefetch
+            # slot once) are the canonical transient: classify for the
+            # queue so backoff-and-retry applies instead of a crash
+            raise fault.TransientFailure(
+                f"field {i}: image fetch failed: {e}") from e
         store.prefetch(i + 1)    # overlap the next field's retrieval
         fld = survey.fields[i]
+
+        # ---- non-finite pixel guard (dead amplifier regions) ----
+        bad_pixels = int(jnp.sum(~jnp.isfinite(images)))
+        if bad_pixels:
+            frac = bad_pixels / float(images.size)
+            if frac > nan_pixel_tolerance:
+                raise fault.PoisonFailure(
+                    f"field {fld.index}: {frac:.2%} non-finite pixels "
+                    f"exceeds nan_pixel_tolerance={nan_pixel_tolerance} "
+                    "— quarantining, the data will not improve on retry")
+            host = np.asarray(images)
+            finite = np.isfinite(host)
+            fill = np.nanmedian(np.where(finite, host, np.nan),
+                                axis=(-2, -1), keepdims=True)
+            images = jnp.asarray(np.where(finite, host, fill))
+            log(f"field {fld.index}: sanitized {bad_pixels} non-finite "
+                f"pixels ({frac:.2%}) with per-image medians")
 
         t0 = time.perf_counter()
         # detect with headroom above the per-field fit cap: bright HALO
@@ -307,52 +366,60 @@ def run_pipeline(survey, priors: Priors | None = None, *,
             thetas_f, istats = infer.run_inference(
                 images, metas, photo, pri, patch=patch, batch=batch,
                 backend=backend, adaptive=adaptive,
-                compact_every=compact_every, max_iters=max_iters)
+                compact_every=compact_every, max_iters=max_iters,
+                chaos=chaos, chaos_tag=i)
             st = {
                 "count": st["count"].at[i].set(n),
+                "quality": st["quality"].at[i, :n].set(
+                    jnp.asarray(istats.quality)),
                 "thetas": st["thetas"].at[i, :n].set(thetas_f),
             }
             conv, mean_iters = istats.converged, float(istats.iters.mean())
+            degraded = istats.degraded
             checkify_errors[i] = [f"field {fld.index}: {m}"
                                   for m in istats.checkify_errors]
         else:
             st = {"count": st["count"].at[i].set(0),
+                  "quality": st["quality"],
                   "thetas": st["thetas"]}
-            conv, mean_iters = 0, 0.0
+            conv, mean_iters, degraded = 0, 0.0, 0
         t_fit = time.perf_counter() - t0
 
         records[i] = FieldRecord(
             index=fld.index, n_detected=int(det.positions.shape[0]),
             n_owned=int(n), n_converged=int(conv),
             detect_seconds=t_detect, fit_seconds=t_fit,
-            mean_iters=mean_iters)
+            mean_iters=mean_iters, n_degraded=int(degraded),
+            bad_pixels=bad_pixels)
         log(f"field {fld.index}: {det.positions.shape[0]} detected, "
             f"{n} owned, {conv} converged")
         if progress is not None:
             progress(i, nf)
         return st, float(conv) / max(n, 1)
 
-    if checkpoint_dir is not None:
-        ck = Checkpointer(checkpoint_dir, keep=ckpt_keep)
-        state, loop = fault.run_loop(
-            state, step_fn, num_steps=nf, checkpointer=ck, ckpt_every=1,
-            max_retries=max_retries, fault_injector=fault_injector,
-            log=log)
-    else:
-        loop = fault.LoopStats()
-        for i in range(nf):
-            t0 = time.perf_counter()
-            state, loss = step_fn(state, i)
-            loop.step_times.append(time.perf_counter() - t0)
-            loop.losses.append(loss)
-            loop.steps_run += 1
+    # one loop for both modes: with a checkpoint_dir failed steps restore
+    # and replay; without one they retry in place (step_fn is functional)
+    ck = (Checkpointer(checkpoint_dir, keep=ckpt_keep)
+          if checkpoint_dir is not None else None)
+    state, loop = fault.run_loop(
+        state, step_fn, num_steps=nf, checkpointer=ck, ckpt_every=1,
+        max_retries=max_retries, fault_injector=fault_injector,
+        chaos=chaos, quarantine=quarantine, log=log)
 
     # ---- stitch: flatten slabs, dedup across fields ----
+    # quarantined fields have count 0 — the hole simply contributes no
+    # sources, and neighbors' halo fits cover the shared boundaries
     counts = np.asarray(state["count"])
     thetas_slab = np.asarray(state["thetas"])
-    thetas = np.concatenate(
-        [thetas_slab[i, :counts[i]] for i in range(nf)], axis=0) \
-        if counts.sum() else np.zeros((0, elbo.THETA_DIM), np.float32)
+    quality_slab = np.asarray(state["quality"])
+    if counts.sum():
+        thetas = np.concatenate(
+            [thetas_slab[i, :counts[i]] for i in range(nf)], axis=0)
+        quality = np.concatenate(
+            [quality_slab[i, :counts[i]] for i in range(nf)], axis=0)
+    else:
+        thetas = np.zeros((0, elbo.THETA_DIM), np.float32)
+        quality = np.zeros((0,), np.int8)
     field_of = np.repeat(np.arange(nf), counts)
     catalog = infer.infer_catalog(jnp.asarray(thetas))
     keep, removed = stitch_mask(
@@ -362,15 +429,18 @@ def run_pipeline(survey, priors: Priors | None = None, *,
     catalog = jax.tree.map(lambda a: a[np.flatnonzero(keep)], catalog)
     thetas = thetas[keep]
     field_of = field_of[keep]
+    quality = quality[keep]
 
     stats = PipelineStats(fields=[records[k] for k in sorted(records)],
                           loop=loop, fetch=store.stats,
                           duplicates_removed=removed,
                           checkify_errors=[m for k in sorted(checkify_errors)
-                                           for m in checkify_errors[k]])
+                                           for m in checkify_errors[k]],
+                          quarantined=list(loop.quarantined))
     if getattr(survey, "truth", None) is not None:
         stats.metrics = detect.detection_metrics(
             np.asarray(catalog.pos), np.asarray(survey.truth.pos),
             radius=truth_radius)
     return PipelineResult(catalog=catalog, thetas=thetas,
-                          field_of=field_of, stats=stats)
+                          field_of=field_of, stats=stats,
+                          quality=quality)

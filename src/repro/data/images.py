@@ -43,6 +43,8 @@ class FetchStats:
     prefetch_hits: int = 0        # fetches served from a prefetch slot
     #                               (completed OR still in flight — the
     #                               exposed wait is in blocked_seconds)
+    prefetch_errors: int = 0      # IO-thread failures surfaced at fetch
+    #                               (each retried once synchronously)
     fetch_seconds: float = 0.0    # total retrieval work (incl. prefetch)
     blocked_seconds: float = 0.0  # retrieval time that stalled the caller
 
@@ -95,15 +97,25 @@ class SurveyStore:
     is served from the finished transfer — ``FetchStats`` then shows
     ``blocked_seconds`` ≪ ``fetch_seconds``, the retrieval-hiding the
     paper engineers with dedicated I/O threads.
+
+    A prefetch-thread exception is captured in the slot and surfaced at
+    ``fetch`` — never silently swallowed by a daemon-thread death — where
+    it is counted in ``FetchStats.prefetch_errors`` and retried ONCE
+    synchronously (transient IO faults clear; a deterministic fault
+    raises out of the retry, chained to the original).  ``chaos`` is an
+    optional ``runtime/chaos.ChaosHarness`` injecting prefetch IO errors
+    and NaN pixel blocks deterministically per field.
     """
 
-    def __init__(self, survey, tile: int = 64):
+    def __init__(self, survey, tile: int = 64, chaos=None):
         self.survey = survey
         self.tile = tile
+        self.chaos = chaos
         self.stats = FetchStats()
         # host-side master copy: device residency is per-fetch
         self._host = [np.asarray(f.images) for f in survey.fields]
         self._slot = None      # (field_idx, thread, result dict)
+        self._attempts: dict[int, int] = {}   # per-field load attempts
 
     @property
     def num_fields(self) -> int:
@@ -111,10 +123,17 @@ class SurveyStore:
 
     def _load(self, i: int, out: dict):
         t0 = time.perf_counter()
+        attempt = self._attempts.get(i, 0)
+        self._attempts[i] = attempt + 1
         try:
-            images = jax.block_until_ready(jax.device_put(self._host[i]))
+            host = self._host[i]
+            if self.chaos is not None:
+                self.chaos.prefetch_fault(i, attempt)
+                host = self.chaos.corrupt_pixels(host, i)
+            images = jax.block_until_ready(jax.device_put(host))
         except Exception as e:   # surfaced by fetch(); a bare daemon-
             out["error"] = e     # thread death would mask the real cause
+            out["seconds"] = time.perf_counter() - t0
             return
         out["images"] = images
         out["seconds"] = time.perf_counter() - t0
@@ -157,6 +176,19 @@ class SurveyStore:
             th.join()
             self.stats.blocked_seconds += time.perf_counter() - t0
             hit = True
+            if "error" in out:
+                # the IO thread died; count it, bill its work, and retry
+                # once synchronously — transient faults clear, persistent
+                # ones raise out of the retry with the original chained
+                self.stats.prefetch_errors += 1
+                self.stats.fetch_seconds += out.get("seconds", 0.0)
+                prefetch_exc = out["error"]
+                out = {}
+                self._load(i, out)
+                self.stats.blocked_seconds += out.get("seconds", 0.0)
+                hit = False
+                if "error" in out:
+                    raise out["error"] from prefetch_exc
         else:
             out = {}
             self._load(i, out)

@@ -1,0 +1,206 @@
+"""Deterministic chaos harness: structured fault injection by
+``(seed, site, step)``.
+
+The paper's operating regime — and the petascale follow-up's production
+run — is one where node loss, bad pixels, and pathological blends are
+routine.  This module makes that regime *testable*: every fault class the
+fault-domain machinery claims to absorb can be injected deterministically,
+so a chaos run is exactly reproducible (same seed → same faults → same
+catalog) and CI can assert recovery instead of hoping for it.
+
+Fault sites (all decided by ``deterministic_uniform(seed, site, *key)``,
+never by wall clock or a stateful RNG):
+
+  ``transient``   a step failure that clears on retry (fires on attempt 0
+                  only) — raised as ``fault.TransientFailure``
+  ``poison``      a step that fails *every* attempt (``poison_rate`` or
+                  the explicit ``poison_fields`` tuple) — raised as
+                  ``fault.PoisonFailure``; ends in quarantine
+  ``pixels``      a NaN pixel block stamped into every image of a field's
+                  stack (a dead amplifier region); big blocks trip the
+                  pipeline's non-finite guard → deterministic poison
+  ``ckpt``        corruption of the newest committed checkpoint right
+                  after its save (variant rotates: truncated leaf,
+                  flipped byte, deleted COMMITTED sentinel)
+  ``prefetch``    an ``OSError`` in the prefetch IO thread (attempt 0
+                  only, so the synchronous retry succeeds)
+  ``straggler``   a deterministic delay before a step (goodput, not
+                  correctness)
+  ``newton``      per-source non-finite rows after a Newton segment —
+                  exercises the harvest + degradation-ladder path in
+                  ``core/infer.run_inference``
+
+``ChaosHarness`` replaces the bare boolean ``fault_injector`` hook: it is
+passed to ``core/pipeline.run_pipeline(chaos=...)`` and threaded to
+``runtime/fault.run_loop`` (step faults, checkpoint corruption),
+``data/images.SurveyStore`` (prefetch faults, pixel corruption) and
+``core/infer.run_inference`` (Newton-row injection).  ``fired`` counts
+every injection that actually happened, keyed by site, for the goodput
+report (``benchmarks/chaos_goodput.py``).
+"""
+from __future__ import annotations
+
+import os
+import time
+from collections import Counter
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.runtime import fault
+
+
+@dataclass(frozen=True)
+class ChaosSpec:
+    """Injection rates (probability per site decision) and deterministic
+    overrides.  All-zero rates make the harness a no-op."""
+    seed: int = 0
+    # field-loop step faults
+    transient_rate: float = 0.0     # fails once, clears on retry
+    poison_rate: float = 0.0        # fails every attempt → quarantine
+    poison_fields: tuple = ()       # explicit deterministic poison steps
+    straggler_rate: float = 0.0
+    straggler_seconds: float = 0.02
+    # data-plane faults
+    nan_rate: float = 0.0           # NaN pixel block per field
+    nan_fields: tuple = ()          # explicit fields to stamp
+    nan_block: int = 16             # block side length, pixels
+    prefetch_rate: float = 0.0      # IO error in the prefetch thread
+    # checkpoint corruption
+    ckpt_rate: float = 0.0
+    ckpt_steps: tuple = ()          # explicit steps to corrupt after save
+    # inference faults
+    newton_rate: float = 0.0        # per-source non-finite row injection
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.poison_fields or self.nan_fields or self.ckpt_steps
+                    or any(r > 0 for r in (
+                        self.transient_rate, self.poison_rate,
+                        self.straggler_rate, self.nan_rate,
+                        self.prefetch_rate, self.ckpt_rate,
+                        self.newton_rate)))
+
+
+class ChaosHarness:
+    """Stateless decisions, stateful accounting: every ``decide`` is a
+    pure function of ``(seed, site, key)``, while ``fired`` records the
+    injections that actually executed."""
+
+    def __init__(self, spec: ChaosSpec | None = None, **kw):
+        self.spec = spec or ChaosSpec(**kw)
+        self.fired: Counter = Counter()
+
+    # ------------------------------------------------------------ decide
+    def uniform(self, site: str, *key) -> float:
+        return fault.deterministic_uniform(self.spec.seed, site, *key)
+
+    def decide(self, site: str, *key, rate: float) -> bool:
+        return rate > 0 and self.uniform(site, *key) < rate
+
+    def is_poison(self, step: int) -> bool:
+        return (step in self.spec.poison_fields
+                or self.decide("poison", step, rate=self.spec.poison_rate))
+
+    def poison_steps(self, num_steps: int) -> list[int]:
+        """The steps that will deterministically fail every attempt —
+        what a chaos benchmark asserts the quarantine set against."""
+        return [s for s in range(num_steps) if self.is_poison(s)]
+
+    def nan_blocked(self, index: int) -> bool:
+        return (index in self.spec.nan_fields
+                or self.decide("pixels", index, rate=self.spec.nan_rate))
+
+    # ------------------------------------------- field-loop hooks (fault)
+    def step_fault(self, step: int, attempt: int) -> None:
+        """Called by ``run_loop`` before each step attempt; raises the
+        structured failure this step draws, if any."""
+        if self.decide("straggler", step, rate=self.spec.straggler_rate):
+            self.fired["straggler"] += 1
+            time.sleep(self.spec.straggler_seconds)
+        if self.is_poison(step):
+            self.fired["poison"] += 1
+            raise fault.PoisonFailure(
+                f"chaos: poison step {step} (fails every attempt)")
+        if attempt == 0 and self.decide("transient", step,
+                                        rate=self.spec.transient_rate):
+            self.fired["transient"] += 1
+            raise fault.TransientFailure(
+                f"chaos: transient failure at step {step}")
+
+    # -------------------------------------------------- checkpoint hooks
+    def checkpoint_fault(self, checkpointer, step: int) -> None:
+        """Corrupt the just-committed checkpoint (after waiting for the
+        async write), rotating through the three corruption classes the
+        integrity layer must survive."""
+        if not (step in self.spec.ckpt_steps
+                or self.decide("ckpt", step, rate=self.spec.ckpt_rate)):
+            return
+        checkpointer.wait()
+        path = os.path.join(checkpointer.dir, f"step_{step}")
+        if not os.path.isdir(path):
+            return
+        variant = int(self.uniform("ckpt_variant", step) * 3)
+        self.fired["ckpt"] += 1
+        corrupt_checkpoint(path, variant)
+
+    # ------------------------------------------------- data-plane hooks
+    def prefetch_fault(self, index: int, attempt: int) -> None:
+        """IO-thread fault: first attempt only, so the SurveyStore's
+        synchronous retry clears it."""
+        if attempt == 0 and self.decide("prefetch", index,
+                                        rate=self.spec.prefetch_rate):
+            self.fired["prefetch"] += 1
+            raise OSError(
+                f"chaos: injected prefetch IO error for field {index}")
+
+    def corrupt_pixels(self, images: np.ndarray, index: int) -> np.ndarray:
+        """Stamp a NaN block into every image of the field's stack (the
+        same block every fetch — a *deterministic* bad-pixel region)."""
+        if not self.nan_blocked(index):
+            return images
+        self.fired["pixels"] += 1
+        out = np.array(images, copy=True)
+        b = min(self.spec.nan_block, out.shape[-2], out.shape[-1])
+        r0 = int(self.uniform("pixels_r", index) * (out.shape[-2] - b + 1))
+        c0 = int(self.uniform("pixels_c", index) * (out.shape[-1] - b + 1))
+        out[..., r0:r0 + b, c0:c0 + b] = np.nan
+        return out
+
+    # --------------------------------------------------- inference hooks
+    def newton_rows(self, tag, gids: np.ndarray) -> np.ndarray:
+        """Per-source injection mask for a Newton segment: True rows are
+        treated as non-finite by the harvest in ``run_inference`` and
+        routed through the degradation ladder.  Deterministic per
+        ``(tag, source id)`` so replays inject identically."""
+        gids = np.asarray(gids).reshape(-1)
+        mask = np.array([self.decide("newton", tag, int(g),
+                                     rate=self.spec.newton_rate)
+                         for g in gids])
+        self.fired["newton"] += int(mask.sum())
+        return mask
+
+
+def corrupt_checkpoint(path: str, variant: int = 0) -> str:
+    """Corrupt one committed checkpoint directory in place.
+
+    ``variant`` 0: truncate ``arr_0.npy`` to half length; 1: flip one
+    payload byte (checksum mismatch, shape intact); 2: delete the
+    ``COMMITTED`` sentinel.  Returns a description of what was done —
+    shared by the chaos harness and the corruption-recovery tests."""
+    leaf = os.path.join(path, "arr_0.npy")
+    variant = int(variant) % 3
+    if variant == 0:
+        size = os.path.getsize(leaf)
+        with open(leaf, "r+b") as f:
+            f.truncate(max(1, size // 2))
+        return "truncated arr_0.npy"
+    if variant == 1:
+        with open(leaf, "r+b") as f:
+            f.seek(-1, os.SEEK_END)
+            last = f.read(1)
+            f.seek(-1, os.SEEK_END)
+            f.write(bytes([last[0] ^ 0xFF]))
+        return "flipped a byte in arr_0.npy"
+    os.remove(os.path.join(path, "COMMITTED"))
+    return "removed COMMITTED sentinel"

@@ -1,17 +1,38 @@
-"""Fault-tolerant execution loop: checkpoint/restart, retry, preemption.
+"""Fault-domain isolation: the field queue, retry/backoff policy,
+quarantine, circuit breaker, and the checkpointed execution loop.
 
-At thousands of nodes, *something* is always failing; the loop's contract:
+At thousands of nodes, *something* is always failing; the old loop's only
+answer was restore-and-replay, which turns any *deterministic* failure (a
+poison field that NaNs every retry) into a fatal ``RuntimeError`` for the
+whole run.  Failure is now a scoped, first-class outcome:
 
-  * checkpoint every ``ckpt_every`` steps (async; never blocks compute);
-  * on any step failure (device error, injected fault, preemption signal)
-    restore the latest committed checkpoint and replay — the data pipeline
-    is deterministic per (step, host), so replayed steps are bit-identical;
-  * bounded retries guard against deterministic poison steps;
-  * SIGTERM (preemption notice) triggers a final synchronous save.
+  * **transient** failures (node loss, flaky IO) are retried with
+    exponential backoff and deterministic jitter, restoring the latest
+    committed checkpoint and replaying — the data pipeline is
+    deterministic per (step, host), so replayed steps are bit-identical;
+  * **deterministic** failures exhaust ``max_retries`` and are
+    **quarantined** (``FieldQueue.quarantined`` carries the exception
+    chain): the run continues and the item becomes a hole in the output
+    instead of a crash — callers opt in with ``quarantine=True``;
+  * a global failure-rate **circuit breaker** still aborts runaway runs
+    (a cluster-wide outage should not be retried field by field);
+  * **checkpoint corruption** (bad checksum, truncated leaf) falls back
+    to the next-older committed step (``Checkpointer.restore_latest``)
+    instead of crashing the restore path;
+  * SIGTERM (preemption notice) triggers a final synchronous save — the
+    handler is registered only on the main thread (``signal.signal``
+    raises from worker threads, e.g. under a multi-host driver).
+
+``FieldQueue`` is the per-item state machine (take → complete / fail →
+retry | quarantine | abort) and is usable standalone by future multi-host
+drivers (a dead host's in-flight items re-enter via ``rewind``);
+``run_loop`` drives it sequentially with checkpoint/restore semantics.
 """
 from __future__ import annotations
 
+import hashlib
 import signal
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -24,6 +45,168 @@ class StepFailure(RuntimeError):
     node failure."""
 
 
+class TransientFailure(StepFailure):
+    """A failure expected to clear on retry (node loss, flaky IO)."""
+
+
+class PoisonFailure(StepFailure):
+    """A deterministic failure: the same input fails every retry (bad
+    pixels, pathological blend).  Retrying is still attempted — the
+    classification is advisory — but exhausted retries quarantine the
+    item instead of killing the run (``quarantine=True``)."""
+
+
+def deterministic_uniform(seed: int, *key) -> float:
+    """A uniform in [0, 1) that is a pure function of ``(seed, *key)`` —
+    the jitter/injection primitive shared with ``runtime/chaos.py``.
+    SHA-256 of the key string, first 8 bytes as an integer."""
+    msg = f"{seed}|" + "|".join(str(k) for k in key)
+    digest = hashlib.sha256(msg.encode()).digest()
+    return int.from_bytes(digest[:8], "big") / float(1 << 64)
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Exponential backoff with deterministic jitter.
+
+    Attempt ``a`` (1-based) sleeps ``base * 2**(a-1) * (0.5 + u)`` capped
+    at ``cap``, where ``u = deterministic_uniform(seed, "backoff", item,
+    a)`` — replayable, and decorrelated across items so a cluster-wide
+    transient does not produce a synchronized retry stampede."""
+    max_retries: int = 3
+    backoff_base: float = 0.01
+    backoff_cap: float = 1.0
+    seed: int = 0
+
+    def delay(self, item: int, attempt: int) -> float:
+        u = deterministic_uniform(self.seed, "backoff", item, attempt)
+        return min(self.backoff_cap,
+                   self.backoff_base * (2.0 ** (attempt - 1)) * (0.5 + u))
+
+
+@dataclass(frozen=True)
+class CircuitBreaker:
+    """Global failure-rate guard: quarantine isolates *individual* bad
+    items, the breaker catches *systemic* failure (every retry failing —
+    a dead filesystem, a wedged accelerator).  Trips when at least
+    ``min_failures`` failures have been seen AND failures make up more
+    than ``threshold`` of all attempts."""
+    threshold: float = 0.5
+    min_failures: int = 16
+
+    def tripped(self, failures: int, successes: int) -> bool:
+        total = failures + successes
+        return (failures >= self.min_failures
+                and total > 0
+                and failures / total > self.threshold)
+
+
+@dataclass
+class QuarantineRecord:
+    """One quarantined item: which, how many attempts, and the full
+    exception chain (outermost first) for the post-mortem."""
+    item: int
+    attempts: int
+    error: str                    # repr of the final exception
+    chain: tuple = ()             # reprs along __cause__/__context__
+
+    @staticmethod
+    def from_exception(item: int, attempts: int,
+                       exc: BaseException) -> "QuarantineRecord":
+        chain = []
+        e: BaseException | None = exc
+        seen: set[int] = set()
+        while e is not None and id(e) not in seen:
+            seen.add(id(e))
+            chain.append(f"{type(e).__name__}: {e}")
+            e = e.__cause__ or e.__context__
+        return QuarantineRecord(item=item, attempts=attempts,
+                                error=repr(exc), chain=tuple(chain))
+
+
+@dataclass
+class FailAction:
+    """What ``FieldQueue.fail`` decided: ``kind`` is ``"retry"``
+    (sleep ``delay`` then re-run), ``"quarantine"`` (skip the item,
+    record in ``queue.quarantined``) or ``"abort"`` (circuit breaker)."""
+    kind: str
+    delay: float = 0.0
+    record: QuarantineRecord | None = None
+
+
+class FieldQueue:
+    """Work queue over ``num_items`` integer items with per-item retry
+    state.
+
+    The sequential driver (``run_loop``) takes items in order; a
+    multi-host driver can ``rewind`` a dead host's in-flight range so its
+    items are re-taken elsewhere.  Attempts persist across rewinds (that
+    is the point: a poison item accumulates attempts across restores and
+    is eventually quarantined, not retried forever), and quarantined
+    items never re-enter the pending set.
+    """
+
+    def __init__(self, num_items: int, *,
+                 policy: RetryPolicy | None = None,
+                 breaker: CircuitBreaker | None = None):
+        self.num_items = int(num_items)
+        self.policy = policy or RetryPolicy()
+        self.breaker = breaker or CircuitBreaker()
+        self.attempts: dict[int, int] = {}
+        self.quarantined: dict[int, QuarantineRecord] = {}
+        self._done: set[int] = set()
+        self._failures = 0
+        self._successes = 0
+
+    # ------------------------------------------------------------- state
+    @property
+    def remaining(self) -> int:
+        return self.num_items - len(self._done) - len(self.quarantined)
+
+    def is_pending(self, item: int) -> bool:
+        return (0 <= item < self.num_items and item not in self._done
+                and item not in self.quarantined)
+
+    def take(self) -> int | None:
+        """Lowest pending item, or None when everything is done or
+        quarantined."""
+        for item in range(self.num_items):
+            if self.is_pending(item):
+                return item
+        return None
+
+    # ----------------------------------------------------------- results
+    def complete(self, item: int) -> None:
+        """Idempotent: restore-and-replay re-completes items."""
+        if item not in self._done:
+            self._successes += 1
+        self._done.add(item)
+
+    def fail(self, item: int, exc: BaseException) -> FailAction:
+        """Record a failed attempt and decide the response."""
+        self._failures += 1
+        attempts = self.attempts.get(item, 0) + 1
+        self.attempts[item] = attempts
+        if self.breaker.tripped(self._failures, self._successes):
+            return FailAction(kind="abort")
+        if attempts > self.policy.max_retries:
+            rec = QuarantineRecord.from_exception(item, attempts, exc)
+            self.quarantined[item] = rec
+            return FailAction(kind="quarantine", record=rec)
+        return FailAction(kind="retry",
+                          delay=self.policy.delay(item, attempts))
+
+    def rewind(self, to_item: int) -> None:
+        """Re-pend every completed item ≥ ``to_item`` (a checkpoint
+        restore rolled the state back; quarantined items stay out)."""
+        self._done = {i for i in self._done if i < to_item}
+
+    def fast_forward(self, to_item: int) -> None:
+        """Mark items < ``to_item`` complete without counting successes
+        (a resumed process trusts the restored checkpoint)."""
+        self._done.update(range(min(to_item, self.num_items)))
+
+
 @dataclass
 class LoopStats:
     steps_run: int = 0
@@ -32,6 +215,9 @@ class LoopStats:
     checkpoints: int = 0
     losses: list = field(default_factory=list)
     step_times: list = field(default_factory=list)   # measured wall s/step
+    quarantined: list = field(default_factory=list)  # [QuarantineRecord]
+    backoff_seconds: float = 0.0    # total retry backoff slept
+    corrupt_skipped: int = 0        # corrupted checkpoints skipped on restore
 
     def throughput_time(self) -> float:
         """Total measured compute seconds (excludes restores/retries) —
@@ -39,76 +225,148 @@ class LoopStats:
         return float(sum(self.step_times))
 
 
+def _restore_latest(checkpointer: Checkpointer | None, state: Any,
+                    stats: LoopStats, log: Callable[[str], None]):
+    """Restore the newest *valid* checkpoint (corruption falls back to
+    older steps); returns ``(state, step)`` or ``(state, None)`` when no
+    committed checkpoint survives (or checkpointing is off)."""
+    if checkpointer is None:
+        return state, None
+    checkpointer.wait()
+    out = checkpointer.restore_latest(state, log=log)
+    if out is None:
+        return state, None
+    state, step, skipped = out
+    stats.restores += 1
+    stats.corrupt_skipped += skipped
+    return state, step
+
+
 def run_loop(state: Any,
              step_fn: Callable[[Any, int], tuple[Any, float]],
-             *, num_steps: int, checkpointer: Checkpointer,
+             *, num_steps: int, checkpointer: Checkpointer | None,
              ckpt_every: int = 50, max_retries: int = 3,
              start_step: int | None = None,
              fault_injector: Callable[[int], bool] | None = None,
+             chaos: Any = None,
+             quarantine: bool = False,
+             queue: FieldQueue | None = None,
+             policy: RetryPolicy | None = None,
+             breaker: CircuitBreaker | None = None,
              log: Callable[[str], None] = lambda s: None) -> tuple[Any,
                                                                    LoopStats]:
     """Run ``step_fn(state, step) -> (state, loss)`` with restart-on-failure.
 
-    If ``start_step`` is None, resumes from the latest committed checkpoint
-    (restoring into ``state``'s shardings) — a fresh process after a crash
-    picks up where the last commit left off.
+    If ``start_step`` is None, resumes from the latest *valid* committed
+    checkpoint (restoring into ``state``'s shardings; corrupted steps
+    fall back to older ones) — a fresh process after a crash picks up
+    where the last commit left off.
+
+    Failure policy (``FieldQueue``): a failed step sleeps an
+    exponentially-backed-off, deterministically-jittered delay, restores
+    the latest commit, and replays.  A step that fails more than
+    ``max_retries`` times is **quarantined** when ``quarantine=True``
+    (recorded in ``stats.quarantined`` with the exception chain; the
+    state simply never receives that step's update and the loop moves
+    on) or, with the default ``quarantine=False``, raises ``RuntimeError``
+    exactly like the legacy loop.  Either way the circuit ``breaker``
+    aborts when failures dominate all attempts.
+
+    ``chaos`` is an optional ``runtime/chaos.ChaosHarness``: it may raise
+    structured step faults (transient/poison/straggler) before each step
+    and corrupt freshly-committed checkpoints after each save — all
+    deterministic in ``(seed, site, step)``.  ``fault_injector`` is the
+    legacy hook: a bare ``step -> bool`` that raises ``StepFailure`` when
+    True.
+
+    ``checkpointer=None`` runs the same queue policy without any
+    checkpoint/restore: failed steps retry in place (``step_fn`` is
+    functional — a raising step never mutated the caller's state), and
+    quarantine/breaker semantics are unchanged.
     """
     stats = LoopStats()
+    policy = policy or RetryPolicy(max_retries=max_retries)
+    queue = queue or FieldQueue(num_steps, policy=policy, breaker=breaker)
     step = start_step
     if step is None:
-        latest = checkpointer.latest_step()
-        if latest is not None:
-            state = checkpointer.restore(latest, state)
-            step = latest
-            stats.restores += 1
-            log(f"resumed from checkpoint step {latest}")
+        state, step = _restore_latest(checkpointer, state, stats, log)
+        if step is not None:
+            log(f"resumed from checkpoint step {step}")
         else:
             step = 0
+    queue.fast_forward(step)
 
     preempted = {"flag": False}
 
     def on_sigterm(signum, frame):
         preempted["flag"] = True
 
-    old = signal.signal(signal.SIGTERM, on_sigterm)
-    retries = 0
+    # signal.signal raises ValueError off the main thread (a threaded
+    # test driver or a future multi-host launcher); preemption saves are
+    # then simply unavailable, which is the right degraded behavior
+    old = None
+    on_main = threading.current_thread() is threading.main_thread()
+    if on_main:
+        old = signal.signal(signal.SIGTERM, on_sigterm)
     try:
-        while step < num_steps:
+        while True:
+            item = queue.take()
+            if item is None or item >= num_steps:
+                break
             try:
-                if fault_injector is not None and fault_injector(step):
-                    raise StepFailure(f"injected fault at step {step}")
+                if chaos is not None:
+                    chaos.step_fault(item, queue.attempts.get(item, 0))
+                if fault_injector is not None and fault_injector(item):
+                    raise StepFailure(f"injected fault at step {item}")
                 t_step = time.perf_counter()
-                state, loss = step_fn(state, step)
+                state, loss = step_fn(state, item)
                 stats.step_times.append(time.perf_counter() - t_step)
                 stats.losses.append(float(loss))
                 stats.steps_run += 1
-                step += 1
-                retries = 0
-                if step % ckpt_every == 0 or step == num_steps:
+                queue.complete(item)
+                step = item + 1
+                if checkpointer is not None and (
+                        step % ckpt_every == 0 or step == num_steps):
                     checkpointer.save(step, state)
                     stats.checkpoints += 1
+                    if chaos is not None:
+                        chaos.checkpoint_fault(checkpointer, step)
                 if preempted["flag"]:
-                    log(f"preempted; final save at step {step}")
-                    checkpointer.save(step, state, blocking=True)
-                    stats.checkpoints += 1
+                    if checkpointer is not None:
+                        log(f"preempted; final save at step {step}")
+                        checkpointer.save(step, state, blocking=True)
+                        stats.checkpoints += 1
                     break
             except StepFailure as e:
                 stats.failures += 1
-                retries += 1
-                if retries > max_retries:
+                action = queue.fail(item, e)
+                if action.kind == "abort":
                     raise RuntimeError(
-                        f"step {step} failed {retries} times") from e
-                latest = checkpointer.latest_step()
+                        "circuit breaker tripped: "
+                        f"{queue._failures} failures over "
+                        f"{queue._failures + queue._successes} attempts"
+                    ) from e
+                if action.kind == "quarantine":
+                    if not quarantine:
+                        raise RuntimeError(
+                            f"step {item} failed "
+                            f"{action.record.attempts} times") from e
+                    stats.quarantined.append(action.record)
+                    log(f"step {item} quarantined after "
+                        f"{action.record.attempts} attempts: {e}")
+                    continue            # hole: state never sees this step
+                stats.backoff_seconds += action.delay
+                time.sleep(action.delay)
+                state, latest = _restore_latest(checkpointer, state,
+                                                stats, log)
                 if latest is not None:
-                    checkpointer.wait()
-                    state = checkpointer.restore(latest, state)
-                    step = latest
-                    stats.restores += 1
-                    log(f"failure at step {step}: {e}; restored {latest}")
+                    queue.rewind(latest)
+                    log(f"failure at step {item}: {e}; restored {latest}")
                 else:
                     log(f"failure before first checkpoint: {e}; retrying")
-                time.sleep(0.01)
     finally:
-        signal.signal(signal.SIGTERM, old)
-        checkpointer.wait()
+        if on_main:
+            signal.signal(signal.SIGTERM, old)
+        if checkpointer is not None:
+            checkpointer.wait()
     return state, stats

@@ -1,0 +1,234 @@
+"""Chaos-harness tests (ISSUE 8: fault-domain isolation).
+
+Covers: deterministic injection decisions, SurveyStore prefetch-error
+surfacing + synchronous retry, NaN-pixel sanitize-vs-quarantine, the
+degradation ladder in run_inference (via injected non-finite Newton
+rows), pipeline-level poison quarantine, and the zero-rate bit-identity
+guarantee (a wired-but-silent harness changes nothing).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import infer, pipeline, synthetic
+from repro.data.images import SurveyStore
+from repro.runtime import chaos, fault
+
+
+# ---------------------------------------------------------------------------
+# Determinism of the harness itself
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_decisions_are_deterministic():
+    a = chaos.ChaosHarness(seed=5, transient_rate=0.4, poison_rate=0.2)
+    b = chaos.ChaosHarness(seed=5, transient_rate=0.4, poison_rate=0.2)
+    assert a.poison_steps(64) == b.poison_steps(64)
+    for s in range(64):
+        assert a.uniform("transient", s) == b.uniform("transient", s)
+    c = chaos.ChaosHarness(seed=6, transient_rate=0.4, poison_rate=0.2)
+    assert a.poison_steps(256) != c.poison_steps(256)
+
+
+def test_chaos_transient_fires_once_poison_every_attempt():
+    h = chaos.ChaosHarness(seed=0, poison_fields=(2,), transient_rate=1.0)
+    # transient: attempt 0 only, so a retry clears it
+    with pytest.raises(fault.TransientFailure):
+        h.step_fault(0, 0)
+    h.step_fault(0, 1)
+    # poison: every attempt
+    for attempt in range(3):
+        with pytest.raises(fault.PoisonFailure):
+            h.step_fault(2, attempt)
+    assert h.fired["poison"] == 3
+
+
+def test_chaos_spec_zero_rates_disabled_and_silent():
+    h = chaos.ChaosHarness(seed=1)
+    assert not h.spec.enabled
+    for s in range(16):
+        h.step_fault(s, 0)
+        assert not h.is_poison(s)
+    img = np.ones((2, 8, 8), np.float32)
+    assert h.corrupt_pixels(img, 0) is img
+    assert not h.newton_rows(0, np.arange(5)).any()
+    assert sum(h.fired.values()) == 0
+
+
+# ---------------------------------------------------------------------------
+# SurveyStore: prefetch-error surfacing + pixel corruption
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_survey():
+    return synthetic.sample_survey(jax.random.PRNGKey(7),
+                                   priors=synthetic.bright_priors(),
+                                   grid=(1, 2), field=48, overlap=16,
+                                   sources_per_field=2)
+
+
+def test_prefetch_error_surfaced_and_retried_once(tiny_survey):
+    """An IO fault in the prefetch thread must not silently die with the
+    daemon thread: it is counted, and ONE synchronous retry serves the
+    field."""
+    clean = SurveyStore(tiny_survey)
+    img_ref, _ = clean.fetch(0)
+
+    h = chaos.ChaosHarness(seed=0, prefetch_rate=1.0)
+    store = SurveyStore(tiny_survey, chaos=h)
+    store.prefetch(0)
+    images, metas = store.fetch(0)        # retry (attempt 1) succeeds
+    assert store.stats.prefetch_errors == 1
+    assert h.fired["prefetch"] == 1
+    np.testing.assert_array_equal(np.asarray(images), np.asarray(img_ref))
+
+
+def test_prefetch_persistent_error_raises_with_chain(tiny_survey):
+    class AlwaysBroken:
+        def prefetch_fault(self, index, attempt):
+            raise OSError(f"disk gone (attempt {attempt})")
+
+        def corrupt_pixels(self, images, index):
+            return images
+
+    store = SurveyStore(tiny_survey, chaos=AlwaysBroken())
+    store.prefetch(0)
+    with pytest.raises(OSError, match="attempt 1") as ei:
+        store.fetch(0)
+    # the original prefetch-thread exception rides the chain
+    assert isinstance(ei.value.__cause__, OSError)
+    assert "attempt 0" in str(ei.value.__cause__)
+    assert store.stats.prefetch_errors == 1
+
+
+def test_corrupt_pixels_deterministic_block(tiny_survey):
+    h = chaos.ChaosHarness(seed=3, nan_fields=(0,), nan_block=8)
+    img = np.asarray(tiny_survey.fields[0].images)
+    out1, out2 = h.corrupt_pixels(img, 0), h.corrupt_pixels(img, 0)
+    bad = ~np.isfinite(out1)
+    assert bad.sum() == img.shape[0] * 8 * 8        # every image stamped
+    np.testing.assert_array_equal(bad, ~np.isfinite(out2))
+    assert np.isfinite(h.corrupt_pixels(img, 1)).all()   # other fields
+
+
+# ---------------------------------------------------------------------------
+# Degradation ladder (source-level graceful degradation)
+# ---------------------------------------------------------------------------
+
+
+def test_injected_newton_rows_walk_degradation_ladder():
+    """Inject non-finite rows for every source: the harvest must pull
+    them from the main segments and the first ladder rung (ref backend,
+    restart from seed) must recover them with QUALITY_REF flags."""
+    sky = synthetic.sample_sky(jax.random.PRNGKey(2), num_sources=4,
+                               field=48, priors=synthetic.bright_priors())
+    clean_thetas, clean_stats = infer.run_inference(
+        sky.images, sky.metas, sky.truth, synthetic.bright_priors(),
+        patch=16, batch=4, max_iters=30)
+    assert clean_stats.harvested == 0
+    np.testing.assert_array_equal(clean_stats.quality, 0)
+
+    h = chaos.ChaosHarness(seed=0, newton_rate=1.0)
+    thetas, stats = infer.run_inference(
+        sky.images, sky.metas, sky.truth, synthetic.bright_priors(),
+        patch=16, batch=4, max_iters=30, chaos=h, chaos_tag=0)
+    assert stats.harvested == 4
+    assert stats.degraded == 4
+    np.testing.assert_array_equal(stats.quality, infer.QUALITY_REF)
+    assert np.isfinite(np.asarray(thetas)).all()
+    assert np.isfinite(stats.elbo_values).all()
+    # the rescued fits are real fits, not placeholders: same optimum as
+    # the clean run to optimizer tolerance
+    np.testing.assert_allclose(np.asarray(thetas),
+                               np.asarray(clean_thetas), atol=0.3)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-level quarantine + bit-identity
+# ---------------------------------------------------------------------------
+
+SURVEY_KW = dict(grid=(2, 2), field=64, overlap=24, sources_per_field=3)
+PIPE_KW = dict(priors=synthetic.bright_priors(), patch=16, batch=4,
+               max_iters=30)
+
+
+@pytest.fixture(scope="module")
+def small_survey():
+    return synthetic.sample_survey(jax.random.PRNGKey(7),
+                                   priors=synthetic.bright_priors(),
+                                   **SURVEY_KW)
+
+
+@pytest.fixture(scope="module")
+def fault_free(small_survey):
+    return pipeline.run_pipeline(small_survey, **PIPE_KW)
+
+
+def test_pipeline_zero_rate_chaos_bit_identical(small_survey, fault_free):
+    """A wired harness with all rates zero must not perturb anything:
+    the catalog is bit-identical to chaos=None."""
+    res = pipeline.run_pipeline(
+        small_survey, chaos=chaos.ChaosHarness(seed=0), **PIPE_KW)
+    np.testing.assert_array_equal(res.thetas, fault_free.thetas)
+    np.testing.assert_array_equal(res.field_of, fault_free.field_of)
+    np.testing.assert_array_equal(res.quality, 0)
+    assert res.stats.quarantined == []
+
+
+def test_pipeline_quarantines_poison_field(small_survey, fault_free,
+                                           tmp_path):
+    """A field that fails every attempt is quarantined — the survey
+    completes with a hole, and the rest of the catalog is intact."""
+    h = chaos.ChaosHarness(seed=0, poison_fields=(1,))
+    res = pipeline.run_pipeline(
+        small_survey, chaos=h, max_retries=1,
+        checkpoint_dir=str(tmp_path / "ck"), **PIPE_KW)
+    assert [r.item for r in res.stats.quarantined] == [1]
+    assert res.stats.fields_quarantined == 1
+    assert res.stats.fields_run == 3               # 0, 2, 3
+    assert not (res.field_of == 1).any()           # the hole
+    # completeness over the truth the surviving fields own stays at the
+    # fault-free gate
+    truth = np.asarray(small_survey.truth.pos)
+    owner = pipeline.owner_of(truth, grid=small_survey.grid,
+                              field=small_survey.field,
+                              overlap=small_survey.overlap)
+    remaining = truth[owner != 1]
+    from repro.core import detect
+    m = detect.detection_metrics(np.asarray(res.catalog.pos), remaining)
+    assert m["completeness"] >= 0.9, m
+    # surviving fields' fits match the fault-free run exactly
+    for f in (0, 2, 3):
+        np.testing.assert_array_equal(
+            res.thetas[res.field_of == f],
+            fault_free.thetas[fault_free.field_of == f])
+
+
+def test_pipeline_nan_block_sanitized_below_tolerance(small_survey,
+                                                      fault_free):
+    """A small NaN block (dead pixels) is sanitized in place and counted;
+    the field still fits and the survey metrics hold."""
+    h = chaos.ChaosHarness(seed=0, nan_fields=(2,), nan_block=4)
+    res = pipeline.run_pipeline(small_survey, chaos=h,
+                                nan_pixel_tolerance=0.02, **PIPE_KW)
+    assert res.stats.quarantined == []
+    rec = res.stats.fields[2]
+    n_img = np.asarray(small_survey.fields[2].images).shape[0]
+    assert rec.bad_pixels == n_img * 4 * 4
+    assert res.stats.metrics["completeness"] >= 0.9
+    # untouched fields are bit-identical to the fault-free run
+    np.testing.assert_array_equal(res.thetas[res.field_of == 0],
+                                  fault_free.thetas[fault_free.field_of == 0])
+
+
+def test_pipeline_nan_flood_quarantines_field(small_survey, tmp_path):
+    """A NaN fraction above tolerance is a deterministic data fault:
+    retries cannot help, so the field is quarantined."""
+    h = chaos.ChaosHarness(seed=0, nan_fields=(3,), nan_block=16)
+    res = pipeline.run_pipeline(
+        small_survey, chaos=h, max_retries=1, nan_pixel_tolerance=0.01,
+        checkpoint_dir=str(tmp_path / "ck"), **PIPE_KW)
+    assert [r.item for r in res.stats.quarantined] == [3]
+    assert "PoisonFailure" in res.stats.quarantined[0].chain[0]
+    assert not (res.field_of == 3).any()

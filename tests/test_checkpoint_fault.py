@@ -1,17 +1,21 @@
 """Checkpoint + fault-tolerance tests (assignment: large-scale runnability).
 
 Covers: atomic commit, keep-k GC, async error surfacing, restore-into-
-template, deterministic replay after injected failures, preemption save.
+template, deterministic replay after injected failures, preemption save,
+content integrity (per-leaf SHA-256 + fall-back past corrupted steps),
+and the FieldQueue retry/quarantine/breaker state machine.
 """
 import os
+import threading
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.checkpointer import Checkpointer
-from repro.runtime import fault
+from repro.checkpoint.checkpointer import (CheckpointCorruptError,
+                                           Checkpointer)
+from repro.runtime import chaos, fault
 
 
 def _state(v=0.0):
@@ -106,3 +110,212 @@ def test_elastic_restore_dtype_cast(tmp_path):
     ck.save(1, {"w": jnp.ones((3,), jnp.float32)}, blocking=True)
     out = ck.restore(1, {"w": jnp.zeros((3,), jnp.bfloat16)})
     assert out["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Content integrity: per-leaf SHA-256 + fall-back past corrupted steps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", [0, 1],
+                         ids=["truncated-leaf", "flipped-byte"])
+def test_restore_detects_corruption(tmp_path, variant):
+    """A truncated leaf or a single flipped payload byte fails restore
+    with CheckpointCorruptError (not a wrong-answer silent load)."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(2.0), blocking=True)
+    chaos.corrupt_checkpoint(str(tmp_path / "step_1"), variant)
+    with pytest.raises(CheckpointCorruptError):
+        ck.restore(1, _state(0.0))
+
+
+@pytest.mark.parametrize("variant", [0, 1, 2],
+                         ids=["truncated-leaf", "flipped-byte",
+                              "missing-committed"])
+def test_restore_latest_falls_back_past_corruption(tmp_path, variant):
+    """restore_latest skips a damaged newest step (quarantining it on
+    disk) and restores the next-older committed one."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(1.0), blocking=True)
+    ck.save(2, _state(2.0), blocking=True)
+    chaos.corrupt_checkpoint(str(tmp_path / "step_2"), variant)
+    out = ck.restore_latest(_state(0.0))
+    assert out is not None
+    state, step, skipped = out
+    assert step == 1
+    assert skipped == (0 if variant == 2 else 1)
+    np.testing.assert_allclose(np.asarray(state["w"]), 1.0)
+    if variant != 2:
+        # the damaged directory was renamed out of the scan
+        assert (tmp_path / "step_2.corrupt").exists()
+        assert ck.steps() == [1]
+
+
+def test_restore_latest_none_when_all_corrupt(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(1.0), blocking=True)
+    chaos.corrupt_checkpoint(str(tmp_path / "step_1"), 0)
+    assert ck.restore_latest(_state(0.0)) is None
+
+
+def test_steps_skips_stray_directories(tmp_path):
+    """Non-numeric step_* suffixes (editor droppings, quarantined
+    .corrupt dirs) must not crash the scan."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, _state(), blocking=True)
+    for stray in ("step_abc", "step_5.corrupt", "step_"):
+        os.makedirs(tmp_path / stray)
+        with open(tmp_path / stray / "COMMITTED", "w") as f:
+            f.write("ok")
+    assert ck.steps() == [3]
+
+
+def test_restore_num_leaves_mismatch_clear_error(tmp_path):
+    """A checkpoint whose manifest leaf count disagrees with the template
+    tree raises a ValueError naming the structural mismatch — not an
+    opaque missing-file error, and never the corruption fall-back."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(), blocking=True)
+    grown = dict(_state(), extra=jnp.zeros((2,)))
+    with pytest.raises(ValueError, match="state structure changed"):
+        ck.restore(1, grown)
+    # restore_latest must propagate it (an older step cannot fix it)
+    with pytest.raises(ValueError, match="state structure changed"):
+        ck.restore_latest(grown)
+
+
+# ---------------------------------------------------------------------------
+# FieldQueue: retry/backoff, quarantine, circuit breaker
+# ---------------------------------------------------------------------------
+
+
+def test_retry_policy_backoff_deterministic_and_bounded():
+    pol = fault.RetryPolicy(max_retries=5, backoff_base=0.01,
+                            backoff_cap=0.5, seed=7)
+    d1 = [pol.delay(3, a) for a in range(1, 6)]
+    d2 = [pol.delay(3, a) for a in range(1, 6)]
+    assert d1 == d2                              # deterministic jitter
+    assert d1 != [pol.delay(4, a) for a in range(1, 6)]  # decorrelated
+    assert all(0.0 < d <= 0.5 for d in d1)
+    # exponential envelope: delay(a) ≤ cap and grows until the cap bites
+    assert d1[1] > d1[0] * 0.9
+
+
+def test_field_queue_quarantines_after_max_retries():
+    q = fault.FieldQueue(4, policy=fault.RetryPolicy(
+        max_retries=2, backoff_base=0.0))
+    err = fault.PoisonFailure("bad field")
+    assert q.take() == 0
+    for _ in range(2):
+        assert q.fail(0, err).kind == "retry"
+    action = q.fail(0, err)
+    assert action.kind == "quarantine"
+    assert action.record.attempts == 3
+    assert "PoisonFailure" in action.record.chain[0]
+    assert not q.is_pending(0)
+    assert q.take() == 1                      # the queue moves on
+    assert 0 in q.quarantined
+
+
+def test_field_queue_attempts_survive_rewind():
+    """A checkpoint restore re-pends completed items but must NOT reset
+    failure counts — a poison item accumulates attempts across restores
+    and is eventually quarantined instead of retried forever."""
+    q = fault.FieldQueue(5, policy=fault.RetryPolicy(max_retries=1))
+    q.complete(0)
+    q.complete(1)
+    err = fault.PoisonFailure("poison")
+    assert q.fail(2, err).kind == "retry"
+    q.rewind(1)                                # restore to step 1
+    assert q.is_pending(1) and not q.is_pending(0)
+    assert q.fail(2, err).kind == "quarantine"
+
+
+def test_circuit_breaker_aborts_runaway_run(tmp_path):
+    """When failures dominate all attempts the loop aborts with a
+    RuntimeError even under quarantine=True — a cluster-wide outage must
+    not be absorbed field by field."""
+    ck = Checkpointer(str(tmp_path))
+
+    def step_fn(state, step):
+        return state, 0.0
+
+    with pytest.raises(RuntimeError, match="circuit breaker"):
+        fault.run_loop(
+            _state(), step_fn, num_steps=50, checkpointer=ck,
+            ckpt_every=100, max_retries=0, quarantine=True,
+            policy=fault.RetryPolicy(max_retries=0, backoff_base=0.0),
+            breaker=fault.CircuitBreaker(threshold=0.5, min_failures=4),
+            fault_injector=lambda step: True)
+
+
+def test_run_loop_quarantine_skips_poison_step(tmp_path):
+    """quarantine=True: the poison step becomes a hole (state never sees
+    its update), everything else completes, and the record carries the
+    exception chain."""
+    ck = Checkpointer(str(tmp_path))
+
+    def step_fn(state, step):
+        new = {"w": state["w"] + 1.0, "step": jnp.asarray(step + 1.0)}
+        return new, float(step)
+
+    state, stats = fault.run_loop(
+        _state(0.0), step_fn, num_steps=6, checkpointer=ck, ckpt_every=2,
+        quarantine=True,
+        policy=fault.RetryPolicy(max_retries=1, backoff_base=0.0),
+        fault_injector=lambda step: step == 3)
+    assert [r.item for r in stats.quarantined] == [3]
+    assert stats.quarantined[0].attempts == 2
+    # 5 of 6 steps applied: the hole is exactly one +1 increment
+    np.testing.assert_allclose(float(state["w"][0, 0]), 5.0)
+    # the failed attempt restored to step 2 and replayed item 2, so six
+    # step executions produced the five applied updates
+    assert stats.steps_run == 6 and stats.restores == 1
+
+
+def test_run_loop_without_checkpointer_retries_in_place():
+    """checkpointer=None: same queue policy, no restore — transient
+    failures retry in place and the final state is complete."""
+    fails = {2}
+
+    def injector(step):
+        if step in fails:
+            fails.discard(step)
+            return True
+        return False
+
+    def step_fn(state, step):
+        return {"w": state["w"] + 1.0, "step": jnp.asarray(step + 1.0)}, 0.0
+
+    state, stats = fault.run_loop(
+        _state(0.0), step_fn, num_steps=4, checkpointer=None,
+        policy=fault.RetryPolicy(max_retries=2, backoff_base=0.0),
+        fault_injector=injector)
+    assert stats.failures == 1 and stats.restores == 0
+    np.testing.assert_allclose(float(state["w"][0, 0]), 4.0)
+
+
+def test_run_loop_usable_off_main_thread(tmp_path):
+    """signal.signal raises from worker threads; the loop must detect it
+    is off the main thread and skip SIGTERM registration (a threaded
+    test driver or multi-host launcher)."""
+    ck = Checkpointer(str(tmp_path))
+    out = {}
+
+    def step_fn(state, step):
+        return {"w": state["w"] + 1.0, "step": jnp.asarray(step + 1.0)}, 0.0
+
+    def worker():
+        try:
+            out["result"] = fault.run_loop(
+                _state(0.0), step_fn, num_steps=3, checkpointer=ck,
+                ckpt_every=10)
+        except BaseException as e:       # pragma: no cover
+            out["error"] = e
+
+    th = threading.Thread(target=worker)
+    th.start()
+    th.join()
+    assert "error" not in out, out.get("error")
+    state, stats = out["result"]
+    np.testing.assert_allclose(float(state["w"][0, 0]), 3.0)

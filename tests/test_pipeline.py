@@ -7,9 +7,10 @@ import jax
 import numpy as np
 import pytest
 
+from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import detect, pipeline, synthetic
 from repro.data.images import ImageStore, SurveyStore
-from repro.runtime import fault
+from repro.runtime import chaos, fault
 
 
 # ---------------------------------------------------------------------------
@@ -189,14 +190,16 @@ def test_pipeline_kill_and_resume_reproduces_catalog(small_survey,
                                                      uninterrupted,
                                                      tmp_path):
     """Kill the run after 2 committed fields (injected failure with zero
-    retries), resume from the checkpoint directory, and require the
-    stitched catalog to match the uninterrupted run exactly."""
+    retries and quarantine off, simulating a process death), resume from
+    the checkpoint directory, and require the stitched catalog to match
+    the uninterrupted run exactly."""
     ref, _ = uninterrupted
     ckdir = str(tmp_path / "ck")
 
     with pytest.raises(RuntimeError):
         pipeline.run_pipeline(
             small_survey, checkpoint_dir=ckdir, max_retries=0,
+            quarantine=False,
             fault_injector=lambda step: step == 2, **PIPE_KW)
 
     res = pipeline.run_pipeline(small_survey, checkpoint_dir=ckdir,
@@ -231,6 +234,45 @@ def test_pipeline_transient_failure_replays_deterministically(
     # reproduce the reference catalog exactly
     assert res.stats.loop.restores in (0, 1)
     np.testing.assert_allclose(res.thetas, ref.thetas, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("variant", [0, 1, 2],
+                         ids=["truncated-leaf", "flipped-byte",
+                              "missing-committed"])
+def test_pipeline_resumes_past_corrupted_checkpoint(small_survey,
+                                                    uninterrupted,
+                                                    tmp_path, variant):
+    """Corrupt the newest committed checkpoint (one test per damage
+    class: truncated leaf, flipped payload byte, deleted COMMITTED
+    sentinel); the resumed run must fall back to the next-older step,
+    replay, and reproduce the uninterrupted catalog bit-for-bit."""
+    ref, _ = uninterrupted
+    ckdir = str(tmp_path / "ck")
+    # partial run: fields 0..2 commit (steps 1..3), then a simulated
+    # process death at field 3
+    with pytest.raises(RuntimeError):
+        pipeline.run_pipeline(
+            small_survey, checkpoint_dir=ckdir, max_retries=0,
+            quarantine=False, fault_injector=lambda step: step == 3,
+            **PIPE_KW)
+    ck = Checkpointer(ckdir)
+    latest = ck.latest_step()
+    assert latest == 3
+    chaos.corrupt_checkpoint(f"{ckdir}/step_{latest}", variant)
+
+    res = pipeline.run_pipeline(small_survey, checkpoint_dir=ckdir,
+                                **PIPE_KW)
+    if variant == 2:
+        # a missing sentinel makes the step invisible to the scan rather
+        # than corrupt — the fallback is silent, not counted
+        assert res.stats.loop.corrupt_skipped == 0
+    else:
+        assert res.stats.loop.corrupt_skipped == 1
+    assert res.stats.fields_run == 2        # fields 2, 3 replayed
+    np.testing.assert_array_equal(res.field_of, ref.field_of)
+    np.testing.assert_allclose(res.thetas, ref.thetas, rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(res.catalog.pos),
+                               np.asarray(ref.catalog.pos))
 
 
 def test_image_store_stats_vectorized_accounting():
