@@ -1,0 +1,187 @@
+"""Stitch-quality benchmark: Bayesian match posteriors vs the greedy cut.
+
+Builds a *crowded-boundary* synthetic survey — sources placed ON the
+ownership mid-lines, the worst case for cross-field duplicate fits: each
+boundary source is detected by both adjacent fields and lands on either
+side of the ownership line at the whim of sub-pixel detection noise, so
+the stitcher sees the maximum density of genuine duplicates exactly
+where the geometry is hardest.  The full pipeline then runs twice over
+the same survey, once per stitch method:
+
+* ``greedy`` — the legacy hard ``match_radius`` cut,
+* ``bayes``  — match posteriors from the fits' Hessian positional
+  covariances (``core/associate.py``), merged at ``match_threshold``.
+
+Reported per method: stitched-catalog **precision** (purity: fitted
+sources that correspond to a real one) and **recall** (completeness:
+truth sources recovered), duplicate fits surviving the stitch, and the
+ambiguous pairs the Bayesian path retains.  ``--smoke`` is the CI gate:
+Bayesian precision AND recall ≥ greedy with ZERO duplicate fits, plus
+the kill-and-resume contract on the widened (v2, ``pos_cov``-carrying)
+checkpoint slab — a run killed mid-survey and resumed must reproduce
+the uninterrupted catalog (thetas, positions, covariances) exactly.
+"""
+from __future__ import annotations
+
+try:
+    from benchmarks import common  # noqa: F401  (repo-root/src sys.path shim)
+except ImportError:                # script-path invocation
+    import common                  # noqa: F401
+
+import argparse
+import json
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import pipeline, synthetic
+
+
+def crowded_boundary_survey(seed=0, grid=(2, 2), field=64, overlap=24,
+                            per_line=8, n_interior=6, min_sep=6.0):
+    """A survey whose sources sit on the ownership mid-lines.
+
+    ``per_line`` sources ride each interior mid-line (jittered ±0.5 px
+    across it, so which side they are detected on is genuinely noisy)
+    plus ``n_interior`` scattered interior sources; everything is kept
+    ``min_sep`` apart so detection's local-max suppression does not
+    blend neighbors and the stitcher is tested on duplicates, not
+    blends."""
+    stride = field - overlap
+    extent = (grid[0] * stride + overlap, grid[1] * stride + overlap)
+    half = overlap / 2.0
+    rng = np.random.default_rng(seed)
+    pts = []
+
+    def admit(p):
+        if pts and np.min(np.linalg.norm(np.asarray(pts) - p, axis=1)) \
+                < min_sep:
+            return
+        pts.append(p)
+
+    for i in range(1, grid[0]):          # horizontal mid-lines
+        r = i * stride + half
+        for c in np.linspace(10.0, extent[1] - 10.0, per_line):
+            admit(np.array([r + rng.uniform(-0.5, 0.5), c]))
+    for j in range(1, grid[1]):          # vertical mid-lines
+        c = j * stride + half
+        for r in np.linspace(10.0, extent[0] - 10.0, per_line):
+            admit(np.array([r, c + rng.uniform(-0.5, 0.5)]))
+    for _ in range(n_interior):
+        for _attempt in range(50):
+            p = np.array([rng.uniform(12.0, extent[0] - 12.0),
+                          rng.uniform(12.0, extent[1] - 12.0)])
+            before = len(pts)
+            admit(p)
+            if len(pts) > before:
+                break
+    return synthetic.sample_survey(
+        jax.random.PRNGKey(seed), grid=grid, field=field, overlap=overlap,
+        priors=synthetic.bright_priors(), positions=np.asarray(pts))
+
+
+PIPE_KW = dict(patch=16, batch=8, max_iters=30)
+
+
+def run(seed=0, grid=(2, 2), field=64, overlap=24, per_line=8,
+        resume_check=True) -> dict:
+    survey = crowded_boundary_survey(seed=seed, grid=grid, field=field,
+                                    overlap=overlap, per_line=per_line)
+    priors = synthetic.bright_priors()
+    out: dict = {"n_truth": int(np.asarray(survey.truth.pos).shape[0]),
+                 "grid": list(grid)}
+    results = {}
+    for method in ("greedy", "bayes"):
+        t0 = time.perf_counter()
+        res = pipeline.run_pipeline(survey, priors,
+                                    stitch_method=method, **PIPE_KW)
+        wall = time.perf_counter() - t0
+        m = res.stats.metrics
+        results[method] = res
+        out[method] = {
+            "precision": m["purity"], "recall": m["completeness"],
+            "duplicates": m["duplicates"],
+            "n_catalog": int(np.asarray(res.catalog.pos).shape[0]),
+            "duplicates_removed": res.stats.duplicates_removed,
+            "n_candidate_pairs": int(res.stitch.pairs.shape[0]),
+            "n_ambiguous": res.stitch.n_ambiguous,
+            "wall_seconds": wall,
+        }
+
+    # ---- kill-and-resume on the widened (pos_cov) slab ----
+    # a run killed after 2 committed fields and resumed from the same
+    # checkpoint directory must reproduce the uninterrupted Bayesian
+    # catalog exactly: thetas, stitched positions AND the new
+    # position_cov plane all ride the v2 slab deterministically
+    if resume_check:
+        ref = results["bayes"]
+        with tempfile.TemporaryDirectory() as ckdir:
+            try:
+                pipeline.run_pipeline(
+                    survey, priors, stitch_method="bayes",
+                    checkpoint_dir=ckdir, max_retries=0, quarantine=False,
+                    fault_injector=lambda step: step == 2, **PIPE_KW)
+                raise AssertionError("injected kill did not raise")
+            except RuntimeError:
+                pass
+            res = pipeline.run_pipeline(survey, priors,
+                                        stitch_method="bayes",
+                                        checkpoint_dir=ckdir, **PIPE_KW)
+        out["resume_exact"] = bool(
+            res.thetas.shape == ref.thetas.shape
+            and np.array_equal(res.thetas, ref.thetas)
+            and np.array_equal(np.asarray(res.catalog.pos),
+                               np.asarray(ref.catalog.pos))
+            and np.array_equal(res.position_cov, ref.position_cov))
+        out["resume_fields_run"] = res.stats.fields_run
+    return out
+
+
+def main_csv():
+    r = run()
+    b, g = r["bayes"], r["greedy"]
+    emit("association.crowded_boundary", b["wall_seconds"] * 1e6,
+         f"precision={b['precision']:.2f}(greedy {g['precision']:.2f});"
+         f"recall={b['recall']:.2f}(greedy {g['recall']:.2f});"
+         f"dups={b['duplicates']};ambiguous={b['n_ambiguous']};"
+         f"resume_exact={r.get('resume_exact')}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", default="2x2")
+    ap.add_argument("--field", type=int, default=64)
+    ap.add_argument("--overlap", type=int, default=24)
+    ap.add_argument("--per-line", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="/tmp/association.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert the CI gate: Bayesian stitch precision "
+                         "and recall ≥ the greedy baseline, zero "
+                         "duplicate fits, and exact kill-and-resume on "
+                         "the widened checkpoint slab")
+    args = ap.parse_args()
+    grid = tuple(int(g) for g in args.grid.split("x"))
+    r = run(seed=args.seed, grid=grid, field=args.field,
+            overlap=args.overlap, per_line=args.per_line)
+    print(json.dumps(r, indent=1))
+    with open(args.out, "w") as f:
+        json.dump(r, f, indent=1)
+    if args.smoke:
+        b, g = r["bayes"], r["greedy"]
+        assert b["precision"] >= g["precision"], r
+        assert b["recall"] >= g["recall"], r
+        assert b["duplicates"] == 0, r
+        assert r["resume_exact"], r
+        print("SMOKE OK: bayes precision "
+              f"{b['precision']:.2f} vs greedy {g['precision']:.2f}, "
+              f"recall {b['recall']:.2f} vs {g['recall']:.2f}, "
+              f"0 duplicates, resume exact "
+              f"({b['n_ambiguous']} ambiguous pairs retained)")
+
+
+if __name__ == "__main__":
+    main()

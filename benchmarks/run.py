@@ -16,11 +16,12 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (chaos_goodput, fig3_batch_scaling,
-                            fig4_weak_scaling, fig5_strong_scaling,
-                            fig6_sources_per_sec, kernel_occupancy,
-                            mesh_compaction, newton_fused, pipeline_e2e,
-                            roofline, scheduler_adaptive, table1_accuracy)
+    from benchmarks import (association, chaos_goodput,
+                            fig3_batch_scaling, fig4_weak_scaling,
+                            fig5_strong_scaling, fig6_sources_per_sec,
+                            kernel_occupancy, mesh_compaction,
+                            newton_fused, pipeline_e2e, roofline,
+                            scheduler_adaptive, table1_accuracy)
     suites = [
         ("table1", table1_accuracy.main),
         ("fig3", fig3_batch_scaling.main),
@@ -31,6 +32,7 @@ def main() -> None:
         ("newton_fused", newton_fused.main_csv),
         ("mesh_compaction", mesh_compaction.main_csv),
         ("pipeline_e2e", pipeline_e2e.main_csv),
+        ("association", association.main_csv),
         ("chaos_goodput", chaos_goodput.main_csv),
         ("roofline", roofline.main),
         ("kernel_occupancy", kernel_occupancy.main_csv),

@@ -1,0 +1,488 @@
+"""Bayesian source association: match posteriors from Hessian covariances.
+
+The pipeline's cross-field stitch originally collapsed duplicates with a
+hard radius cut — every pair of fits closer than ``match_radius`` was
+declared the same physical source.  That throws away the ingredient the
+inference already computes: each Newton fit returns an exact [27, 27]
+ELBO Hessian (``newton.NewtonResult.hess``), whose position block is a
+per-source *posterior precision* under the Laplace approximation.  This
+module turns those curvatures into calibrated match probabilities in the
+style of the nway catalogue matcher (PAPERS.md; SNIPPETS.md snippets
+1–2): a pair of fits is scored by the Bayes factor
+
+    B = N(Δμ; 0, C_i + C_j + σ_sys² I) / λ
+
+— the likelihood of the observed separation under "same source"
+(positions differ only by their combined posterior uncertainty plus a
+cross-field astrometric systematic) against "chance alignment" (the
+second position is an unrelated source drawn from the local catalog
+density λ) — optionally weighted by a flux likelihood ratio learned from
+the catalog's own magnitude histograms (nway's ``magnitudeweights``
+idea: two fits of one source share a flux; two unrelated sources draw
+independent fluxes).  The posterior
+
+    p = B·π / (B·π + 1 − π)
+
+replaces the radius cut as the stitch decision, with a threshold for
+confident duplicates and an *ambiguous band* (default 0.1 < p < 0.9)
+whose pairs are retained rather than resolved — they are exactly the
+blend candidates the joint-deblending roadmap item consumes.
+
+``associate_catalogs`` generalizes the same machinery to N-way
+association against an external reference catalog (catalog federation):
+each source gets a posterior over its candidate counterparts *including
+the no-counterpart hypothesis*, so the output can be joined against a
+prior survey instead of refit from scratch.
+
+Everything here is host-side numpy on already-fitted results — no jit,
+no device shapes; candidate generation reuses the radius cell hash so
+association stays near-linear in catalog size.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dataclass_field
+
+import numpy as np
+
+from repro.core import elbo
+
+# Magnitudes per dex of flux (Pogson); only used to express flux ratios
+# in the unit the histogram priors are binned in.
+_MAG_PER_LN = 2.5 / np.log(10.0)
+
+# fallback positional sd (px) for sources with no usable Hessian
+# (degradation-ladder failures, quarantine edges, external catalogs that
+# publish no errors)
+DEFAULT_SIGMA = 0.5
+
+
+# ---------------------------------------------------------------------------
+# Candidate generation: radius cell hash (shared with the stitcher)
+# ---------------------------------------------------------------------------
+
+
+def near_pairs(pos: np.ndarray, radius: float):
+    """All index pairs (i < j) with ``|pos_i − pos_j| ≤ radius`` via a
+    radius-sized cell hash — near-linear in catalog size, versus the
+    dense N² distance matrix that would dominate association on large
+    surveys (duplicates are boundary-local; almost nothing pairs up)."""
+    pos = np.asarray(pos, np.float64).reshape(-1, 2)
+    cells = np.floor(pos / radius).astype(np.int64)
+    bins: dict = {}
+    for idx, key in enumerate(map(tuple, cells)):
+        bins.setdefault(key, []).append(idx)
+    ii, jj = [], []
+    for (cr, cc), members in bins.items():
+        for dr, dc in ((0, 0), (0, 1), (1, -1), (1, 0), (1, 1)):
+            other = members if (dr, dc) == (0, 0) else \
+                bins.get((cr + dr, cc + dc))
+            if other is None:
+                continue
+            for a in members:
+                for b in other:
+                    if (dr, dc) == (0, 0) and b <= a:
+                        continue
+                    ii.append(min(a, b))
+                    jj.append(max(a, b))
+    ii = np.asarray(ii, np.int64)
+    jj = np.asarray(jj, np.int64)
+    if ii.size == 0:
+        return ii, jj, np.zeros(0)
+    dist = np.linalg.norm(pos[ii] - pos[jj], axis=-1)
+    near = dist <= radius
+    return ii[near], jj[near], dist[near]
+
+
+def cross_pairs(pos_a: np.ndarray, pos_b: np.ndarray, radius: float):
+    """All cross-catalog pairs (i into a, j into b) with
+    ``|a_i − b_j| ≤ radius``, same cell-hash construction as
+    ``near_pairs`` but over two catalogs."""
+    pos_a = np.asarray(pos_a, np.float64).reshape(-1, 2)
+    pos_b = np.asarray(pos_b, np.float64).reshape(-1, 2)
+    bins: dict = {}
+    for idx, key in enumerate(map(tuple,
+                                  np.floor(pos_b / radius).astype(np.int64))):
+        bins.setdefault(key, []).append(idx)
+    cells_a = np.floor(pos_a / radius).astype(np.int64)
+    ii, jj = [], []
+    for i, (cr, cc) in enumerate(map(tuple, cells_a)):
+        for dr in (-1, 0, 1):
+            for dc in (-1, 0, 1):
+                for j in bins.get((cr + dr, cc + dc), ()):
+                    ii.append(i)
+                    jj.append(j)
+    ii = np.asarray(ii, np.int64)
+    jj = np.asarray(jj, np.int64)
+    if ii.size == 0:
+        return ii, jj, np.zeros(0)
+    dist = np.linalg.norm(pos_a[ii] - pos_b[jj], axis=-1)
+    near = dist <= radius
+    return ii[near], jj[near], dist[near]
+
+
+# ---------------------------------------------------------------------------
+# Positional covariances from ELBO Hessians
+# ---------------------------------------------------------------------------
+
+
+def position_hessian_block(hess: np.ndarray) -> np.ndarray:
+    """The [..., 2, 2] position block of full [..., 27, 27] ELBO
+    Hessians (``elbo.I_POS`` rows/columns)."""
+    hess = np.asarray(hess)
+    return hess[..., elbo.I_POS, :][..., :, elbo.I_POS]
+
+
+def position_covariance(pos_hess: np.ndarray, *,
+                        sigma_floor: float = 0.05,
+                        sigma_ceil: float = 2.0,
+                        sigma_default: float = DEFAULT_SIGMA) -> np.ndarray:
+    """[S, 2, 2] Laplace positional covariance from [S, 2, 2] position
+    blocks of the (maximized) ELBO Hessian.
+
+    At an interior maximum the ELBO Hessian is negative definite, so the
+    posterior precision is ``−H`` and the covariance its inverse.  Real
+    batches contain imperfect rows — stalled fits with indefinite
+    curvature, harvested non-finite rows (NaN blocks), scheduler padding
+    — so the inversion is guarded: the precision's eigenvalues are
+    clipped to ``[1/σ_ceil², 1/σ_floor²]`` (a source is never claimed
+    more certain than ``sigma_floor`` px or less certain than
+    ``sigma_ceil`` px) and rows with non-finite curvature fall back to
+    an isotropic ``sigma_default`` px covariance.
+    """
+    ph = np.asarray(pos_hess, np.float64).reshape(-1, 2, 2)
+    prec = -0.5 * (ph + np.swapaxes(ph, -1, -2))   # symmetrize −H
+    finite = np.all(np.isfinite(prec), axis=(-2, -1))
+    prec = np.where(finite[:, None, None], prec, np.eye(2))
+    evals, evecs = np.linalg.eigh(prec)
+    evals = np.clip(evals, 1.0 / sigma_ceil**2, 1.0 / sigma_floor**2)
+    cov = np.einsum("sab,sb,scb->sac", evecs, 1.0 / evals, evecs)
+    cov = np.where(finite[:, None, None], cov,
+                   sigma_default**2 * np.eye(2))
+    return cov.reshape(np.shape(pos_hess))
+
+
+def isotropic_covariance(n: int, sigma: float = DEFAULT_SIGMA) -> np.ndarray:
+    """[n, 2, 2] isotropic fallback covariance (σ² I per source)."""
+    return np.broadcast_to(sigma**2 * np.eye(2), (n, 2, 2)).copy()
+
+
+# ---------------------------------------------------------------------------
+# Pair likelihoods
+# ---------------------------------------------------------------------------
+
+
+def _gauss2_logpdf(dpos: np.ndarray, cov: np.ndarray):
+    """log N(dpos; 0, cov) for [P, 2] offsets under [P, 2, 2] covariances
+    (closed-form 2×2 inverse).  Returns (logpdf [P], maha2 [P])."""
+    dpos = np.asarray(dpos, np.float64).reshape(-1, 2)
+    cov = np.asarray(cov, np.float64).reshape(-1, 2, 2)
+    a, b = cov[:, 0, 0], cov[:, 0, 1]
+    c, d = cov[:, 1, 0], cov[:, 1, 1]
+    det = np.maximum(a * d - b * c, 1e-12)
+    dx, dy = dpos[:, 0], dpos[:, 1]
+    maha2 = (d * dx * dx - (b + c) * dx * dy + a * dy * dy) / det
+    logpdf = -0.5 * maha2 - 0.5 * np.log(det) - np.log(2.0 * np.pi)
+    return logpdf, maha2
+
+
+def estimate_density(pos: np.ndarray) -> float:
+    """Chance-alignment density λ (sources per px²): catalog size over
+    its bounding-box area (floored so tiny/degenerate catalogs don't
+    explode the Bayes factor)."""
+    pos = np.asarray(pos, np.float64).reshape(-1, 2)
+    if pos.shape[0] < 2:
+        return 1e-4
+    span = np.maximum(pos.max(axis=0) - pos.min(axis=0), 8.0)
+    return float(pos.shape[0] / (span[0] * span[1]))
+
+
+# ---------------------------------------------------------------------------
+# Magnitude-histogram likelihood-ratio weights (nway's magnitudeweights)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MagnitudeWeights:
+    """Histogram prior over |Δmag| between two fits: the log likelihood
+    ratio of the observed magnitude difference under "same source" vs
+    "chance pair".
+
+    Two fits of one physical source share a flux (|Δmag| small, limited
+    by photometric noise); two unrelated sources draw independent fluxes
+    from the luminosity function (|Δmag| broad).  Following nway's
+    self-calibration, both histograms are learned from the catalog being
+    matched: the match histogram from positionally *secure* pairs, the
+    chance histogram from random re-pairings.  ``fit`` returns an
+    uninformative (all-zero) weight when either sample is too small to
+    histogram honestly — small fields then fall back to purely
+    positional posteriors instead of overfitting four pairs.
+    """
+    edges: np.ndarray       # [B+1] |Δmag| bin edges
+    log_ratio: np.ndarray   # [B] log(p_match / p_chance), clipped
+
+    def __call__(self, dmag: np.ndarray) -> np.ndarray:
+        dmag = np.abs(np.asarray(dmag, np.float64))
+        idx = np.clip(np.digitize(dmag, self.edges) - 1,
+                      0, len(self.log_ratio) - 1)
+        return self.log_ratio[idx]
+
+    @classmethod
+    def fit(cls, dmag_match: np.ndarray, dmag_chance: np.ndarray, *,
+            bins: int = 8, hi: float = 4.0, min_pairs: int = 8,
+            clip: float = 3.0) -> "MagnitudeWeights":
+        edges = np.linspace(0.0, hi, bins + 1)
+        m = np.abs(np.asarray(dmag_match, np.float64))
+        ch = np.abs(np.asarray(dmag_chance, np.float64))
+        if m.size < min_pairs or ch.size < min_pairs:
+            return cls(edges=edges, log_ratio=np.zeros(bins))
+        # add-one smoothing: no bin is ever impossible, so one odd pair
+        # cannot veto an otherwise-certain positional match
+        hm = np.histogram(np.clip(m, 0, hi - 1e-9), bins=edges)[0] + 1.0
+        hc = np.histogram(np.clip(ch, 0, hi - 1e-9), bins=edges)[0] + 1.0
+        log_ratio = np.log(hm / hm.sum()) - np.log(hc / hc.sum())
+        return cls(edges=edges, log_ratio=np.clip(log_ratio, -clip, clip))
+
+
+def flux_to_mag(flux: np.ndarray) -> np.ndarray:
+    """Instrumental magnitude (arbitrary zero point) from reference-band
+    flux; only magnitude *differences* are ever used."""
+    return -_MAG_PER_LN * np.log(np.maximum(np.asarray(flux, np.float64),
+                                            1e-6))
+
+
+# ---------------------------------------------------------------------------
+# Pairwise association (duplicate detection within one catalog)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class AssociationResult:
+    """Candidate duplicate pairs with match posteriors.
+
+    ``pairs[k] = (i, j)`` indexes the input catalog; ``match_prob[k]``
+    is the posterior probability the two fits are the same physical
+    source; ``log_bf`` the positional(+magnitude) log Bayes factor and
+    ``maha2`` the Mahalanobis distance² under the pair's combined
+    covariance."""
+    pairs: np.ndarray       # [P, 2] int
+    match_prob: np.ndarray  # [P]
+    log_bf: np.ndarray      # [P]
+    maha2: np.ndarray       # [P]
+    dist: np.ndarray        # [P] Euclidean separation (px)
+
+
+def _empty_association() -> AssociationResult:
+    return AssociationResult(pairs=np.zeros((0, 2), np.int64),
+                             match_prob=np.zeros(0),
+                             log_bf=np.zeros(0), maha2=np.zeros(0),
+                             dist=np.zeros(0))
+
+
+def associate_pairs(pos: np.ndarray, cov: np.ndarray | None = None, *,
+                    flux: np.ndarray | None = None,
+                    radius: float = 6.0,
+                    sigma_sys: float = 0.3,
+                    density: float | None = None,
+                    prior: float = 0.5,
+                    mag_weights: MagnitudeWeights | str | None = "auto",
+                    rng_seed: int = 0) -> AssociationResult:
+    """Match posteriors for every candidate pair within ``radius``.
+
+    ``cov`` is the per-source [S, 2, 2] positional covariance
+    (``position_covariance`` of the fits' Hessian blocks); ``None``
+    falls back to isotropic ``DEFAULT_SIGMA``.  ``sigma_sys`` adds an
+    isotropic cross-fit astrometric systematic to every pair's combined
+    covariance — two fields fit a shared source under *independent*
+    PSFs, sub-pixel origins and sky levels, so their positions differ by
+    more than the statistical posteriors alone admit.  ``density`` is
+    the chance-alignment rate λ (estimated from the catalog footprint
+    when ``None``) and ``prior`` the prior probability that a candidate
+    pair is a duplicate.  ``mag_weights="auto"`` self-calibrates the
+    magnitude-difference likelihood ratio from the catalog (secure pairs
+    vs seeded random re-pairings); pass a fitted ``MagnitudeWeights`` to
+    reuse one, or ``None`` to disable flux weighting.
+    """
+    pos = np.asarray(pos, np.float64).reshape(-1, 2)
+    n = pos.shape[0]
+    cov = (isotropic_covariance(n) if cov is None
+           else np.asarray(cov, np.float64).reshape(n, 2, 2))
+    ii, jj, dist = near_pairs(pos, radius)
+    if ii.size == 0:
+        return _empty_association()
+    pair_cov = cov[ii] + cov[jj] + sigma_sys**2 * np.eye(2)
+    logpdf, maha2 = _gauss2_logpdf(pos[ii] - pos[jj], pair_cov)
+    lam = estimate_density(pos) if density is None else float(density)
+    log_bf = logpdf - np.log(lam)
+
+    if flux is not None and mag_weights is not None:
+        mags = flux_to_mag(flux)
+        dmag = mags[ii] - mags[jj]
+        if mag_weights == "auto":
+            # secure = pairs a positional 2σ gate already calls matched;
+            # chance = seeded random re-pairings of the same catalog
+            secure = dmag[maha2 < 4.0]
+            rng = np.random.default_rng(rng_seed)
+            ra = rng.integers(0, n, size=4 * n)
+            rb = rng.integers(0, n, size=4 * n)
+            keep = ra != rb
+            chance = mags[ra[keep]] - mags[rb[keep]]
+            mag_weights = MagnitudeWeights.fit(secure, chance)
+        log_bf = log_bf + mag_weights(dmag)
+
+    prior = float(np.clip(prior, 1e-6, 1.0 - 1e-6))
+    log_odds = log_bf + np.log(prior) - np.log1p(-prior)
+    match_prob = 1.0 / (1.0 + np.exp(-np.clip(log_odds, -40.0, 40.0)))
+    return AssociationResult(pairs=np.stack([ii, jj], axis=1),
+                             match_prob=match_prob, log_bf=log_bf,
+                             maha2=maha2, dist=dist)
+
+
+# ---------------------------------------------------------------------------
+# N-way association against an external reference catalog
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CatalogMatch:
+    """Per-source association against a reference catalog.
+
+    For source ``i``: ``index[i]`` is the best-posterior reference
+    counterpart (−1 when the no-counterpart hypothesis wins or no
+    candidate lies within the search radius), ``prob[i]`` its posterior,
+    and ``p_any[i]`` the posterior that *any* reference source matches.
+    ``pairs``/``pair_prob`` list every evaluated (source, ref) candidate
+    with its posterior — the full distribution, from which ambiguous
+    associations (no candidate dominating) can be read off directly."""
+    index: np.ndarray      # [N] int, −1 = no counterpart
+    prob: np.ndarray       # [N] posterior of the selected counterpart
+    p_any: np.ndarray      # [N] posterior that any candidate matches
+    pairs: np.ndarray      # [P, 2] (source idx, ref idx)
+    pair_prob: np.ndarray  # [P]
+
+
+def _positions_covariances(obj):
+    """(pos [N, 2], cov [N, 2, 2] | None, flux [N] | None) from a
+    ``PipelineResult``, a ``SourceParams``-like catalog, or a bare
+    position array."""
+    catalog = getattr(obj, "catalog", obj)
+    pos = getattr(catalog, "pos", catalog)
+    pos = np.asarray(pos, np.float64).reshape(-1, 2)
+    cov = getattr(obj, "position_cov", None)
+    cov = None if cov is None else np.asarray(cov, np.float64)
+    flux = getattr(catalog, "ref_flux", None)
+    flux = None if flux is None else np.asarray(flux, np.float64)
+    return pos, cov, flux
+
+
+def associate_catalogs(result, ref, *,
+                       radius: float = 5.0,
+                       ref_sigma: float = DEFAULT_SIGMA,
+                       ref_cov: np.ndarray | None = None,
+                       sigma_sys: float = 0.3,
+                       prior: float = 0.7,
+                       density: float | None = None,
+                       mag_weights: MagnitudeWeights | None = None,
+                       match_threshold: float = 0.5) -> CatalogMatch:
+    """N-way association of a fitted catalog against a reference survey.
+
+    ``result`` is a ``core/pipeline.PipelineResult`` (positions +
+    Hessian covariances + fluxes ride along automatically), a catalog
+    with ``.pos``/``.ref_flux``, or a bare [N, 2] position array.
+    ``ref`` likewise.  Reference positional errors come from ``ref_cov``
+    ([M, 2, 2]) or isotropic ``ref_sigma``.
+
+    Each source is scored against every reference candidate within
+    ``radius`` AND the no-counterpart hypothesis: with prior match
+    probability ``prior`` = π and positional(+magnitude) Bayes factors
+    ``B_ij`` against the reference density λ,
+
+        p(i ↔ j)      =  π B_ij / (1 − π + π Σ_k B_ik)
+        p(i ↔ none)   =  (1 − π) / (1 − π + π Σ_k B_ik)
+
+    — candidates *compete*: a second equally-good counterpart halves
+    both posteriors rather than letting a greedy radius cut pick one
+    arbitrarily.  ``index`` selects the best candidate when its
+    posterior clears ``match_threshold``; the full candidate
+    distribution is in ``pairs``/``pair_prob``.
+    """
+    pos, cov, flux = _positions_covariances(result)
+    rpos, rcov, rflux = _positions_covariances(ref)
+    n, m = pos.shape[0], rpos.shape[0]
+    if cov is None:
+        cov = isotropic_covariance(n)
+    if ref_cov is not None:
+        rcov = np.asarray(ref_cov, np.float64).reshape(m, 2, 2)
+    elif rcov is None:
+        rcov = isotropic_covariance(m, ref_sigma)
+
+    empty = CatalogMatch(index=np.full(n, -1, np.int64),
+                         prob=np.zeros(n), p_any=np.zeros(n),
+                         pairs=np.zeros((0, 2), np.int64),
+                         pair_prob=np.zeros(0))
+    if n == 0 or m == 0:
+        return empty
+    ii, jj, _dist = cross_pairs(pos, rpos, radius)
+    if ii.size == 0:
+        return empty
+
+    pair_cov = cov[ii] + rcov[jj] + sigma_sys**2 * np.eye(2)
+    logpdf, _maha2 = _gauss2_logpdf(pos[ii] - rpos[jj], pair_cov)
+    lam = estimate_density(rpos) if density is None else float(density)
+    log_bf = logpdf - np.log(lam)
+    if mag_weights is not None and flux is not None and rflux is not None:
+        log_bf = log_bf + mag_weights(flux_to_mag(flux[ii])
+                                      - flux_to_mag(rflux[jj]))
+
+    prior = float(np.clip(prior, 1e-6, 1.0 - 1e-6))
+    bf = np.exp(np.clip(log_bf, -40.0, 40.0))
+    denom_per_src = np.zeros(n)
+    np.add.at(denom_per_src, ii, bf)
+    denom = (1.0 - prior) + prior * denom_per_src
+    pair_prob = prior * bf / denom[ii]
+
+    index = np.full(n, -1, np.int64)
+    prob = np.zeros(n)
+    best = {}
+    for k in range(ii.size):
+        i = int(ii[k])
+        if pair_prob[k] > prob[i]:
+            prob[i] = pair_prob[k]
+            best[i] = int(jj[k])
+    for i, j in best.items():
+        if prob[i] >= match_threshold:
+            index[i] = j
+    prob = np.where(index >= 0, prob, 0.0)
+    p_any = np.zeros(n)
+    np.add.at(p_any, ii, pair_prob)
+    return CatalogMatch(index=index, prob=prob, p_any=np.minimum(p_any, 1.0),
+                        pairs=np.stack([ii, jj], axis=1),
+                        pair_prob=pair_prob)
+
+
+# ---------------------------------------------------------------------------
+# Connected components (chain-duplicate resolution for the stitcher)
+# ---------------------------------------------------------------------------
+
+
+def connected_components(n: int, edges: np.ndarray) -> np.ndarray:
+    """[N] component label per node from an [E, 2] edge list (union-find
+    with path compression).  Labels are the minimum node index of each
+    component, so singletons label themselves — the stitcher keeps one
+    representative per label."""
+    parent = np.arange(n, dtype=np.int64)
+
+    def find(a: int) -> int:
+        root = a
+        while parent[root] != root:
+            root = parent[root]
+        while parent[a] != root:
+            parent[a], a = root, parent[a]
+        return root
+
+    for i, j in np.asarray(edges, np.int64).reshape(-1, 2):
+        ri, rj = find(int(i)), find(int(j))
+        if ri != rj:
+            # union by min index keeps labels deterministic
+            lo, hi = (ri, rj) if ri < rj else (rj, ri)
+            parent[hi] = lo
+    return np.array([find(int(k)) for k in range(n)], np.int64)

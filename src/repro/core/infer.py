@@ -42,7 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import backends, decompose, elbo, newton, synthetic
+from repro.core import associate, backends, decompose, elbo, newton, \
+    synthetic
 from repro.core.model import ImageMeta, SourceParams
 from repro.core.priors import Priors
 from repro.parallel import collectives, sharding
@@ -92,6 +93,13 @@ class InferenceStats:
     # [S] int8 per-source quality flags (QUALITY_* above); zeros for a
     # clean run
     quality: np.ndarray | None = None
+    # [S, 2, 2] Laplace positional covariance per source — the inverse of
+    # the (negated) ELBO-Hessian position block at each fit's final
+    # iterate, guarded by ``associate.position_covariance`` (eigenvalue
+    # clipping; isotropic fallback for sources whose curvature never came
+    # back finite, e.g. QUALITY_FAILED rows).  This is the per-source
+    # astrometric uncertainty the Bayesian stitcher consumes.
+    position_cov: np.ndarray | None = None
     # sources harvested as non-finite out of the main Newton segments
     # (each then walked the degradation ladder)
     harvested: int = 0
@@ -361,7 +369,9 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
                                iters=np.zeros(0, np.int64),
                                elbo_values=np.zeros(0, np.float64),
                                predicted_imbalance=0.0, adaptive=adaptive,
-                               quality=np.zeros(0, np.int8)))
+                               quality=np.zeros(0, np.int8),
+                               position_cov=np.zeros((0, 2, 2),
+                                                     np.float32)))
 
     # ---- phase 1+2: images & catalog in memory, neighbor backgrounds ----
     def neighbor_background(catalog, positions):
@@ -525,6 +535,9 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
     iters = np.zeros(s, np.int64)
     values = np.zeros(s, np.float64)
     conv = np.zeros(s, bool)
+    # [S, 2, 2] ELBO-Hessian position block at each source's final
+    # iterate; NaN until a segment (or ladder rung) delivers a finite fit
+    pos_hess = np.full((s, 2, 2), np.nan)
     # global ids harvested as non-finite in the CURRENT pass; routed
     # through the degradation ladder after the rounds finish.  Cleared at
     # each pass start — a later pass refits every source, so only the
@@ -632,11 +645,14 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
             src_shard[gids] = np.nonzero(valid)[0]
             values[okg] = np.asarray(res.value)[ok2d]
             conv[okg] = seg_conv[ok2d]
+            pos_hess[okg] = associate.position_hessian_block(
+                np.asarray(res.hess))[ok2d]
             if bad2d.any():
                 badg = cur[bad2d]
                 poisoned.update(int(g) for g in badg)
                 values[badg] = np.nan
                 conv[badg] = False
+                pos_hess[badg] = np.nan
             for sh in range(num_shards):
                 sh_iters = int(it_seg[sh].max(initial=0))
                 bucket_records.append(newton.BucketRecord(
@@ -798,6 +814,8 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
                                 | (np.asarray(res.grad_norm) < gtol))[ok]
                 iters[ok_ids] += np.asarray(res.iters)[ok]
                 quality[ok_ids] = rung
+                pos_hess[ok_ids] = associate.position_hessian_block(
+                    np.asarray(res.hess))[ok]
             pending = pending[~ok]
         if pending.size:
             # no rung fit these: report the seed estimate, flagged, so
@@ -812,7 +830,9 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
         iters=iters, elbo_values=values,
         predicted_imbalance=pred_imb, adaptive=adaptive, history=history,
         bucket_history=bucket_records, checkify_errors=checkify_errors,
-        quality=quality, harvested=harvested)
+        quality=quality, harvested=harvested,
+        position_cov=associate.position_covariance(
+            pos_hess).astype(np.float32))
     return thetas, stats
 
 

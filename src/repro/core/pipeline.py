@@ -46,7 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.core import detect, elbo, heuristic, infer
+from repro.core import associate, detect, elbo, heuristic, infer
 from repro.core.model import SourceParams
 from repro.core.priors import Priors, default_priors, fit_priors
 from repro.data.images import SurveyStore
@@ -103,6 +103,21 @@ class PipelineResult:
     # 1..3 the degradation-ladder rung that recovered the source,
     # infer.QUALITY_FAILED an unrecoverable fit (seed theta reported)
     quality: np.ndarray | None = None
+    # [N, 2, 2] Laplace positional covariance per stitched source (the
+    # inverted ELBO-Hessian position block, infer.InferenceStats
+    # .position_cov) — the astrometric uncertainty the Bayesian stitcher
+    # used and that associate_catalogs consumes for N-way federation
+    position_cov: np.ndarray | None = None
+    # the full stitch decision record (candidate pairs, match posteriors,
+    # ambiguous flags) with StitchInfo.new_index mapping its pre-stitch
+    # pair indices onto rows of `catalog`
+    stitch: StitchInfo | None = None
+
+    @property
+    def match_prob(self) -> np.ndarray | None:
+        """[P] per-candidate-pair same-source posteriors (see
+        ``stitch.pairs`` for the pair indices)."""
+        return None if self.stitch is None else self.stitch.match_prob
 
 
 # ---------------------------------------------------------------------------
@@ -110,31 +125,60 @@ class PipelineResult:
 # ---------------------------------------------------------------------------
 
 
-def owned_bounds(origin, *, field: int, overlap: int, extent):
+def owned_bounds(origin, *, field: int, overlap: int, extent, grid=None):
     """The half-open global rectangle a field owns: the survey partitioned
     along overlap mid-lines, with edge fields owning out to the survey
-    boundary.  Returns (lo [2], hi [2])."""
+    boundary.  Returns (lo [2], hi [2]).
+
+    Edge-ness is decided from the field's *grid position* (its index
+    along each axis, recovered from ``origin``), not from whether
+    ``origin + field`` happens to equal ``extent``: when the survey
+    extent is not exactly ``grid·stride + overlap`` (trimmed or padded
+    mosaics, non-square extents) the old coordinate test misclassified
+    the last field as interior and left an orphan strip near the survey
+    boundary that NO field owned — and that ``owner_of`` then assigned
+    to a field whose own mask rejected it, breaking the stitcher's
+    primary-ownership rule exactly at the boundary it arbitrates.  Pass
+    ``grid`` when known; ``None`` infers the per-axis field count from
+    ``extent``."""
     origin = np.asarray(origin, np.float64)
     extent = np.asarray(extent, np.float64)
+    stride = field - overlap
     half = overlap / 2.0
-    lo = np.where(origin > 0, origin + half, 0.0)
-    hi = np.where(origin + field < extent, origin + field - half, extent)
+    idx = np.round(origin / stride).astype(np.int64)
+    if grid is None:
+        g = np.maximum(np.round((extent - overlap) / stride), 1)
+        g = g.astype(np.int64)
+    else:
+        g = np.asarray(grid, np.int64)
+    lo = np.where(idx <= 0, 0.0, origin + half)
+    hi = np.where(idx >= g - 1, extent, origin + field - half)
     return lo, hi
 
 
 def ownership_mask(positions, origin, *, field: int, overlap: int,
-                   extent) -> np.ndarray:
+                   extent, grid=None) -> np.ndarray:
     """True for positions this field owns (and must fit)."""
     pos = np.asarray(positions, np.float64).reshape(-1, 2)
     lo, hi = owned_bounds(origin, field=field, overlap=overlap,
-                          extent=extent)
+                          extent=extent, grid=grid)
     return np.all((pos >= lo) & (pos < hi), axis=1)
 
 
 def owner_of(positions, *, grid, field: int, overlap: int) -> np.ndarray:
     """Row-major grid index of the field owning each global position —
-    the inverse of ``ownership_mask``, used by the stitcher's
-    primary-ownership rule."""
+    the exact inverse of ``ownership_mask``, used by the stitcher's
+    primary-ownership rule.
+
+    The interior ownership breakpoints along each axis sit at
+    ``i·stride + overlap/2`` (i = 1..g−1) independent of the survey
+    extent, so ``floor((pos − overlap/2)/stride)`` recovers the owning
+    index everywhere between them and the clip to ``[0, grid−1]``
+    absorbs the edge fields' outer halves — including extents that are
+    not exactly ``grid·stride + overlap``, now that ``owned_bounds``
+    clamps edge fields by grid position (``owner_of(p) == f`` iff
+    ``ownership_mask(p, field f)``, property-tested in
+    tests/test_pipeline.py)."""
     pos = np.asarray(positions, np.float64).reshape(-1, 2)
     stride = field - overlap
     ij = np.floor((pos - overlap / 2.0) / stride).astype(np.int64)
@@ -147,76 +191,146 @@ def owner_of(positions, *, grid, field: int, overlap: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def _near_pairs(pos: np.ndarray, radius: float):
-    """All index pairs (i < j) with ``|pos_i − pos_j| ≤ radius`` via a
-    radius-sized cell hash — near-linear in catalog size, versus the
-    dense N² distance matrix that would dominate stitching on large
-    surveys (duplicates are boundary-local; almost nothing pairs up)."""
-    cells = np.floor(pos / radius).astype(np.int64)
-    bins: dict = {}
-    for idx, key in enumerate(map(tuple, cells)):
-        bins.setdefault(key, []).append(idx)
-    ii, jj = [], []
-    for (cr, cc), members in bins.items():
-        for dr, dc in ((0, 0), (0, 1), (1, -1), (1, 0), (1, 1)):
-            other = members if (dr, dc) == (0, 0) else \
-                bins.get((cr + dr, cc + dc))
-            if other is None:
-                continue
-            for a in members:
-                for b in other:
-                    if (dr, dc) == (0, 0) and b <= a:
-                        continue
-                    ii.append(min(a, b))
-                    jj.append(max(a, b))
-    ii = np.asarray(ii, np.int64)
-    jj = np.asarray(jj, np.int64)
-    if ii.size == 0:
-        return ii, jj, np.zeros(0)
-    dist = np.linalg.norm(pos[ii] - pos[jj], axis=-1)
-    near = dist <= radius
-    return ii[near], jj[near], dist[near]
+# candidate generation lives in core/associate.py (shared with N-way
+# catalog association); kept under the old private name for callers
+_near_pairs = associate.near_pairs
 
 
-def stitch_mask(positions, field_of, *, grid, field: int, overlap: int,
-                match_radius: float = 1.5):
-    """Duplicate suppression over fitted sources: keep-mask.
+@dataclass
+class StitchInfo:
+    """Everything the stitcher decided, with pre-stitch indexing.
 
-    Two fits within ``match_radius`` are the same physical source.  The
-    cross-field case is the halo problem: detection noise put the same
-    boundary source on opposite sides of an ownership line, so both
-    fields fit it — the survivor is the fit whose field owns the pair's
-    *midpoint* (primary ownership).  The same-field case is post-fit
-    drift: detection's local-max suppression separates *seeds* by
-    ``min_sep``, but two seeds can still converge onto one bright source
-    — the earlier fit survives (fits are stored brightest-detection
-    first).  Returns (keep [N] bool, duplicates_removed).
+    ``pairs[k]`` indexes the *flattened, pre-stitch* catalog;
+    ``new_index`` maps those indices to rows of the stitched catalog
+    (−1 for removed fits), so ambiguous pairs can be joined back onto
+    the surviving sources."""
+    method: str             # "greedy" | "bayes"
+    keep: np.ndarray        # [N] bool over the pre-stitch catalog
+    removed: int            # duplicate fits dropped
+    pairs: np.ndarray       # [P, 2] candidate pairs (pre-stitch indices)
+    match_prob: np.ndarray  # [P] same-source posterior (greedy: 1.0)
+    ambiguous: np.ndarray   # [P] bool: in the ambiguous band, retained
+    dist: np.ndarray        # [P] pair separation (px)
+    new_index: np.ndarray   # [N] post-stitch row, −1 where dropped
+
+    @property
+    def n_ambiguous(self) -> int:
+        return int(self.ambiguous.sum())
+
+
+def _empty_stitch(n: int, method: str) -> StitchInfo:
+    return StitchInfo(method=method, keep=np.ones(n, bool), removed=0,
+                      pairs=np.zeros((0, 2), np.int64),
+                      match_prob=np.zeros(0),
+                      ambiguous=np.zeros(0, bool), dist=np.zeros(0),
+                      new_index=np.arange(n, dtype=np.int64))
+
+
+def stitch(positions, field_of, *, grid, field: int, overlap: int,
+           match_radius: float = 1.5, method: str = "greedy",
+           position_cov: np.ndarray | None = None,
+           flux: np.ndarray | None = None,
+           match_threshold: float = 0.9,
+           ambiguous_band: tuple = (0.1, 0.9),
+           sigma_sys: float = 0.4,
+           search_radius: float | None = None) -> StitchInfo:
+    """Duplicate suppression over fitted sources.
+
+    Candidate pairs come from the radius cell hash
+    (``associate.near_pairs``); which ones are *merged* depends on
+    ``method``:
+
+    * ``"greedy"`` — the legacy rule: any pair within ``match_radius``
+      is the same physical source (match probability 1 by fiat).
+    * ``"bayes"`` — pairs within ``search_radius`` (default
+      ``3·match_radius``) are scored by ``associate.associate_pairs``:
+      the posterior that the two fits are one source, from the
+      Mahalanobis distance under the *sum of the two fits' Hessian
+      covariances* (``position_cov``, [N, 2, 2]) plus a ``sigma_sys``
+      cross-field astrometric systematic, against the chance-alignment
+      density, weighted by the self-calibrated magnitude-difference
+      likelihood ratio when ``flux`` is given.  Pairs with posterior
+      ≥ ``match_threshold`` merge; pairs inside ``ambiguous_band`` are
+      *retained* — both fits survive, flagged in ``StitchInfo
+      .ambiguous``, feeding the deblending roadmap item rather than
+      being guessed at.
+
+    Merged pairs are resolved as **connected components** (union-find
+    over the merge edges), not pairwise: a chain A–B–C collapses to ONE
+    representative even when ``|A−C|`` exceeds the radius — the old
+    pairwise pass dropped B for A and then skipped the (B, C) pair,
+    leaving C alive as a second fit of A.  Per component the survivor is
+    the fit whose field owns the component *centroid* (primary
+    ownership; for a two-fit cross-field pair this is exactly the old
+    midpoint rule), falling back to the earliest fit — fits are stored
+    brightest-detection first — for same-field components and for
+    components whose owning field contributed no fit.
     """
     pos = np.asarray(positions, np.float64).reshape(-1, 2)
     fld = np.asarray(field_of, np.int64)
     n = pos.shape[0]
-    keep = np.ones(n, bool)
+    if method not in ("greedy", "bayes"):
+        raise ValueError(f"unknown stitch method {method!r} "
+                         "(expected 'greedy' or 'bayes')")
     if n < 2:
-        return keep, 0
-    ii, jj, dist = _near_pairs(pos, match_radius)
+        return _empty_stitch(n, method)
+
+    if method == "greedy":
+        ii, jj, dist = associate.near_pairs(pos, match_radius)
+        pairs = np.stack([ii, jj], axis=1)
+        match_prob = np.ones(ii.size)
+        merge = np.ones(ii.size, bool)
+        ambiguous = np.zeros(ii.size, bool)
+    else:
+        radius = (3.0 * match_radius if search_radius is None
+                  else search_radius)
+        assoc = associate.associate_pairs(
+            pos, position_cov, flux=flux, radius=radius,
+            sigma_sys=sigma_sys)
+        pairs, match_prob = assoc.pairs, assoc.match_prob
+        dist = assoc.dist
+        merge = match_prob >= match_threshold
+        lo_b, hi_b = ambiguous_band
+        ambiguous = (match_prob > lo_b) & (match_prob < hi_b) & ~merge
+
+    label = associate.connected_components(n, pairs[merge])
+    comps: dict[int, list] = {}
+    for k, root in enumerate(label):
+        comps.setdefault(int(root), []).append(k)
+    keep = np.ones(n, bool)
     removed = 0
-    for k in np.argsort(dist, kind="stable"):
-        i, j = ii[k], jj[k]
-        if not (keep[i] and keep[j]):
+    for members in comps.values():
+        if len(members) < 2:
             continue
-        if fld[i] == fld[j]:
-            drop = j                      # keep the brighter (earlier) fit
-        else:
-            mid = 0.5 * (pos[i] + pos[j])
-            primary = owner_of(mid[None], grid=grid, field=field,
-                               overlap=overlap)[0]
-            # drop the non-primary fit; if neither matches (both drifted
-            # out of their own region), keep the earlier deterministically
-            drop = j if fld[i] == primary else i if fld[j] == primary \
-                else j
-        keep[drop] = False
-        removed += 1
-    return keep, removed
+        members = sorted(members)
+        centroid = pos[members].mean(axis=0)
+        primary = owner_of(centroid[None], grid=grid, field=field,
+                           overlap=overlap)[0]
+        owned = [m for m in members if fld[m] == primary]
+        rep = owned[0] if owned else members[0]
+        for m in members:
+            if m != rep:
+                keep[m] = False
+                removed += 1
+    new_index = np.full(n, -1, np.int64)
+    new_index[keep] = np.arange(int(keep.sum()))
+    return StitchInfo(method=method, keep=keep, removed=removed,
+                      pairs=pairs, match_prob=match_prob,
+                      ambiguous=ambiguous, dist=dist,
+                      new_index=new_index)
+
+
+def stitch_mask(positions, field_of, *, grid, field: int, overlap: int,
+                match_radius: float = 1.5, method: str = "greedy",
+                **kwargs):
+    """Back-compat wrapper around ``stitch``: returns
+    (keep [N] bool, duplicates_removed).  Extra keyword arguments
+    (``position_cov``, ``match_threshold``, ...) forward to ``stitch``
+    for the ``method="bayes"`` path."""
+    info = stitch(positions, field_of, grid=grid, field=field,
+                  overlap=overlap, match_radius=match_radius,
+                  method=method, **kwargs)
+    return info.keep, info.removed
 
 
 # ---------------------------------------------------------------------------
@@ -230,15 +344,20 @@ def seed_catalog(images, metas, positions, priors: Priors | None = None,
 
     The paper initializes from an existing catalog and learns priors from
     it (§III-A); in the pipeline the "existing catalog" is the Photo-style
-    measurement of the detections.  Priors are refit only when asked AND
-    the field has enough sources to estimate them (≥ 4)."""
+    measurement of the detections.  Caller-supplied ``priors`` always
+    take precedence (they used to be silently discarded whenever the
+    refit path was eligible); with ``priors=None`` the refit runs when
+    asked AND the field has enough sources to estimate them (≥ 4),
+    falling back to the defaults otherwise."""
     photo = heuristic.measure_catalog(images, metas,
                                       jnp.asarray(positions), patch=patch)
     n = int(np.asarray(positions).shape[0])
-    if refit and n >= 4:
+    if priors is not None:
+        pri = priors
+    elif refit and n >= 4:
         pri = fit_priors(photo.is_gal, photo.ref_flux, photo.colors)
     else:
-        pri = priors or default_priors()
+        pri = default_priors()
     return photo, pri
 
 
@@ -248,6 +367,8 @@ def run_pipeline(survey, priors: Priors | None = None, *,
                  cap_per_field: int = 64,
                  detect_threshold: float = 5.0, min_sep: int = 4,
                  match_radius: float = 1.5, truth_radius: float = 2.0,
+                 stitch_method: str = "bayes",
+                 match_threshold: float = 0.9,
                  backend: str | None = None, adaptive: bool = False,
                  compact_every: int | None = None,
                  max_iters: int = 50,
@@ -297,12 +418,27 @@ def run_pipeline(survey, priors: Priors | None = None, *,
     compaction paths compose with the pipeline unchanged.  Per-source
     fit quality (``infer.QUALITY_*``, from the degradation ladder) rides
     in the checkpoint slab and lands in ``PipelineResult.quality``.
+
+    ``stitch_method`` selects duplicate suppression at the boundaries:
+    ``"bayes"`` (default) computes per-pair same-source posteriors from
+    the fits' Hessian positional covariances (``stitch``; merged at
+    ``match_threshold``, ambiguous pairs retained in
+    ``PipelineResult.stitch``), ``"greedy"`` the legacy hard
+    ``match_radius`` cut.  Explicit ``priors`` now take precedence over
+    the per-field refit everywhere (``seed_catalog``); leave
+    ``priors=None`` with ``refit_priors=True`` for the paper's
+    learn-from-the-catalog behavior.
+
+    The checkpoint slab carries a ``pos_cov`` [nf, cap, 2, 2] plane
+    (slab layout v2).  Checkpoints written by the 3-leaf v1 layout fail
+    restore with a structure-changed error — see
+    docs/fault_tolerance.md.
     """
-    priors = priors or default_priors()
     store = store or SurveyStore(survey, chaos=chaos)
     nf = len(survey.fields)
     state = {
         "count": jnp.zeros((nf,), jnp.int32),
+        "pos_cov": jnp.zeros((nf, cap_per_field, 2, 2), jnp.float32),
         "quality": jnp.zeros((nf, cap_per_field), jnp.int8),
         "thetas": jnp.zeros((nf, cap_per_field, elbo.THETA_DIM),
                             jnp.float32),
@@ -351,7 +487,7 @@ def run_pipeline(survey, priors: Priors | None = None, *,
                                     max_sources=2 * cap_per_field)
         own = ownership_mask(det.positions, fld.origin,
                              field=survey.field, overlap=survey.overlap,
-                             extent=survey.extent)
+                             extent=survey.extent, grid=survey.grid)
         # brightest first (detect_sources returns snr-sorted), capped so
         # the checkpoint slab stays fixed-shape
         seeds = det.positions[own][:cap_per_field]
@@ -370,6 +506,8 @@ def run_pipeline(survey, priors: Priors | None = None, *,
                 chaos=chaos, chaos_tag=i)
             st = {
                 "count": st["count"].at[i].set(n),
+                "pos_cov": st["pos_cov"].at[i, :n].set(
+                    jnp.asarray(istats.position_cov)),
                 "quality": st["quality"].at[i, :n].set(
                     jnp.asarray(istats.quality)),
                 "thetas": st["thetas"].at[i, :n].set(thetas_f),
@@ -380,6 +518,7 @@ def run_pipeline(survey, priors: Priors | None = None, *,
                                   for m in istats.checkify_errors]
         else:
             st = {"count": st["count"].at[i].set(0),
+                  "pos_cov": st["pos_cov"],
                   "quality": st["quality"],
                   "thetas": st["thetas"]}
             conv, mean_iters, degraded = 0, 0.0, 0
@@ -412,24 +551,33 @@ def run_pipeline(survey, priors: Priors | None = None, *,
     counts = np.asarray(state["count"])
     thetas_slab = np.asarray(state["thetas"])
     quality_slab = np.asarray(state["quality"])
+    cov_slab = np.asarray(state["pos_cov"])
     if counts.sum():
         thetas = np.concatenate(
             [thetas_slab[i, :counts[i]] for i in range(nf)], axis=0)
         quality = np.concatenate(
             [quality_slab[i, :counts[i]] for i in range(nf)], axis=0)
+        position_cov = np.concatenate(
+            [cov_slab[i, :counts[i]] for i in range(nf)], axis=0)
     else:
         thetas = np.zeros((0, elbo.THETA_DIM), np.float32)
         quality = np.zeros((0,), np.int8)
+        position_cov = np.zeros((0, 2, 2), np.float32)
     field_of = np.repeat(np.arange(nf), counts)
     catalog = infer.infer_catalog(jnp.asarray(thetas))
-    keep, removed = stitch_mask(
+    sinfo = stitch(
         np.asarray(catalog.pos), field_of, grid=survey.grid,
         field=survey.field, overlap=survey.overlap,
-        match_radius=match_radius)
+        match_radius=match_radius, method=stitch_method,
+        position_cov=position_cov,
+        flux=np.asarray(catalog.ref_flux),
+        match_threshold=match_threshold)
+    keep, removed = sinfo.keep, sinfo.removed
     catalog = jax.tree.map(lambda a: a[np.flatnonzero(keep)], catalog)
     thetas = thetas[keep]
     field_of = field_of[keep]
     quality = quality[keep]
+    position_cov = position_cov[keep]
 
     stats = PipelineStats(fields=[records[k] for k in sorted(records)],
                           loop=loop, fetch=store.stats,
@@ -443,4 +591,5 @@ def run_pipeline(survey, priors: Priors | None = None, *,
             radius=truth_radius)
     return PipelineResult(catalog=catalog, thetas=thetas,
                           field_of=field_of, stats=stats,
-                          quality=quality)
+                          quality=quality, position_cov=position_cov,
+                          stitch=sinfo)

@@ -197,7 +197,8 @@ def _jittered_positions_rect(key, num_sources: int, extent,
 def sample_survey(key, grid: tuple = (2, 2), field: int = 128,
                   overlap: int = 32, sources_per_field: int = 8,
                   epochs: int = 1, priors: Priors | None = None,
-                  margin: float = 8.0, render_pad: float = 12.0) -> Survey:
+                  margin: float = 8.0, render_pad: float = 12.0,
+                  positions=None) -> Survey:
     """Sample a multi-field survey: one global truth catalog, a
     ``grid[0] × grid[1]`` grid of ``field``-pixel fields whose neighbors
     share an ``overlap``-pixel halo.
@@ -209,18 +210,27 @@ def sample_survey(key, grid: tuple = (2, 2), field: int = 128,
     Only truth sources within ``render_pad`` pixels of a field contribute
     to its rendering, so survey cost scales with area, not catalog size
     squared.
+
+    ``positions`` ([N, 2] global coordinates) overrides the jittered
+    uniform position draw — ``sources_per_field`` is then ignored and
+    the catalog has exactly N sources.  Benchmarks use this to place
+    sources adversarially (e.g. ON the ownership mid-lines, the
+    crowded-boundary survey of benchmarks/association.py).
     """
     if overlap >= field:
         raise ValueError(f"overlap {overlap} must be < field {field}")
     stride = field - overlap
     extent = (grid[0] * stride + overlap, grid[1] * stride + overlap)
-    n = sources_per_field * grid[0] * grid[1]
+    n = (sources_per_field * grid[0] * grid[1] if positions is None
+         else int(np.asarray(positions).shape[0]))
     k_cat, k_pos, k_fields = jax.random.split(key, 3)
     # catalog parameters from the square sampler, positions re-drawn over
     # the full (possibly rectangular) survey extent
     truth = sample_catalog(k_cat, n, max(extent), priors, margin=margin)
     truth = truth._replace(
-        pos=_jittered_positions_rect(k_pos, n, extent, margin=margin))
+        pos=(jnp.asarray(positions, jnp.float32) if positions is not None
+             else _jittered_positions_rect(k_pos, n, extent,
+                                           margin=margin)))
 
     pos_np = np.asarray(truth.pos)
     fields = []

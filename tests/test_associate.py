@@ -1,0 +1,230 @@
+"""Bayesian association tests (core/associate.py): Hessian → covariance
+inversion, pair match posteriors, magnitude-histogram weights, N-way
+reference-catalog association, and the union-find component resolver the
+stitcher uses for chain duplicates."""
+import numpy as np
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - tiny deterministic fallback
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import associate
+
+
+# ---------------------------------------------------------------------------
+# Positional covariance from ELBO Hessians
+# ---------------------------------------------------------------------------
+
+
+def test_position_covariance_inverts_negative_hessian():
+    """At an ELBO maximum H is negative definite and the Laplace
+    covariance is inv(−H)."""
+    prec = np.array([[[25.0, 3.0], [3.0, 16.0]],
+                     [[100.0, 0.0], [0.0, 4.0]]])
+    cov = associate.position_covariance(-prec)
+    np.testing.assert_allclose(cov, np.linalg.inv(prec), rtol=1e-10)
+
+
+def test_position_covariance_clips_and_falls_back():
+    pos_hess = np.array([
+        [[-1e8, 0.0], [0.0, -1e8]],      # absurdly certain → σ floor
+        [[-1e-8, 0.0], [0.0, -1e-8]],    # flat → σ ceiling
+        [[2.0, 0.0], [0.0, 2.0]],        # wrong-sign (saddle) → ceiling
+        [[np.nan, 0.0], [0.0, -4.0]],    # non-finite → isotropic default
+    ])
+    cov = associate.position_covariance(pos_hess, sigma_floor=0.05,
+                                        sigma_ceil=2.0, sigma_default=0.5)
+    np.testing.assert_allclose(cov[0], 0.05**2 * np.eye(2), rtol=1e-6)
+    np.testing.assert_allclose(cov[1], 2.0**2 * np.eye(2), rtol=1e-6)
+    np.testing.assert_allclose(cov[2], 2.0**2 * np.eye(2), rtol=1e-6)
+    np.testing.assert_allclose(cov[3], 0.5**2 * np.eye(2))
+    # every returned covariance is symmetric positive definite
+    assert np.all(np.linalg.eigvalsh(cov) > 0)
+
+
+def test_position_hessian_block_extracts_pos_rows():
+    from repro.core import elbo
+    h = np.zeros((27, 27))
+    h[elbo.I_POS, elbo.I_POS] = np.diag([-9.0, -4.0])
+    blk = associate.position_hessian_block(h)
+    np.testing.assert_allclose(blk, [[-9.0, 0.0], [0.0, -4.0]])
+
+
+# ---------------------------------------------------------------------------
+# Pair generation + 2×2 Gaussian
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 40), seed=st.integers(0, 999))
+def test_near_pairs_matches_dense(n, seed):
+    """The cell hash finds exactly the pairs the N² check finds."""
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 60, (n, 2))
+    radius = 4.0
+    ii, jj, dist = associate.near_pairs(pos, radius)
+    got = set(zip(ii.tolist(), jj.tolist()))
+    d = np.linalg.norm(pos[:, None] - pos[None], axis=-1)
+    want = {(a, b) for a in range(n) for b in range(a + 1, n)
+            if d[a, b] <= radius}
+    assert got == want
+    np.testing.assert_allclose(dist, d[ii, jj])
+
+
+def test_gauss2_logpdf_matches_dense_formula():
+    rng = np.random.default_rng(3)
+    a = rng.normal(size=(5, 2, 2))
+    cov = a @ np.swapaxes(a, 1, 2) + 0.5 * np.eye(2)
+    dpos = rng.normal(size=(5, 2))
+    logpdf, maha2 = associate._gauss2_logpdf(dpos, cov)
+    for k in range(5):
+        want_m = dpos[k] @ np.linalg.inv(cov[k]) @ dpos[k]
+        want_lp = (-0.5 * want_m
+                   - 0.5 * np.log(np.linalg.det(cov[k]))
+                   - np.log(2 * np.pi))
+        np.testing.assert_allclose(maha2[k], want_m, rtol=1e-9)
+        np.testing.assert_allclose(logpdf[k], want_lp, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Pairwise association
+# ---------------------------------------------------------------------------
+
+
+def test_associate_pairs_duplicate_vs_chance():
+    """A tight pair gets a high match posterior; a wide pair in the same
+    catalog gets a low one."""
+    pos = np.array([[20.0, 20.0], [20.3, 20.1],    # duplicate (Δ≈0.32)
+                    [60.0, 60.0], [63.5, 60.0],    # distinct  (Δ=3.5)
+                    [20.0, 60.0], [60.0, 20.0], [40.0, 40.0]])
+    res = associate.associate_pairs(pos, None, radius=5.0,
+                                    mag_weights=None)
+    probs = {tuple(p): q for p, q in zip(res.pairs.tolist(),
+                                         res.match_prob)}
+    assert probs[(0, 1)] > 0.9
+    assert probs[(2, 3)] < 0.5
+    assert probs[(0, 1)] > probs[(2, 3)]
+
+
+def test_associate_pairs_covariance_widens_acceptance():
+    """The same separation is a confident match under wide covariances
+    and a confident non-match under tight ones — the point of using the
+    fits' own Hessian curvature instead of one global radius."""
+    pos = np.array([[30.0, 30.0], [31.8, 30.0],
+                    [70.0, 70.0], [10.0, 70.0], [70.0, 10.0]])
+    tight = associate.isotropic_covariance(5, 0.05)
+    wide = associate.isotropic_covariance(5, 1.2)
+    p_tight = associate.associate_pairs(
+        pos, tight, radius=5.0, sigma_sys=0.1,
+        mag_weights=None).match_prob[0]
+    p_wide = associate.associate_pairs(
+        pos, wide, radius=5.0, sigma_sys=0.1,
+        mag_weights=None).match_prob[0]
+    assert p_wide > 0.8
+    assert p_tight < 0.2
+
+
+def test_associate_pairs_empty_and_single():
+    for pos in (np.zeros((0, 2)), np.array([[5.0, 5.0]])):
+        res = associate.associate_pairs(pos, None)
+        assert res.pairs.shape == (0, 2)
+        assert res.match_prob.shape == (0,)
+
+
+def test_magnitude_weights_favor_shared_flux():
+    """Weights learned from matched pairs (Δmag ≈ 0) reward small
+    magnitude differences and penalize large ones."""
+    rng = np.random.default_rng(0)
+    w = associate.MagnitudeWeights.fit(rng.normal(0, 0.1, 200),
+                                       rng.uniform(0, 4, 200))
+    assert w(np.array([0.05]))[0] > 0.5
+    assert w(np.array([3.5]))[0] < 0.0
+    # too few pairs → uninformative, never overfit
+    w0 = associate.MagnitudeWeights.fit(np.array([0.1]), np.array([2.0]))
+    np.testing.assert_array_equal(w0(np.array([0.1, 3.0])), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# N-way reference-catalog association
+# ---------------------------------------------------------------------------
+
+
+def test_associate_catalogs_finds_counterparts():
+    rng = np.random.default_rng(1)
+    ref = rng.uniform(10, 90, (12, 2))
+    # sources = reference jittered by 0.2 px, plus one orphan far away
+    src = np.concatenate([ref + rng.normal(0, 0.2, ref.shape),
+                          [[99.0, 99.0]]])
+    m = associate.associate_catalogs(src, ref, radius=4.0)
+    np.testing.assert_array_equal(m.index[:12], np.arange(12))
+    assert m.index[12] == -1
+    assert np.all(m.prob[:12] > 0.5)
+    assert m.prob[12] == 0.0
+
+
+def test_associate_catalogs_candidates_compete():
+    """Two equally good reference candidates split the posterior — the
+    no-arbitrary-choice property a greedy radius cut cannot have."""
+    src = np.array([[50.0, 50.0]])
+    ref = np.array([[50.0, 49.0], [50.0, 51.0],     # symmetric pair
+                    [20.0, 20.0], [80.0, 80.0], [20.0, 80.0]])
+    m = associate.associate_catalogs(src, ref, radius=5.0,
+                                     match_threshold=0.9)
+    pp = {j: p for (_, j), p in zip(m.pairs.tolist(), m.pair_prob)}
+    np.testing.assert_allclose(pp[0], pp[1], rtol=1e-9)
+    assert pp[0] < 0.9            # neither candidate can dominate
+    assert m.index[0] == -1       # so no confident assignment is made
+    assert m.p_any[0] > pp[0]     # but SOME counterpart is likely
+
+
+def test_associate_catalogs_empty():
+    m = associate.associate_catalogs(np.zeros((0, 2)),
+                                     np.array([[1.0, 1.0]]))
+    assert m.index.shape == (0,)
+    m = associate.associate_catalogs(np.array([[1.0, 1.0]]),
+                                     np.zeros((0, 2)))
+    np.testing.assert_array_equal(m.index, [-1])
+
+
+# ---------------------------------------------------------------------------
+# Connected components (the stitcher's chain resolver)
+# ---------------------------------------------------------------------------
+
+
+def test_connected_components_chain_and_singletons():
+    lab = associate.connected_components(
+        6, np.array([[0, 1], [1, 2], [4, 5]]))
+    np.testing.assert_array_equal(lab, [0, 0, 0, 3, 4, 4])
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 30), seed=st.integers(0, 999))
+def test_connected_components_match_bfs(n, seed):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(0, 2 * n))
+    edges = rng.integers(0, n, (m, 2))
+    lab = associate.connected_components(n, edges)
+    # reference: adjacency BFS
+    adj = [[] for _ in range(n)]
+    for a, b in edges:
+        adj[a].append(b)
+        adj[b].append(a)
+    seen = np.full(n, -1)
+    for start in range(n):
+        if seen[start] >= 0:
+            continue
+        stack, comp = [start], []
+        while stack:
+            v = stack.pop()
+            if seen[v] >= 0:
+                continue
+            seen[v] = start
+            comp.append(v)
+            stack.extend(adj[v])
+    # same partition: two nodes share a label iff BFS agrees
+    same_uf = lab[:, None] == lab[None, :]
+    same_bfs = seen[:, None] == seen[None, :]
+    np.testing.assert_array_equal(same_uf, same_bfs)
+    # labels are component minima (deterministic representatives)
+    for v in range(n):
+        assert lab[v] == min(np.flatnonzero(lab == lab[v]))

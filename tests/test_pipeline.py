@@ -6,6 +6,10 @@ stitched catalog)."""
 import jax
 import numpy as np
 import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - tiny deterministic fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core import detect, pipeline, synthetic
@@ -124,6 +128,158 @@ def test_stitch_dedup_keeps_primary_owner():
     np.testing.assert_array_equal(keep2, [True, False])
 
 
+@settings(max_examples=25, deadline=None)
+@given(gr=st.integers(1, 4), gc=st.integers(1, 4),
+       overlap=st.integers(2, 40), stride_extra=st.integers(8, 80),
+       trim_num=st.integers(-80, 80), seed=st.integers(0, 10_000))
+def test_ownership_roundtrip_property(gr, gc, overlap, stride_extra,
+                                      trim_num, seed):
+    """owner_of(p) == f  ⇔  ownership_mask(p, field f), for random
+    grids, overlaps AND survey extents that are NOT the canonical
+    ``grid·stride + overlap`` (trimmed/padded mosaics, non-square
+    extents) — the regression for owner_of ignoring the extent clamping
+    edge fields get in owned_bounds.  Every position inside the survey
+    is owned by exactly one field."""
+    field = overlap + stride_extra
+    stride = field - overlap
+    coverage = np.array([gr * stride + overlap, gc * stride + overlap],
+                        np.float64)
+    # trim or pad each axis by up to ±stride/2, keeping the last field's
+    # owned strip non-empty (extent must stay past its lower bound)
+    rng = np.random.default_rng(seed)
+    trim = rng.integers(-abs(trim_num) - 1, abs(trim_num) + 1, 2)
+    trim = np.clip(trim, -(stride // 2 - 1), stride // 2)
+    extent = np.maximum(
+        coverage + trim,
+        np.array([(gr - 1) * stride + overlap + 1,
+                  (gc - 1) * stride + overlap + 1], np.float64))
+    pos = rng.uniform(0, 1, (150, 2)) * extent
+    of = pipeline.owner_of(pos, grid=(gr, gc), field=field,
+                           overlap=overlap)
+    owners = np.zeros(len(pos), np.int64)
+    for i in range(gr):
+        for j in range(gc):
+            origin = np.array([i * stride, j * stride], np.float64)
+            own = pipeline.ownership_mask(
+                pos, origin, field=field, overlap=overlap,
+                extent=extent, grid=(gr, gc))
+            owners += own
+            # the round-trip: the mask says yes exactly where owner_of
+            # names this field
+            np.testing.assert_array_equal(own, of == i * gc + j)
+    np.testing.assert_array_equal(owners, 1)
+
+
+def test_ownership_grid_inference_matches_explicit():
+    """owned_bounds infers the per-axis field count from the extent when
+    grid is omitted (legacy call sites), matching the explicit grid."""
+    field, overlap = 96, 32
+    stride = field - overlap
+    grid = (2, 3)
+    extent = (grid[0] * stride + overlap + 7,
+              grid[1] * stride + overlap - 5)
+    for i in range(grid[0]):
+        for j in range(grid[1]):
+            origin = np.array([i * stride, j * stride], np.float64)
+            lo_a, hi_a = pipeline.owned_bounds(
+                origin, field=field, overlap=overlap, extent=extent)
+            lo_b, hi_b = pipeline.owned_bounds(
+                origin, field=field, overlap=overlap, extent=extent,
+                grid=grid)
+            np.testing.assert_array_equal(lo_a, lo_b)
+            np.testing.assert_array_equal(hi_a, hi_b)
+
+
+def test_stitch_chain_collapses_to_one_fit():
+    """Chain regression: A–B–C with |A−B| and |B−C| inside the radius
+    but |A−C| outside must collapse to ONE representative — the old
+    pairwise pass dropped B for A and then skipped the (B, C) pair,
+    leaving C alive as a second fit of A."""
+    pos = np.array([[40.0, 50.0], [40.0, 51.2], [40.0, 52.4],   # chain
+                    [40.0, 80.0]])                              # unrelated
+    assert np.linalg.norm(pos[0] - pos[2]) > 1.5   # A–C alone: no pair
+    field_of = np.zeros(4, np.int64)
+    keep, removed = pipeline.stitch_mask(pos, field_of, grid=(1, 1),
+                                         field=96, overlap=0,
+                                         match_radius=1.5)
+    assert removed == 2
+    np.testing.assert_array_equal(keep, [True, False, False, True])
+    # cross-field chain: the representative is the component-centroid
+    # owner's fit
+    grid, field, overlap = (1, 2), 96, 32    # ownership line at col 80
+    pos = np.array([[40.0, 78.9], [40.0, 80.1], [40.0, 81.3]])
+    keep, removed = pipeline.stitch_mask(
+        pos, np.array([0, 1, 1]), grid=grid, field=field,
+        overlap=overlap, match_radius=1.5)
+    assert removed == 2
+    # centroid col 80.1 → field 1 owns it → its earliest fit survives
+    np.testing.assert_array_equal(keep, [False, True, False])
+
+
+def test_stitch_bayes_merges_confident_keeps_ambiguous():
+    """The Bayesian path merges pairs whose posterior clears the
+    threshold, keeps confidently-distinct pairs, and RETAINS (rather
+    than resolves) ambiguous-band pairs, flagging them in StitchInfo."""
+    grid, field, overlap = (1, 2), 96, 32
+    pos = np.array([
+        [40.0, 79.8], [40.0, 80.3],   # tight cross-boundary duplicate
+        [70.0, 79.0], [70.0, 83.5],   # clearly distinct (Δ=4.5)
+        [20.0, 40.0], [20.0, 140.0],  # isolated singletons
+    ])
+    field_of = np.array([0, 1, 0, 1, 0, 1])
+    cov = np.broadcast_to(0.05 * np.eye(2), (6, 2, 2)).copy()
+    info = pipeline.stitch(pos, field_of, grid=grid, field=field,
+                           overlap=overlap, method="bayes",
+                           position_cov=cov, match_threshold=0.9,
+                           search_radius=5.0)
+    probs = {tuple(p): q for p, q in zip(info.pairs.tolist(),
+                                         info.match_prob)}
+    assert probs[(0, 1)] >= 0.9          # duplicate: confident merge
+    assert probs[(2, 3)] < 0.9           # distinct: both fits survive
+    np.testing.assert_array_equal(
+        info.keep, [False, True, True, True, True, True])
+    assert info.removed == 1
+    # new_index maps surviving pre-stitch rows onto the stitched catalog
+    np.testing.assert_array_equal(info.new_index, [-1, 0, 1, 2, 3, 4])
+    # an ambiguous pair (mid-band posterior) is retained, not resolved:
+    # widen the covariances until the (2,3) pair lands mid-band
+    wide = np.broadcast_to(2.0 * np.eye(2), (6, 2, 2)).copy()
+    info_w = pipeline.stitch(pos, field_of, grid=grid, field=field,
+                             overlap=overlap, method="bayes",
+                             position_cov=wide, match_threshold=0.9,
+                             search_radius=6.0)
+    probs_w = {tuple(p): q for p, q in zip(info_w.pairs.tolist(),
+                                           info_w.match_prob)}
+    if 0.1 < probs_w[(2, 3)] < 0.9:
+        k = info_w.pairs.tolist().index([2, 3])
+        assert info_w.ambiguous[k]
+        assert info_w.keep[2] and info_w.keep[3]
+
+
+def test_seed_catalog_explicit_priors_take_precedence():
+    """A caller-supplied priors object must be used verbatim — it used
+    to be silently discarded whenever the refit path was eligible
+    (refit=True and ≥ 4 sources).  priors=None keeps the refit default;
+    refit=False with priors=None falls back to the defaults."""
+    from repro.core.priors import default_priors
+    sky = synthetic.sample_sky(jax.random.PRNGKey(5), num_sources=6,
+                               field=96, priors=synthetic.bright_priors())
+    positions = np.asarray(sky.truth.pos)
+    assert positions.shape[0] >= 4            # refit-eligible
+    mine = synthetic.bright_priors()
+    _, pri = pipeline.seed_catalog(sky.images, sky.metas, positions,
+                                   priors=mine, refit=True)
+    assert pri is mine
+    _, pri_refit = pipeline.seed_catalog(sky.images, sky.metas,
+                                         positions, priors=None,
+                                         refit=True)
+    assert pri_refit is not mine              # actually refit
+    _, pri_default = pipeline.seed_catalog(sky.images, sky.metas,
+                                           positions, priors=None,
+                                           refit=False)
+    np.testing.assert_allclose(pri_default.r_mu, default_priors().r_mu)
+
+
 # ---------------------------------------------------------------------------
 # The full pipeline (small survey; module-scoped to amortize compiles)
 # ---------------------------------------------------------------------------
@@ -210,6 +366,9 @@ def test_pipeline_kill_and_resume_reproduces_catalog(small_survey,
     np.testing.assert_allclose(res.thetas, ref.thetas, rtol=0, atol=0)
     np.testing.assert_allclose(np.asarray(res.catalog.pos),
                                np.asarray(ref.catalog.pos))
+    # the v2 slab's pos_cov plane rides kill-and-resume bit-identically
+    np.testing.assert_allclose(res.position_cov, ref.position_cov,
+                               rtol=0, atol=0)
 
 
 def test_pipeline_transient_failure_replays_deterministically(
