@@ -1,0 +1,273 @@
+"""Catalog-serving benchmark: query throughput, warm updates, torn reads.
+
+Fits a small survey end-to-end (``core/pipeline``), opens the committed
+checkpoint slab through ``serve.CatalogService.from_checkpoint`` and
+measures the three serving claims (docs/serving.md):
+
+* **Queries/sec, cold vs hot cache** — the same batch of cone searches
+  through the hot-cell LRU twice: first pass populates (every cell a
+  miss), second pass serves from cache.  The vectorized no-cache bulk
+  path is timed alongside, and cached results are checked row-for-row
+  against it.
+* **Warm vs cold refit** — re-fitting an unchanged epoch of one field
+  seeded from the served posterior (slab thetas + ``warm_radius`` of
+  the stored covariance, objective rebuilt from the slab's
+  ``seed_pos``) against the cold detect→seed→fit path, plus catalog
+  parity: the warm refit must reproduce the served thetas to rtol 1e-4.
+* **Update latency while serving** — a reader thread hammers snapshot
+  invariants and cone queries during a live ``update_field``; every
+  observed snapshot must be internally consistent (zero torn reads).
+
+``--smoke`` is the CI gate: hot-cache qps > cold, warm refit >= 2x
+faster than cold, warm catalog parity, zero torn reads.
+"""
+from __future__ import annotations
+
+try:
+    from benchmarks import common  # noqa: F401  (repo-root/src sys.path shim)
+except ImportError:                # script-path invocation
+    import common                  # noqa: F401
+
+import argparse
+import json
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import pipeline, synthetic
+from repro.data.images import SurveyStore
+from repro.serve import CatalogService, SurveyGeometry
+
+FIT_KW = dict(patch=16, batch=8, max_iters=30)
+
+
+def build_service(ckdir, seed=0, grid=(2, 2), field=96, overlap=24,
+                  sources_per_field=6):
+    """Fit a survey into ``ckdir`` and serve the committed slab."""
+    survey = synthetic.sample_survey(
+        jax.random.PRNGKey(seed), grid=grid, field=field, overlap=overlap,
+        sources_per_field=sources_per_field)
+    pipeline.run_pipeline(survey, checkpoint_dir=ckdir, **FIT_KW)
+    svc = CatalogService.from_checkpoint(
+        ckdir, SurveyGeometry.of(survey), fit_kw=FIT_KW)
+    return survey, svc
+
+
+def bench_queries(svc, seed=1, n_queries=200, radius=6.0) -> dict:
+    """Cold/hot cached qps + vectorized qps + cached-vs-bulk parity."""
+    snap = svc.snapshot()
+    rng = np.random.default_rng(seed)
+    extent = np.asarray(svc.geometry.extent, np.float64)
+    centers = rng.uniform(0.0, 1.0, size=(n_queries, 2)) * extent
+
+    svc.cache.clear(reset_counters=True)
+    t0 = time.perf_counter()
+    idx_c, off_c, dist_c = snap.cone(centers, radius, cached=True)
+    cold_s = time.perf_counter() - t0
+    misses_cold = svc.cache.misses
+
+    t0 = time.perf_counter()
+    idx_h, off_h, dist_h = snap.cone(centers, radius, cached=True)
+    hot_s = time.perf_counter() - t0
+    hits_hot = svc.cache.hits
+
+    t0 = time.perf_counter()
+    idx_v, off_v, dist_v = snap.cone(centers, radius, cached=False)
+    vec_s = time.perf_counter() - t0
+
+    parity = (np.array_equal(idx_c, idx_v)
+              and np.array_equal(off_c, off_v)
+              and np.allclose(dist_c, dist_v)
+              and np.array_equal(idx_h, idx_v))
+    return {
+        "n_queries": int(n_queries),
+        "radius": float(radius),
+        "n_results": int(idx_v.size),
+        "cold_qps": n_queries / cold_s,
+        "hot_qps": n_queries / hot_s,
+        "vectorized_qps": n_queries / vec_s,
+        "cache_misses_cold": int(misses_cold),
+        "cache_hits_hot": int(hits_hot),
+        "hit_rate": svc.cache.hit_rate,
+        "query_parity": bool(parity),
+    }
+
+
+def bench_updates(svc, survey, field_idx=0, rtol=1e-4) -> dict:
+    """Warm vs cold refit of an unchanged epoch + served-theta parity.
+
+    One cold update runs first as compile warmup so both timed paths
+    see the steady state (the Newton executables are cached on the
+    shared objective object)."""
+    store = SurveyStore(survey)
+    images, metas = store.fetch(field_idx)
+    snap0 = svc.snapshot()
+    f0 = snap0.field_offsets[field_idx]
+    f1 = snap0.field_offsets[field_idx + 1]
+    ref_thetas = snap0.thetas[f0:f1].copy()
+
+    svc.update_field(field_idx, images, metas, warm=False)  # compile warmup
+    rep_cold = svc.update_field(field_idx, images, metas, warm=False)
+    rep_warm1 = svc.update_field(field_idx, images, metas, warm=True)
+    rep_warm = svc.update_field(field_idx, images, metas, warm=True)
+
+    snap = svc.snapshot()
+    g0 = snap.field_offsets[field_idx]
+    g1 = snap.field_offsets[field_idx + 1]
+    warm_thetas = snap.thetas[g0:g1]
+    parity = (warm_thetas.shape == ref_thetas.shape
+              and np.allclose(warm_thetas, ref_thetas, rtol=rtol,
+                              atol=1e-6))
+    dev = (float(np.max(np.abs(warm_thetas - ref_thetas)))
+           if warm_thetas.shape == ref_thetas.shape else float("inf"))
+    return {
+        "field_idx": int(field_idx),
+        "n_sources": rep_warm.n_sources,
+        "cold_fit_seconds": rep_cold.fit_seconds,
+        "warm_fit_seconds": rep_warm.fit_seconds,
+        "warm_first_fit_seconds": rep_warm1.fit_seconds,
+        "warm_speedup": rep_cold.fit_seconds / max(rep_warm.fit_seconds,
+                                                   1e-9),
+        "cold_iters": rep_cold.total_iters,
+        "warm_iters": rep_warm.total_iters,
+        "swap_seconds": rep_warm.swap_seconds,
+        "cells_bumped": rep_warm.cells_bumped,
+        "warm_parity": bool(parity),
+        "warm_max_abs_dev": dev,
+    }
+
+
+def bench_update_while_serving(svc, survey, field_idx=0, radius=6.0) -> dict:
+    """Reader thread checks snapshot consistency during a live update.
+
+    A torn read is any snapshot whose internal pieces disagree —
+    flattened rows vs field offsets vs index size — or a cone result
+    referencing rows past the snapshot's end.  The swap is one
+    reference assignment, so the count must be zero."""
+    store = SurveyStore(survey)
+    images, metas = store.fetch(field_idx)
+    stop = threading.Event()
+    torn = [0]
+    reads = [0]
+    rng = np.random.default_rng(7)
+    extent = np.asarray(svc.geometry.extent, np.float64)
+    centers = rng.uniform(0.0, 1.0, size=(32, 2)) * extent
+
+    def reader():
+        while not stop.is_set():
+            snap = svc.snapshot()
+            n = snap.n
+            ok = (snap.thetas.shape[0] == n
+                  and snap.quality.shape[0] == n
+                  and snap.field_of.shape[0] == n
+                  and int(snap.field_offsets[-1]) == n
+                  and snap.index.n == n
+                  and int(np.asarray(snap.state["count"]).sum()) == n)
+            if ok:
+                idx, off, _ = snap.cone(centers, radius, cached=True)
+                ok = (idx.size == 0 or int(idx.max()) < n) \
+                    and int(off[-1]) == idx.size
+            reads[0] += 1
+            if not ok:
+                torn[0] += 1
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        t0 = time.perf_counter()
+        rep = svc.update_field(field_idx, images, metas, warm=True)
+        update_wall = time.perf_counter() - t0
+        time.sleep(0.05)       # let the reader see the new snapshot too
+    finally:
+        stop.set()
+        t.join()
+    return {
+        "update_wall_seconds": update_wall,
+        "swap_seconds": rep.swap_seconds,
+        "reads_during_update": int(reads[0]),
+        "torn_reads": int(torn[0]),
+        "version_after": rep.version,
+    }
+
+
+def run(seed=0, grid=(2, 2), field=96, overlap=24, sources_per_field=6,
+        n_queries=200, radius=6.0) -> dict:
+    with tempfile.TemporaryDirectory() as ckdir:
+        t0 = time.perf_counter()
+        survey, svc = build_service(ckdir, seed=seed, grid=grid,
+                                    field=field, overlap=overlap,
+                                    sources_per_field=sources_per_field)
+        build_s = time.perf_counter() - t0
+        out = {
+            "n_sources": svc.snapshot().n,
+            "build_seconds": build_s,
+            "queries": bench_queries(svc, seed=seed + 1,
+                                     n_queries=n_queries, radius=radius),
+            "updates": bench_updates(svc, survey),
+            "serving": bench_update_while_serving(svc, survey,
+                                                  radius=radius),
+        }
+        out["stats"] = svc.stats()
+        return out
+
+
+def main_csv():
+    r = run()
+    q, u, s = r["queries"], r["updates"], r["serving"]
+    emit("catalog_serve.query", 1e6 / q["hot_qps"],
+         f"hot_qps={q['hot_qps']:.0f};cold_qps={q['cold_qps']:.0f};"
+         f"vec_qps={q['vectorized_qps']:.0f};parity={q['query_parity']}")
+    emit("catalog_serve.update", u["warm_fit_seconds"] * 1e6,
+         f"warm_speedup={u['warm_speedup']:.2f};"
+         f"cold_s={u['cold_fit_seconds']:.2f};"
+         f"warm_parity={u['warm_parity']};"
+         f"torn_reads={s['torn_reads']};"
+         f"swap_ms={1e3 * s['swap_seconds']:.1f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", default="2x2")
+    ap.add_argument("--field", type=int, default=96)
+    ap.add_argument("--overlap", type=int, default=24)
+    ap.add_argument("--sources-per-field", type=int, default=6)
+    ap.add_argument("--queries", type=int, default=200)
+    ap.add_argument("--radius", type=float, default=6.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="/tmp/catalog_serve.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert the CI gate: hot-cache qps > cold, "
+                         "warm refit >= 2x faster than cold, warm "
+                         "catalog parity at rtol 1e-4, zero torn reads")
+    args = ap.parse_args()
+    grid = tuple(int(g) for g in args.grid.split("x"))
+    r = run(seed=args.seed, grid=grid, field=args.field,
+            overlap=args.overlap,
+            sources_per_field=args.sources_per_field,
+            n_queries=args.queries, radius=args.radius)
+    print(json.dumps(r, indent=1))
+    with open(args.out, "w") as f:
+        json.dump(r, f, indent=1)
+    if args.smoke:
+        q, u, s = r["queries"], r["updates"], r["serving"]
+        assert q["query_parity"], r
+        assert q["hot_qps"] > q["cold_qps"], r
+        assert u["warm_parity"], r
+        assert u["warm_speedup"] >= 2.0, r
+        assert s["torn_reads"] == 0, r
+        print("SMOKE OK: hot "
+              f"{q['hot_qps']:.0f} qps vs cold {q['cold_qps']:.0f}, "
+              f"warm refit {u['warm_speedup']:.1f}x faster "
+              f"({u['warm_fit_seconds']:.2f}s vs "
+              f"{u['cold_fit_seconds']:.2f}s), parity "
+              f"max|d|={u['warm_max_abs_dev']:.2e}, "
+              f"{s['reads_during_update']} concurrent reads, "
+              f"0 torn")
+
+
+if __name__ == "__main__":
+    main()

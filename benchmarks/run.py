@@ -16,7 +16,7 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (association, chaos_goodput,
+    from benchmarks import (association, catalog_serve, chaos_goodput,
                             fig3_batch_scaling, fig4_weak_scaling,
                             fig5_strong_scaling, fig6_sources_per_sec,
                             kernel_occupancy, mesh_compaction,
@@ -33,6 +33,7 @@ def main() -> None:
         ("mesh_compaction", mesh_compaction.main_csv),
         ("pipeline_e2e", pipeline_e2e.main_csv),
         ("association", association.main_csv),
+        ("catalog_serve", catalog_serve.main_csv),
         ("chaos_goodput", chaos_goodput.main_csv),
         ("roofline", roofline.main),
         ("kernel_occupancy", kernel_occupancy.main_csv),

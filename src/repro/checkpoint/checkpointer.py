@@ -209,6 +209,62 @@ class Checkpointer:
                 out.append(jnp.asarray(arr, dtype))
         return jax.tree_util.tree_unflatten(treedef, out)
 
+    def read_arrays(self, step: int, verify: bool = True):
+        """Read-only open of one committed step: host numpy leaves in
+        manifest order plus the manifest, no template and no device
+        placement.  This is the serving layer's slab open
+        (``repro.serve.CatalogService.from_checkpoint``): a reader wants
+        whatever structure the writer committed — integrity-verified —
+        without having to reconstruct the writer's template tree.
+        """
+        path = os.path.join(self.dir, f"step_{step}")
+        if not os.path.exists(os.path.join(path, "COMMITTED")):
+            raise FileNotFoundError(f"no committed checkpoint at {path}")
+        manifest = self._read_manifest(path)
+        n = (manifest or {}).get("num_leaves")
+        if n is None:
+            n = len([f for f in os.listdir(path)
+                     if f.startswith("arr_") and f.endswith(".npy")])
+        sums = (manifest or {}).get("sha256")
+        out = []
+        for i in range(n):
+            fpath = os.path.join(path, f"arr_{i}.npy")
+            try:
+                arr = np.load(fpath)
+            except Exception as e:
+                raise CheckpointCorruptError(
+                    f"leaf {i} of step {step} unreadable: {e}") from e
+            if verify and manifest is not None:
+                rec_shape = tuple(manifest["shapes"][i])
+                rec_dtype = manifest["dtypes"][i]
+                if tuple(arr.shape) != rec_shape or \
+                        str(arr.dtype) != rec_dtype:
+                    raise CheckpointCorruptError(
+                        f"leaf {i} of step {step}: loaded "
+                        f"{arr.dtype}{list(arr.shape)} but manifest "
+                        f"recorded {rec_dtype}{list(rec_shape)}")
+                if sums is not None and _leaf_sha256(arr) != sums[i]:
+                    raise CheckpointCorruptError(
+                        f"leaf {i} of step {step}: SHA-256 mismatch "
+                        "(bit corruption)")
+            out.append(arr)
+        return out, (manifest or {"step": step})
+
+    def read_latest(self, verify: bool = True, *, log=lambda s: None):
+        """Read-only ``read_arrays`` of the newest committed step that
+        passes verification, *skipping* (not quarantining) corrupt
+        steps — a reader must never mutate a directory a writer may
+        still be appending to.  Returns ``(leaves, manifest, step)`` or
+        ``None``."""
+        for step in reversed(self.steps()):
+            try:
+                leaves, manifest = self.read_arrays(step, verify=verify)
+                return leaves, manifest, step
+            except (CheckpointCorruptError, FileNotFoundError) as e:
+                log(f"checkpoint step {step} corrupt ({e}); "
+                    "skipping to an older step")
+        return None
+
     def quarantine_step(self, step: int) -> None:
         """Rename a corrupt checkpoint to ``step_<k>.corrupt`` so it
         never re-enters ``steps()`` scans (and a future save of the same

@@ -44,7 +44,7 @@ from dataclasses import dataclass, field as dataclass_field
 
 import numpy as np
 
-from repro.core import elbo
+from repro.core import elbo, spatial
 
 # Magnitudes per dex of flux (Pogson); only used to express flux ratios
 # in the unit the histogram priors are binned in.
@@ -65,59 +65,17 @@ def near_pairs(pos: np.ndarray, radius: float):
     """All index pairs (i < j) with ``|pos_i − pos_j| ≤ radius`` via a
     radius-sized cell hash — near-linear in catalog size, versus the
     dense N² distance matrix that would dominate association on large
-    surveys (duplicates are boundary-local; almost nothing pairs up)."""
-    pos = np.asarray(pos, np.float64).reshape(-1, 2)
-    cells = np.floor(pos / radius).astype(np.int64)
-    bins: dict = {}
-    for idx, key in enumerate(map(tuple, cells)):
-        bins.setdefault(key, []).append(idx)
-    ii, jj = [], []
-    for (cr, cc), members in bins.items():
-        for dr, dc in ((0, 0), (0, 1), (1, -1), (1, 0), (1, 1)):
-            other = members if (dr, dc) == (0, 0) else \
-                bins.get((cr + dr, cc + dc))
-            if other is None:
-                continue
-            for a in members:
-                for b in other:
-                    if (dr, dc) == (0, 0) and b <= a:
-                        continue
-                    ii.append(min(a, b))
-                    jj.append(max(a, b))
-    ii = np.asarray(ii, np.int64)
-    jj = np.asarray(jj, np.int64)
-    if ii.size == 0:
-        return ii, jj, np.zeros(0)
-    dist = np.linalg.norm(pos[ii] - pos[jj], axis=-1)
-    near = dist <= radius
-    return ii[near], jj[near], dist[near]
+    surveys (duplicates are boundary-local; almost nothing pairs up).
+    Delegates to ``core/spatial.radius_pairs``, the one cell-hash
+    implementation shared with the serving layer's index."""
+    return spatial.radius_pairs(pos, radius)
 
 
 def cross_pairs(pos_a: np.ndarray, pos_b: np.ndarray, radius: float):
     """All cross-catalog pairs (i into a, j into b) with
-    ``|a_i − b_j| ≤ radius``, same cell-hash construction as
-    ``near_pairs`` but over two catalogs."""
-    pos_a = np.asarray(pos_a, np.float64).reshape(-1, 2)
-    pos_b = np.asarray(pos_b, np.float64).reshape(-1, 2)
-    bins: dict = {}
-    for idx, key in enumerate(map(tuple,
-                                  np.floor(pos_b / radius).astype(np.int64))):
-        bins.setdefault(key, []).append(idx)
-    cells_a = np.floor(pos_a / radius).astype(np.int64)
-    ii, jj = [], []
-    for i, (cr, cc) in enumerate(map(tuple, cells_a)):
-        for dr in (-1, 0, 1):
-            for dc in (-1, 0, 1):
-                for j in bins.get((cr + dr, cc + dc), ()):
-                    ii.append(i)
-                    jj.append(j)
-    ii = np.asarray(ii, np.int64)
-    jj = np.asarray(jj, np.int64)
-    if ii.size == 0:
-        return ii, jj, np.zeros(0)
-    dist = np.linalg.norm(pos_a[ii] - pos_b[jj], axis=-1)
-    near = dist <= radius
-    return ii[near], jj[near], dist[near]
+    ``|a_i − b_j| ≤ radius``, same shared cell hash as ``near_pairs``
+    but over two catalogs (``core/spatial.cross_radius_pairs``)."""
+    return spatial.cross_radius_pairs(pos_a, pos_b, radius)
 
 
 # ---------------------------------------------------------------------------

@@ -39,11 +39,18 @@ def _spread_bits(x: np.ndarray) -> np.ndarray:
     return x
 
 
+def morton_codes(q: np.ndarray) -> np.ndarray:
+    """Morton (Z-order) codes from non-negative integer [N, 2] coords
+    (low 16 bits per axis).  Shared by the scheduler's source ordering
+    below and the cell-grid spatial index (``core/spatial.py``), so
+    every consumer lays data out along the same space-filling curve."""
+    return _spread_bits(q[:, 0]) | (_spread_bits(q[:, 1]) << 1)
+
+
 def morton_order(positions: np.ndarray, extent: float) -> np.ndarray:
     """Indices that sort sources along a Z-order curve. positions: [S, 2]."""
     q = np.clip((positions / max(extent, 1e-9)) * 65535.0, 0, 65535)
-    code = _spread_bits(q[:, 0]) | (_spread_bits(q[:, 1]) << 1)
-    return np.argsort(code, kind="stable")
+    return np.argsort(morton_codes(q), kind="stable")
 
 
 # --------------------------------------------------------------------------

@@ -169,6 +169,29 @@ def extract_patches(images: jnp.ndarray, metas: ImageMeta,
     return jax.vmap(per_source)(positions)
 
 
+@functools.partial(jax.jit, static_argnames=("patch",))
+def _own_patches(catalog: SourceParams, metas: ImageMeta,
+                 corners: jnp.ndarray, patch: int) -> jnp.ndarray:
+    """Each source's own rendered contribution to its patches (module-
+    level jit: cached across ``run_inference`` calls of the same shape,
+    which repeated serving updates depend on)."""
+    from repro.core.model import render_source_patch
+
+    def own(src, corner_s):
+        def per_image(meta, c):
+            return render_source_patch(src, meta, c, patch)
+        return jax.vmap(per_image)(metas, corner_s)
+
+    return jax.vmap(own)(catalog, corners)
+
+
+@jax.jit
+def _seed_thetas(catalog: SourceParams, priors: Priors) -> jnp.ndarray:
+    """Per-source initial thetas (module-level jit; priors ride as a
+    traced pytree so new prior values reuse the compilation)."""
+    return jax.vmap(lambda src: elbo.init_theta(src, priors))(catalog)
+
+
 def make_objective(metas: ImageMeta, priors: Priors,
                    backend: str | None = None,
                    precision: str | None = None,
@@ -275,8 +298,30 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
                   scheduler: DynamicScheduler | None = None,
                   compact_every: int | None = None,
                   chaos: Any = None, chaos_tag: Any = 0,
-                  progress: Any = None):
+                  progress: Any = None,
+                  init_thetas: jnp.ndarray | None = None,
+                  init_radius: float | np.ndarray = 1.0,
+                  objective: newton.BatchedObjective | None = None):
     """Run Celeste VI over a full field.  Returns (thetas [S, D], stats).
+
+    ``init_thetas`` ([S, 27]) warm-starts the fit from a previous
+    posterior instead of re-seeding from ``elbo.init_theta`` of the
+    candidate catalog — the serving layer's incremental-update path
+    (``repro.serve``, docs/serving.md) passes the stored slab thetas of
+    an already-fitted field here.  ``init_radius`` (scalar or [S]) sets
+    each source's *initial* trust-region radius; a warm start pairs it
+    with a radius derived from the stored posterior covariance, so
+    near-converged sources take small, immediately-accepted steps
+    instead of re-exploring from the default radius.  Both default to
+    the cold-start behavior and leave cold results bit-identical.
+
+    ``objective`` passes a prebuilt ``make_objective`` result in place
+    of building one here.  ``newton.fit_batch`` treats the objective as
+    a static jit argument, so a caller that reuses ONE objective across
+    calls (the serving layer's repeated updates of a field) reuses the
+    compiled Newton executables instead of paying a full recompile per
+    call; ``backend``/``precision``/``kernel_config`` are ignored when
+    it is given.
 
     ``passes > 1`` re-renders neighbor backgrounds from the previous pass's
     fitted catalog and refits — the iterated-conditional refinement the
@@ -381,22 +426,23 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
         exp_patch, _ = extract_patches(total, metas, positions, patch)
 
         # own contribution, subtracted to leave sky + fixed neighbors
-        def own(src, corner_s):
-            def per_image(meta, c):
-                from repro.core.model import render_source_patch
-                return render_source_patch(src, meta, c, patch)
-            return jax.vmap(per_image)(metas, corner_s)
-
-        own_patch = jax.jit(jax.vmap(own))(catalog, corners)
+        own_patch = _own_patches(catalog, metas, corners, patch)
         return x, corners, jnp.maximum(exp_patch - own_patch, 1e-3)
 
     x, corners, bg = neighbor_background(init_catalog, init_catalog.pos)
 
-    thetas = jax.jit(jax.vmap(
-        lambda src: elbo.init_theta(src, priors)))(init_catalog)
+    if init_thetas is not None:
+        thetas = jnp.asarray(init_thetas, jnp.float32).reshape(
+            s, elbo.THETA_DIM)
+    else:
+        thetas = _seed_thetas(init_catalog, priors)
     # seed snapshot: degradation-ladder refits (and failed sources)
     # restart from here, never from a possibly-poisoned partial fit
     thetas0 = thetas
+    # [S] per-source initial trust radius (scalar broadcasts); gathered
+    # per round below so compaction/redistribution keep the right value
+    radius0 = np.broadcast_to(
+        np.asarray(init_radius, np.float32), (s,)).astype(np.float32)
 
     # ---- scheduling (decomposition scheme) ----
     def catalog_features(catalog):
@@ -409,7 +455,7 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
 
     cm = cost_model or decompose.CostModel()
 
-    if kernel_config == "auto":
+    if objective is None and kernel_config == "auto":
         from repro.kernels import tuning
         kernel_config = tuning.resolve(
             "auto", backends.resolve(backend), batch,
@@ -423,10 +469,11 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
     # post-segment host scan of the fit outputs.
     checkify_on = backends.checkify_enabled()
     checkify_errors: list[str] = []
-    objective = make_objective(metas, priors, backend=backend,
-                               precision=precision,
-                               kernel_config=kernel_config,
-                               checkify_guards=False)
+    if objective is None:
+        objective = make_objective(metas, priors, backend=backend,
+                                   precision=precision,
+                                   kernel_config=kernel_config,
+                                   checkify_guards=False)
 
     min_bucket = 4
     _jit_cache: dict = {}   # per-call: jitted fit/exchange wrappers
@@ -605,7 +652,9 @@ def run_inference(images: jnp.ndarray, metas: ImageMeta,
         xb, bgb, cb, tb, act = sharding.shard_rows(
             jax.tree.map(lambda a: a.reshape(shp + a.shape[1:]),
                          (xb, bgb, cb, tb, act)), mesh, data_axis)
-        radius = jnp.ones(shp, jnp.float32)
+        radius = jnp.asarray(
+            np.where(cur >= 0, radius0[np.maximum(cur, 0)],
+                     1.0).astype(np.float32))
         state = None
         seg_len = int(compact_every) if compact_every else max_iters
         used = 0

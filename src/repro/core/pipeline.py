@@ -334,6 +334,42 @@ def stitch_mask(positions, field_of, *, grid, field: int, overlap: int,
 
 
 # ---------------------------------------------------------------------------
+# Slab flattening (shared with the serving layer)
+# ---------------------------------------------------------------------------
+
+
+def flatten_slabs(state):
+    """Flatten the fixed-capacity per-field checkpoint slab into ragged
+    per-source arrays: ``(thetas [N, 27], quality [N], position_cov
+    [N, 2, 2], field_of [N])`` with each field contributing its first
+    ``count[i]`` rows in field order.
+
+    ``state`` is the v3 slab dict (``count``/``pos_cov``/``quality``/
+    ``seed_pos``/``thetas``) the pipeline checkpoints after every field — the same
+    structure ``Checkpointer.read_arrays`` hands the serving layer, so
+    ``run_pipeline``'s stitch input and ``repro.serve``'s snapshot build
+    flatten identically by construction."""
+    counts = np.asarray(state["count"])
+    nf = counts.shape[0]
+    thetas_slab = np.asarray(state["thetas"])
+    quality_slab = np.asarray(state["quality"])
+    cov_slab = np.asarray(state["pos_cov"])
+    if counts.sum():
+        thetas = np.concatenate(
+            [thetas_slab[i, :counts[i]] for i in range(nf)], axis=0)
+        quality = np.concatenate(
+            [quality_slab[i, :counts[i]] for i in range(nf)], axis=0)
+        position_cov = np.concatenate(
+            [cov_slab[i, :counts[i]] for i in range(nf)], axis=0)
+    else:
+        thetas = np.zeros((0, elbo.THETA_DIM), np.float32)
+        quality = np.zeros((0,), np.int8)
+        position_cov = np.zeros((0, 2, 2), np.float32)
+    field_of = np.repeat(np.arange(nf), counts)
+    return thetas, quality, position_cov, field_of
+
+
+# ---------------------------------------------------------------------------
 # The driver
 # ---------------------------------------------------------------------------
 
@@ -429,9 +465,11 @@ def run_pipeline(survey, priors: Priors | None = None, *,
     ``priors=None`` with ``refit_priors=True`` for the paper's
     learn-from-the-catalog behavior.
 
-    The checkpoint slab carries a ``pos_cov`` [nf, cap, 2, 2] plane
-    (slab layout v2).  Checkpoints written by the 3-leaf v1 layout fail
-    restore with a structure-changed error — see
+    The checkpoint slab carries a ``pos_cov`` [nf, cap, 2, 2] plane and
+    a ``seed_pos`` [nf, cap, 2] plane (slab layout v3; ``seed_pos``
+    anchors the serving layer's warm re-fits to the original patch
+    windows — see docs/serving.md).  Checkpoints written by the v1/v2
+    layouts fail restore with a structure-changed error — see
     docs/fault_tolerance.md.
     """
     store = store or SurveyStore(survey, chaos=chaos)
@@ -440,6 +478,11 @@ def run_pipeline(survey, priors: Priors | None = None, *,
         "count": jnp.zeros((nf,), jnp.int32),
         "pos_cov": jnp.zeros((nf, cap_per_field, 2, 2), jnp.float32),
         "quality": jnp.zeros((nf, cap_per_field), jnp.int8),
+        # detection-seed positions (global px): the patch windows and
+        # neighbor backgrounds of each field's fit are anchored here, so
+        # a warm re-fit of the field (repro.serve) can rebuild the
+        # *identical* objective instead of re-detecting
+        "seed_pos": jnp.zeros((nf, cap_per_field, 2), jnp.float32),
         "thetas": jnp.zeros((nf, cap_per_field, elbo.THETA_DIM),
                             jnp.float32),
     }
@@ -510,6 +553,8 @@ def run_pipeline(survey, priors: Priors | None = None, *,
                     jnp.asarray(istats.position_cov)),
                 "quality": st["quality"].at[i, :n].set(
                     jnp.asarray(istats.quality)),
+                "seed_pos": st["seed_pos"].at[i, :n].set(
+                    jnp.asarray(seeds, jnp.float32)),
                 "thetas": st["thetas"].at[i, :n].set(thetas_f),
             }
             conv, mean_iters = istats.converged, float(istats.iters.mean())
@@ -520,6 +565,7 @@ def run_pipeline(survey, priors: Priors | None = None, *,
             st = {"count": st["count"].at[i].set(0),
                   "pos_cov": st["pos_cov"],
                   "quality": st["quality"],
+                  "seed_pos": st["seed_pos"],
                   "thetas": st["thetas"]}
             conv, mean_iters, degraded = 0, 0.0, 0
         t_fit = time.perf_counter() - t0
@@ -548,22 +594,7 @@ def run_pipeline(survey, priors: Priors | None = None, *,
     # ---- stitch: flatten slabs, dedup across fields ----
     # quarantined fields have count 0 — the hole simply contributes no
     # sources, and neighbors' halo fits cover the shared boundaries
-    counts = np.asarray(state["count"])
-    thetas_slab = np.asarray(state["thetas"])
-    quality_slab = np.asarray(state["quality"])
-    cov_slab = np.asarray(state["pos_cov"])
-    if counts.sum():
-        thetas = np.concatenate(
-            [thetas_slab[i, :counts[i]] for i in range(nf)], axis=0)
-        quality = np.concatenate(
-            [quality_slab[i, :counts[i]] for i in range(nf)], axis=0)
-        position_cov = np.concatenate(
-            [cov_slab[i, :counts[i]] for i in range(nf)], axis=0)
-    else:
-        thetas = np.zeros((0, elbo.THETA_DIM), np.float32)
-        quality = np.zeros((0,), np.int8)
-        position_cov = np.zeros((0, 2, 2), np.float32)
-    field_of = np.repeat(np.arange(nf), counts)
+    thetas, quality, position_cov, field_of = flatten_slabs(state)
     catalog = infer.infer_catalog(jnp.asarray(thetas))
     sinfo = stitch(
         np.asarray(catalog.pos), field_of, grid=survey.grid,

@@ -1,0 +1,295 @@
+"""Shared cell-grid spatial index: radius pair hashing and cone/box queries.
+
+Three consumers need the same "hash positions into radius-sized cells,
+look only at neighboring cells" structure:
+
+* the stitcher's duplicate-candidate generation
+  (``core/associate.near_pairs``),
+* N-way catalog federation (``core/associate.cross_pairs``),
+* the catalog *service* (``repro.serve``): cone-search and box queries
+  over the served catalog, batched.
+
+Historically the first two carried their own dict-of-lists cell hash.
+This module is the single implementation all of them now share: a
+``CellGrid`` built once over a position set, with cells laid out along
+the same Morton (Z-order) curve the scheduler uses for source batches
+(``decompose.morton_codes``), so spatially adjacent cells are adjacent
+in memory — exactly the property the serving layer's hot-cell cache
+exploits.  Everything is host-side vectorized numpy (searchsorted over
+sorted cell codes + the repeat/cumsum ragged-expansion trick, the same
+idiom as ``decompose.neighbor_counts``): no per-source Python loops, so
+batched queries amortize to a few array passes regardless of Q.
+
+Conventions: cone search is inclusive (``dist <= radius``); box queries
+are closed on both ends (``lo <= pos <= hi``).  Query results list
+original row indices in ascending order per query — deterministic, and
+trivially comparable against a brute-force reference (the property
+tests in tests/test_spatial.py do exactly that).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import decompose
+
+# Morton codes interleave 16 bits per axis; grids spanning more cells
+# per axis fall back to a row-major 64-bit code (same collision-free
+# lookups, no Z-order layout).
+_MORTON_SPAN = 1 << 16
+
+
+def _empty_pairs():
+    return (np.zeros(0, np.int64), np.zeros(0, np.int64), np.zeros(0))
+
+
+def _expand_ranges(lo: np.ndarray, hi: np.ndarray):
+    """Flatten ragged [lo_k, hi_k) ranges into (owner, slot) pairs.
+
+    ``owner[t]`` is the range index each flattened element came from and
+    ``slot[t]`` the position inside the sorted arrays — the repeat+cumsum
+    trick, no Python loop."""
+    n = hi - lo
+    total = int(n.sum())
+    if total == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    owner = np.repeat(np.arange(len(lo), dtype=np.int64), n)
+    starts = np.repeat(lo, n)
+    offset = np.arange(total, dtype=np.int64) - np.repeat(
+        np.cumsum(n) - n, n)
+    return owner, starts + offset
+
+
+@dataclass(frozen=True)
+class CellGrid:
+    """An immutable cell-grid index over a fixed position set.
+
+    Sources are hashed to square cells of side ``cell_size`` and stored
+    sorted by cell code (Morton-ordered when the grid fits 2^16 cells
+    per axis), so each cell's members form one contiguous slice of the
+    sorted arrays, found with two ``searchsorted`` calls."""
+
+    cell_size: float
+    base: np.ndarray      # [2] int64 cell coords of the grid origin
+    span: np.ndarray      # [2] int64 cell count per axis (bounding box)
+    morton: bool          # Morton cell codes (vs row-major fallback)
+    order: np.ndarray     # [S] original row per sorted slot
+    code: np.ndarray      # [S] sorted cell code per slot
+    pos: np.ndarray       # [S, 2] positions in slot order
+
+    @property
+    def n(self) -> int:
+        return int(self.order.shape[0])
+
+    # ---------------------------------------------------------- construction
+    @classmethod
+    def build(cls, pos: np.ndarray, cell_size: float) -> "CellGrid":
+        pos = np.asarray(pos, np.float64).reshape(-1, 2)
+        cell = float(max(cell_size, 1e-9))
+        if pos.shape[0] == 0:
+            z = np.zeros(0, np.int64)
+            return cls(cell_size=cell, base=np.zeros(2, np.int64),
+                       span=np.zeros(2, np.int64), morton=True,
+                       order=z, code=z, pos=pos)
+        cells = np.floor(pos / cell).astype(np.int64)
+        base = cells.min(axis=0)
+        span = cells.max(axis=0) - base + 1
+        morton = bool(np.all(span <= _MORTON_SPAN))
+        code = cls._encode_rel(cells - base, morton)
+        order = np.argsort(code, kind="stable")
+        return cls(cell_size=cell, base=base, span=span, morton=morton,
+                   order=order, code=code[order], pos=pos[order])
+
+    # ------------------------------------------------------------- cell math
+    @staticmethod
+    def _encode_rel(rel: np.ndarray, morton: bool) -> np.ndarray:
+        if morton:
+            return decompose.morton_codes(rel).astype(np.int64)
+        return (rel[:, 0] << 32) | rel[:, 1]
+
+    def cell_coords(self, points: np.ndarray) -> np.ndarray:
+        """Global integer cell coords of arbitrary points."""
+        points = np.asarray(points, np.float64).reshape(-1, 2)
+        return np.floor(points / self.cell_size).astype(np.int64)
+
+    def encode(self, cells: np.ndarray):
+        """(codes, valid) for global cell coords.  Cells outside the
+        grid's encodable range are flagged invalid (they cannot contain
+        sources, so lookups treat them as empty)."""
+        cells = np.asarray(cells, np.int64).reshape(-1, 2)
+        rel = cells - self.base
+        lim = _MORTON_SPAN if self.morton else (1 << 31)
+        valid = np.all((rel >= 0) & (rel < lim), axis=1)
+        codes = self._encode_rel(np.where(valid[:, None], rel, 0),
+                                 self.morton)
+        return codes, valid
+
+    def ranges(self, codes: np.ndarray, valid: np.ndarray | None = None):
+        """[lo, hi) slot ranges of each cell code (empty when invalid)."""
+        lo = np.searchsorted(self.code, codes, side="left")
+        hi = np.searchsorted(self.code, codes, side="right")
+        if valid is not None:
+            lo = np.where(valid, lo, 0)
+            hi = np.where(valid, hi, 0)
+        return lo, hi
+
+    def cell_members(self, cell: np.ndarray) -> np.ndarray:
+        """Original row indices inside ONE global cell coord (ascending)."""
+        codes, valid = self.encode(np.asarray(cell).reshape(1, 2))
+        lo, hi = self.ranges(codes, valid)
+        return np.sort(self.order[int(lo[0]):int(hi[0])])
+
+    def occupied_cells(self) -> np.ndarray:
+        """[C, 2] distinct global cell coords that hold at least one
+        source, in storage (Z-)order."""
+        if self.n == 0:
+            return np.zeros((0, 2), np.int64)
+        keep = np.ones(self.n, bool)
+        keep[1:] = self.code[1:] != self.code[:-1]
+        return self.cell_coords(self.pos[keep])
+
+    # ------------------------------------------------------- batched queries
+    def _candidates(self, lo_cell: np.ndarray, hi_cell: np.ndarray):
+        """(owner, slot) candidate pairs for per-query cell-coord bboxes
+        ``[lo_cell_q, hi_cell_q]`` (inclusive).  owner indexes queries,
+        slot the sorted arrays."""
+        nr = hi_cell[:, 0] - lo_cell[:, 0] + 1
+        nc = hi_cell[:, 1] - lo_cell[:, 1] + 1
+        counts = np.maximum(nr, 0) * np.maximum(nc, 0)
+        total = int(counts.sum())
+        if total == 0 or self.n == 0:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        # ragged (query, cell) list: decode each flattened entry's cell
+        # from its within-query offset
+        cq = np.repeat(np.arange(len(counts), dtype=np.int64), counts)
+        t = np.arange(total, dtype=np.int64) - np.repeat(
+            np.cumsum(counts) - counts, counts)
+        cells = np.stack([lo_cell[cq, 0] + t // np.maximum(nc[cq], 1),
+                          lo_cell[cq, 1] + t % np.maximum(nc[cq], 1)],
+                         axis=1)
+        codes, valid = self.encode(cells)
+        lo, hi = self.ranges(codes, valid)
+        owner_cell, slot = _expand_ranges(lo, hi)
+        return cq[owner_cell], slot
+
+    def cone(self, centers: np.ndarray, radius):
+        """Batched cone search: all sources with ``dist <= radius``.
+
+        ``centers`` [Q, 2]; ``radius`` scalar or [Q].  Returns
+        ``(idx, offsets, dist)``: original row indices concatenated per
+        query (ascending within each query), CSR-style ``offsets``
+        [Q + 1], and the matching distances."""
+        centers = np.asarray(centers, np.float64).reshape(-1, 2)
+        q = centers.shape[0]
+        rad = np.broadcast_to(np.asarray(radius, np.float64), (q,))
+        lo_cell = self.cell_coords(centers - rad[:, None])
+        hi_cell = self.cell_coords(centers + rad[:, None])
+        owner, slot = self._candidates(lo_cell, hi_cell)
+        if owner.size == 0:
+            return (np.zeros(0, np.int64), np.zeros(q + 1, np.int64),
+                    np.zeros(0))
+        d = np.linalg.norm(self.pos[slot] - centers[owner], axis=-1)
+        keep = d <= rad[owner]
+        owner, rows, d = owner[keep], self.order[slot[keep]], d[keep]
+        srt = np.lexsort((rows, owner))
+        owner, rows, d = owner[srt], rows[srt], d[srt]
+        offsets = np.zeros(q + 1, np.int64)
+        np.cumsum(np.bincount(owner, minlength=q), out=offsets[1:])
+        return rows, offsets, d
+
+    def box(self, lo: np.ndarray, hi: np.ndarray):
+        """Batched box query: all sources with ``lo <= pos <= hi``
+        (closed box).  ``lo``/``hi`` [Q, 2].  Returns ``(idx, offsets)``
+        shaped like ``cone``."""
+        lo = np.asarray(lo, np.float64).reshape(-1, 2)
+        hi = np.asarray(hi, np.float64).reshape(-1, 2)
+        q = lo.shape[0]
+        owner, slot = self._candidates(self.cell_coords(lo),
+                                       self.cell_coords(hi))
+        if owner.size == 0:
+            return np.zeros(0, np.int64), np.zeros(q + 1, np.int64)
+        p = self.pos[slot]
+        keep = np.all((p >= lo[owner]) & (p <= hi[owner]), axis=1)
+        owner, rows = owner[keep], self.order[slot[keep]]
+        srt = np.lexsort((rows, owner))
+        owner, rows = owner[srt], rows[srt]
+        offsets = np.zeros(q + 1, np.int64)
+        np.cumsum(np.bincount(owner, minlength=q), out=offsets[1:])
+        return rows, offsets
+
+
+# Neighboring-cell offsets: with cell side == search radius, every pair
+# within the radius lives in the same or an 8-adjacent cell.
+_OFFSETS9 = np.array([(di, dj) for di in (-1, 0, 1) for dj in (-1, 0, 1)],
+                     np.int64)
+
+
+def radius_pairs(pos: np.ndarray, radius: float):
+    """All index pairs (i < j) with ``|pos_i − pos_j| <= radius``.
+
+    THE radius cell hash: cells of side ``radius``, each source compared
+    only against its own and the 8 neighboring cells.  Near-linear in
+    catalog size versus the dense N² distance matrix.  Returns
+    ``(ii, jj, dist)`` with ``ii < jj``, sorted by (ii, jj).
+    """
+    pos = np.asarray(pos, np.float64).reshape(-1, 2)
+    if pos.shape[0] < 2:
+        return _empty_pairs()
+    grid = CellGrid.build(pos, radius)
+    cells = grid.cell_coords(grid.pos)      # slot order
+    ii_parts, jj_parts = [], []
+    for off in _OFFSETS9:
+        codes, valid = grid.encode(cells + off)
+        lo, hi = grid.ranges(codes, valid)
+        src_slot, cand_slot = _expand_ranges(lo, hi)
+        if src_slot.size == 0:
+            continue
+        a = grid.order[src_slot]
+        b = grid.order[cand_slot]
+        # the 9-offset sweep enumerates every ordered pair of
+        # cell-adjacent sources exactly once; keeping a < b leaves each
+        # unordered pair exactly once (and drops self-pairs)
+        keep = a < b
+        ii_parts.append(a[keep])
+        jj_parts.append(b[keep])
+    if not ii_parts:
+        return _empty_pairs()
+    ii = np.concatenate(ii_parts)
+    jj = np.concatenate(jj_parts)
+    dist = np.linalg.norm(pos[ii] - pos[jj], axis=-1)
+    near = dist <= radius
+    ii, jj, dist = ii[near], jj[near], dist[near]
+    srt = np.lexsort((jj, ii))
+    return ii[srt], jj[srt], dist[srt]
+
+
+def cross_radius_pairs(pos_a: np.ndarray, pos_b: np.ndarray,
+                       radius: float):
+    """All cross-catalog pairs (i into a, j into b) with
+    ``|a_i − b_j| <= radius`` — the same cell hash over two catalogs.
+    Returns ``(ii, jj, dist)`` sorted by (ii, jj)."""
+    pos_a = np.asarray(pos_a, np.float64).reshape(-1, 2)
+    pos_b = np.asarray(pos_b, np.float64).reshape(-1, 2)
+    if pos_a.shape[0] == 0 or pos_b.shape[0] == 0:
+        return _empty_pairs()
+    grid = CellGrid.build(pos_b, radius)
+    cells_a = grid.cell_coords(pos_a)
+    ii_parts, jj_parts = [], []
+    for off in _OFFSETS9:
+        codes, valid = grid.encode(cells_a + off)
+        lo, hi = grid.ranges(codes, valid)
+        owner, slot = _expand_ranges(lo, hi)
+        if owner.size == 0:
+            continue
+        ii_parts.append(owner)
+        jj_parts.append(grid.order[slot])
+    if not ii_parts:
+        return _empty_pairs()
+    ii = np.concatenate(ii_parts)
+    jj = np.concatenate(jj_parts)
+    dist = np.linalg.norm(pos_a[ii] - pos_b[jj], axis=-1)
+    near = dist <= radius
+    ii, jj, dist = ii[near], jj[near], dist[near]
+    srt = np.lexsort((jj, ii))
+    return ii[srt], jj[srt], dist[srt]

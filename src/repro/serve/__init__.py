@@ -1,0 +1,33 @@
+"""Catalog-as-a-service: the query layer over the pipeline's slabs.
+
+The pipeline (core/pipeline.py) ends at a stitched array; a production
+catalog is *served* — the ROADMAP's "heavy traffic from millions of
+users" direction, and the shape of the petascale follow-up paper
+(PAPERS.md: 1801.10277), where the catalog is the queryable product of
+inference.  This package turns the fixed-shape per-field checkpoint
+slabs into that product:
+
+* ``index``   — spatial queries (cone / box) over the served catalog on
+  the shared cell grid (``core/spatial.py``), batched and vectorized,
+  with an LRU hot-cell cache (``cache``).
+* ``service`` — the serving state machine: immutable
+  ``CatalogSnapshot``s behind a single atomically-flipped reference
+  (readers are lock-free and can never observe a torn catalog),
+  per-cell version counters, and *incremental updates* — a new epoch of
+  an already-fitted field warm-starts ``infer.run_inference`` from the
+  served posterior (slab theta + Hessian-derived trust radius) instead
+  of re-seeding from detection, then swaps only the affected cells.
+
+See docs/serving.md for the index layout, cache policy, and the
+warm-start + atomic-swap protocol; benchmarks/catalog_serve.py measures
+queries/sec, warm-vs-cold refit time, and update-latency-while-serving.
+"""
+from repro.serve.cache import LRUCache
+from repro.serve.index import CatalogIndex
+from repro.serve.service import (CatalogService, CatalogSnapshot,
+                                 SurveyGeometry, UpdateReport, warm_radius)
+
+__all__ = [
+    "LRUCache", "CatalogIndex", "CatalogService", "CatalogSnapshot",
+    "SurveyGeometry", "UpdateReport", "warm_radius",
+]

@@ -1,0 +1,74 @@
+"""A counted, thread-safe LRU cache for hot catalog cells.
+
+Query traffic against a served catalog is heavily skewed — popular sky
+regions (bright objects, survey deep fields) are hit constantly while
+most cells go cold — so the index keeps recently-touched cells'
+materialized blocks in a bounded LRU.  The cache is deliberately dumb:
+keys are opaque (the index keys on ``(cell, version)`` so a cell bumped
+by an incremental update misses naturally and its stale block ages
+out), eviction is strict LRU, and every access bumps a hit or miss
+counter — the observability the serving benchmark's cold-vs-hot
+queries/sec split is built on.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+
+class LRUCache:
+    """Bounded LRU mapping with hit/miss/eviction counters.
+
+    A single mutex guards the map and the counters: reader threads query
+    concurrently with the writer's snapshot builds, and ``OrderedDict``
+    mutation is not atomic under either.  The critical section is a dict
+    move — far cheaper than the cell materialization a miss costs."""
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._data: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key):
+        """The cached value, or ``None`` on a miss (counted)."""
+        with self._lock:
+            try:
+                self._data.move_to_end(key)
+            except KeyError:
+                self.misses += 1
+                return None
+            self.hits += 1
+            return self._data[key]
+
+    def put(self, key, value) -> None:
+        with self._lock:
+            self._data[key] = value
+            self._data.move_to_end(key)
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+                self.evictions += 1
+
+    def clear(self, reset_counters: bool = False) -> None:
+        with self._lock:
+            self._data.clear()
+            if reset_counters:
+                self.hits = self.misses = self.evictions = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self),
+                "capacity": self.capacity, "hit_rate": self.hit_rate}

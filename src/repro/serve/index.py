@@ -1,0 +1,127 @@
+"""The serving-side spatial index: cell grid + versioned hot-cell cache.
+
+A ``CatalogIndex`` wraps one snapshot's ``core/spatial.CellGrid`` with
+the two things serving adds over a bare grid:
+
+* **Batched vectorized queries** — ``cone``/``box`` delegate straight
+  to the grid's searchsorted machinery: Q queries resolve in a handful
+  of array passes, no per-query Python.  This is the path for bulk and
+  cold traffic.
+* **The hot-cell cache** — ``cone_cached``/``box_cached`` route per
+  covered cell through a shared ``LRUCache``.  Cached blocks are
+  *snapshot-independent*: they store each member's **stable id**
+  ``(field, slot-in-field)`` and position rather than a row index, so a
+  block built under one snapshot stays valid under the next as long as
+  its cell's *version* is unchanged — the service bumps versions only
+  for cells an incremental update touched, and the cache key is
+  ``(cell, version)``, so unaffected cells stay hot across catalog
+  swaps while updated cells miss and rebuild naturally.  Row indices
+  into the *current* snapshot are reconstructed from the stable ids via
+  the per-field row offsets.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import spatial
+from repro.serve.cache import LRUCache
+
+
+class CatalogIndex:
+    """Spatial index over one snapshot's flattened catalog rows.
+
+    ``versions`` maps global cell coords (tuples) to integer versions
+    (absent = 0); ``cache`` may be shared across successive snapshots to
+    keep unaffected cells hot.  ``field_of`` and ``field_offsets`` give
+    each row's owning field and each field's first row — the stable-id
+    mapping the cache depends on."""
+
+    def __init__(self, pos: np.ndarray, cell_size: float, *,
+                 field_of: np.ndarray,
+                 field_offsets: np.ndarray,
+                 versions: dict | None = None,
+                 cache: LRUCache | None = None):
+        self.pos = np.asarray(pos, np.float64).reshape(-1, 2)
+        self.grid = spatial.CellGrid.build(self.pos, cell_size)
+        self.cell_size = self.grid.cell_size
+        self.field_of = np.asarray(field_of, np.int64)
+        self.field_offsets = np.asarray(field_offsets, np.int64)
+        self.versions = {} if versions is None else versions
+        self.cache = cache if cache is not None else LRUCache()
+
+    @property
+    def n(self) -> int:
+        return self.pos.shape[0]
+
+    # ------------------------------------------------- vectorized bulk path
+    def cone(self, centers, radius):
+        """Batched cone search (no cache): ``(idx, offsets, dist)`` CSR
+        over original row indices, ascending per query."""
+        return self.grid.cone(centers, radius)
+
+    def box(self, lo, hi):
+        """Batched closed-box query (no cache): ``(idx, offsets)``."""
+        return self.grid.box(lo, hi)
+
+    # ---------------------------------------------------- cached hot path
+    def cell_version(self, cell: tuple) -> int:
+        return self.versions.get(cell, 0)
+
+    def _cell_block(self, cell: tuple) -> dict:
+        """The cell's materialized block through the LRU: member stable
+        ids + positions, keyed on ``(cell, version)``."""
+        key = (cell, self.versions.get(cell, 0))
+        block = self.cache.get(key)
+        if block is None:
+            rows = self.grid.cell_members(np.asarray(cell, np.int64))
+            f = self.field_of[rows]
+            block = {"f": f, "s": rows - self.field_offsets[f],
+                     "pos": self.pos[rows]}
+            self.cache.put(key, block)
+        return block
+
+    def _gather_cells(self, lo_cell: np.ndarray, hi_cell: np.ndarray):
+        """Concatenated (rows, pos) of every cell in the inclusive cell
+        bbox, rows reconstructed from stable ids against THIS snapshot's
+        offsets."""
+        fs, ss, ps = [], [], []
+        for r in range(int(lo_cell[0]), int(hi_cell[0]) + 1):
+            for c in range(int(lo_cell[1]), int(hi_cell[1]) + 1):
+                block = self._cell_block((r, c))
+                if block["f"].size:
+                    fs.append(block["f"])
+                    ss.append(block["s"])
+                    ps.append(block["pos"])
+        if not fs:
+            return np.zeros(0, np.int64), np.zeros((0, 2))
+        f = np.concatenate(fs)
+        s = np.concatenate(ss)
+        return self.field_offsets[f] + s, np.concatenate(ps, axis=0)
+
+    def cone_cached(self, center, radius: float):
+        """Single cone query through the hot-cell cache: sorted row
+        indices and their distances."""
+        center = np.asarray(center, np.float64).reshape(2)
+        lo = np.floor((center - radius) / self.cell_size).astype(np.int64)
+        hi = np.floor((center + radius) / self.cell_size).astype(np.int64)
+        rows, pos = self._gather_cells(lo, hi)
+        if rows.size == 0:
+            return rows, np.zeros(0)
+        d = np.linalg.norm(pos - center, axis=-1)
+        keep = d <= radius
+        rows, d = rows[keep], d[keep]
+        srt = np.argsort(rows)
+        return rows[srt], d[srt]
+
+    def box_cached(self, lo, hi):
+        """Single closed-box query through the hot-cell cache: sorted
+        row indices."""
+        lo = np.asarray(lo, np.float64).reshape(2)
+        hi = np.asarray(hi, np.float64).reshape(2)
+        rows, pos = self._gather_cells(
+            np.floor(lo / self.cell_size).astype(np.int64),
+            np.floor(hi / self.cell_size).astype(np.int64))
+        if rows.size == 0:
+            return rows
+        keep = np.all((pos >= lo) & (pos <= hi), axis=1)
+        return np.sort(rows[keep])

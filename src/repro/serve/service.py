@@ -1,0 +1,457 @@
+"""The catalog service: immutable snapshots, atomic swaps, warm updates.
+
+**Serving model.**  The service state is ONE reference to an immutable
+``CatalogSnapshot``.  Readers grab the reference once per query
+(a Python attribute load — atomic under the interpreter) and work
+entirely against that snapshot; they take no locks and can never
+observe a half-applied update.  Writers build the next snapshot ASIDE —
+new slab, new flattened arrays, new index — and only then flip the
+reference (build-aside + pointer flip).  Writers serialize on a mutex;
+readers never block.
+
+**Incremental updates.**  A new epoch of an already-fitted field does
+not restart from detection: ``update_field`` seeds
+``infer.run_inference`` with the *served posterior* — the slab's stored
+thetas (``init_thetas``) and an initial trust-region radius derived
+from the stored Laplace positional covariance (``warm_radius``) — so a
+source that has not moved converges in one or two accepted steps
+instead of a full cold fit (the Celeste AOAS warm-start argument,
+PAPERS.md: 1803.00113).  The swap then bumps version counters only for
+cells intersecting the updated field's (padded) rectangle: cached
+blocks of every other cell remain valid and hot across the flip
+(``index.CatalogIndex``).
+
+**Durability.**  The slab the service mutates IS the pipeline's
+checkpoint state: commits go through the same ``Checkpointer`` (atomic
+tmp → rename + COMMITTED sentinel, per-leaf SHA-256) at the next step
+number, so a kill anywhere during an update leaves EITHER the old or
+the new slab committed — never a torn one — and both
+``CatalogService.from_checkpoint`` and a resumed ``run_pipeline``
+restore it.  The commit lands *before* the in-memory flip: a crash
+between them loses nothing (the flip is redone from disk on restart).
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import detect, elbo, infer, pipeline
+from repro.core.priors import Priors
+from repro.serve.cache import LRUCache
+from repro.serve.index import CatalogIndex
+
+# Default cell side for the serving index, in pixels: a few PSF widths —
+# big enough that typical cone radii touch O(1..9) cells, small enough
+# that a hot cell's block stays light.
+DEFAULT_CELL_SIZE = 8.0
+
+# Version-bump margin around an updated field's rectangle, in cells: a
+# refit can move a source slightly past its field boundary, so every
+# cell within this many cells of the rect is invalidated too.
+BUMP_MARGIN_CELLS = 2
+
+
+def warm_radius(position_cov: np.ndarray, *, scale: float = 4.0,
+                lo: float = 0.05, hi: float = 1.0) -> np.ndarray:
+    """Per-source initial trust radius from stored positional
+    covariance: ``clip(scale · sqrt(λmax), lo, hi)``.
+
+    A tight posterior (small λmax) means the served theta is already
+    near the optimum, so the first Newton step should be small and
+    immediately accepted — re-exploring from the cold default radius
+    (1.0) wastes rejected steps.  ``hi`` caps at the cold default so a
+    loose posterior degrades to exactly cold behavior."""
+    cov = np.asarray(position_cov, np.float64).reshape(-1, 2, 2)
+    lam = np.linalg.eigvalsh(cov)[:, -1]
+    return np.clip(scale * np.sqrt(np.maximum(lam, 0.0)),
+                   lo, hi).astype(np.float32)
+
+
+@dataclass(frozen=True)
+class SurveyGeometry:
+    """The survey's field layout — everything ownership and cell
+    bumping need, without holding images or truth."""
+    grid: tuple           # (rows, cols)
+    field: int            # field side, pixels
+    overlap: int          # halo shared by adjacent fields, pixels
+    extent: tuple         # (rows, cols) global extent, pixels
+
+    @classmethod
+    def of(cls, survey) -> "SurveyGeometry":
+        """From a ``synthetic.Survey`` (or anything with the same
+        grid/field/overlap/extent attributes)."""
+        return cls(grid=tuple(survey.grid), field=int(survey.field),
+                   overlap=int(survey.overlap),
+                   extent=tuple(survey.extent))
+
+    @property
+    def num_fields(self) -> int:
+        return self.grid[0] * self.grid[1]
+
+    def origin(self, field_idx: int) -> np.ndarray:
+        """Global pixel origin of field ``field_idx`` (row-major)."""
+        stride = self.field - self.overlap
+        i, j = divmod(int(field_idx), self.grid[1])
+        return np.array([i * stride, j * stride], np.float64)
+
+    def field_rect(self, field_idx: int):
+        """(lo, hi) global pixel rectangle the field's images cover."""
+        o = self.origin(field_idx)
+        return o, o + self.field
+
+
+@dataclass(frozen=True)
+class CatalogSnapshot:
+    """One immutable, internally-consistent view of the served catalog.
+
+    Readers resolve row indices from queries against ``catalog`` /
+    ``thetas`` / ``quality`` / ``position_cov`` of the SAME snapshot;
+    nothing here mutates after construction.  ``version`` totals the
+    swaps since the service started; ``cell_versions`` carries the
+    per-cell counters (absent = 0) whose bumps invalidate cached
+    blocks."""
+    state: dict             # the v2 slab (host numpy)
+    thetas: np.ndarray      # [N, 27] flattened
+    quality: np.ndarray     # [N] int8
+    position_cov: np.ndarray  # [N, 2, 2]
+    field_of: np.ndarray    # [N]
+    field_offsets: np.ndarray  # [nf + 1] first row of each field
+    catalog: object         # SourceParams (host numpy leaves)
+    pos: np.ndarray         # [N, 2]
+    index: CatalogIndex
+    version: int
+    cell_versions: dict
+    step: int | None        # checkpoint step this snapshot mirrors
+
+    @property
+    def n(self) -> int:
+        return self.pos.shape[0]
+
+    def cone(self, centers, radius, cached: bool = False):
+        """Cone search over this snapshot.  ``cached=False``: the
+        batched vectorized path, ``(idx, offsets, dist)`` CSR.
+        ``cached=True``: per-query through the hot-cell LRU, same CSR
+        result."""
+        if not cached:
+            return self.index.cone(centers, radius)
+        centers = np.asarray(centers, np.float64).reshape(-1, 2)
+        rad = np.broadcast_to(np.asarray(radius, np.float64),
+                              (centers.shape[0],))
+        parts, dists = [], []
+        offsets = np.zeros(centers.shape[0] + 1, np.int64)
+        for q in range(centers.shape[0]):
+            rows, d = self.index.cone_cached(centers[q], float(rad[q]))
+            parts.append(rows)
+            dists.append(d)
+            offsets[q + 1] = offsets[q] + rows.size
+        return (np.concatenate(parts) if parts else np.zeros(0, np.int64),
+                offsets,
+                np.concatenate(dists) if dists else np.zeros(0))
+
+    def box(self, lo, hi, cached: bool = False):
+        """Closed-box query over this snapshot; CSR ``(idx, offsets)``."""
+        if not cached:
+            return self.index.box(lo, hi)
+        lo = np.asarray(lo, np.float64).reshape(-1, 2)
+        hi = np.asarray(hi, np.float64).reshape(-1, 2)
+        parts = []
+        offsets = np.zeros(lo.shape[0] + 1, np.int64)
+        for q in range(lo.shape[0]):
+            rows = self.index.box_cached(lo[q], hi[q])
+            parts.append(rows)
+            offsets[q + 1] = offsets[q] + rows.size
+        return (np.concatenate(parts) if parts else np.zeros(0, np.int64),
+                offsets)
+
+
+@dataclass
+class UpdateReport:
+    """What one ``update_field`` did."""
+    field_idx: int
+    warm: bool
+    n_sources: int
+    converged: int
+    total_iters: int
+    fit_seconds: float
+    swap_seconds: float     # build-aside snapshot construction + flip
+    cells_bumped: int
+    version: int            # snapshot version after the swap
+    step: int | None        # checkpoint step committed (None: no ckpt)
+
+
+class CatalogService:
+    """The serving facade: query the current snapshot, apply warm
+    incremental updates, commit through the pipeline's checkpointer.
+
+    ``fit_kw`` forwards to ``infer.run_inference`` for BOTH the warm
+    and cold refit paths — pass the same ``patch``/``batch``/
+    ``max_iters`` the pipeline used so a cold service refit reproduces
+    the pipeline's own fit bit-for-bit (both are deterministic)."""
+
+    def __init__(self, state: dict, geometry: SurveyGeometry, *,
+                 priors: Priors | None = None,
+                 cell_size: float = DEFAULT_CELL_SIZE,
+                 cache_capacity: int = 256,
+                 checkpointer: Checkpointer | None = None,
+                 step: int | None = None,
+                 fit_kw: dict | None = None):
+        self.geometry = geometry
+        self.priors = priors
+        self.cell_size = float(cell_size)
+        self.fit_kw = dict(fit_kw or {})
+        self.cache = LRUCache(cache_capacity)
+        # prebuilt ELBO objectives keyed on (metas, priors) *content*:
+        # newton.fit_batch treats the objective as a static jit arg, so
+        # handing run_inference the SAME object across updates of a
+        # field reuses the compiled Newton executables — the difference
+        # between a ~1 s steady-state update and a full recompile
+        self._objectives = LRUCache(8)
+        self._ckpt = checkpointer
+        self._step = step
+        self._writer_lock = threading.Lock()
+        self.updates_applied = 0
+        state = {k: np.asarray(v) for k, v in state.items()}
+        self._snapshot = self._build_snapshot(state, prev=None,
+                                              bumped=(), step=step)
+
+    # ------------------------------------------------------------- creation
+    @classmethod
+    def from_checkpoint(cls, directory: str, geometry: SurveyGeometry,
+                        **kwargs) -> "CatalogService":
+        """Open the newest committed slab read-only and serve it.
+
+        Uses ``Checkpointer.read_latest`` — integrity-verified, skipping
+        (not quarantining) corrupt steps — and keeps the checkpointer so
+        ``update_field`` commits continue the step sequence, staying
+        restorable by ``run_pipeline``'s own resume path."""
+        ck = Checkpointer(directory)
+        got = ck.read_latest()
+        if got is None:
+            raise FileNotFoundError(
+                f"no committed checkpoint under {directory}")
+        leaves, manifest, step = got
+        state = cls._slab_from_leaves(leaves)
+        return cls(state, geometry, checkpointer=ck, step=step, **kwargs)
+
+    @staticmethod
+    def _slab_from_leaves(leaves) -> dict:
+        """Rebuild the v3 slab dict from its flattened leaves.
+
+        ``jax.tree_flatten`` of a dict orders leaves by sorted key —
+        count, pos_cov, quality, seed_pos, thetas — which the per-leaf
+        rank/width check pins down (a layout drift fails loudly instead
+        of serving transposed planes)."""
+        if len(leaves) != 5:
+            raise ValueError(
+                f"expected the 5-leaf v3 slab, got {len(leaves)} leaves "
+                "(a v1/v2-era or foreign checkpoint)")
+        count, pos_cov, quality, seed_pos, thetas = leaves
+        if (count.ndim != 1 or pos_cov.shape[-2:] != (2, 2)
+                or quality.ndim != 2 or seed_pos.shape[-1] != 2
+                or thetas.shape[-1] != elbo.THETA_DIM):
+            raise ValueError(
+                "checkpoint leaves do not look like the v3 slab "
+                f"(shapes {[l.shape for l in leaves]})")
+        return {"count": count, "pos_cov": pos_cov, "quality": quality,
+                "seed_pos": seed_pos, "thetas": thetas}
+
+    def _objective(self, metas, pri):
+        """The cached ``make_objective`` result for these exact meta and
+        prior values (content-hashed; a new epoch's metas or refit
+        priors miss and compile fresh)."""
+        leaves = jax.tree_util.tree_leaves((metas, pri))
+        h = hashlib.sha256()
+        for leaf in leaves:
+            arr = np.asarray(leaf)
+            h.update(str((arr.shape, str(arr.dtype))).encode())
+            h.update(np.ascontiguousarray(arr).tobytes())
+        key = h.hexdigest()
+        obj = self._objectives.get(key)
+        if obj is None:
+            obj = infer.make_objective(metas, pri,
+                                       backend=self.fit_kw.get("backend"))
+            self._objectives.put(key, obj)
+        return obj
+
+    # -------------------------------------------------------------- reading
+    def snapshot(self) -> CatalogSnapshot:
+        """The current immutable snapshot.  Grab once, query many: all
+        reads against one snapshot are mutually consistent."""
+        return self._snapshot
+
+    def cone_search(self, centers, radius, cached: bool = True):
+        """Cone search against the current snapshot (one consistent
+        view per call)."""
+        return self._snapshot.cone(centers, radius, cached=cached)
+
+    def box_search(self, lo, hi, cached: bool = True):
+        return self._snapshot.box(lo, hi, cached=cached)
+
+    def stats(self) -> dict:
+        snap = self._snapshot
+        return {"sources": snap.n, "version": snap.version,
+                "updates_applied": self.updates_applied,
+                "step": snap.step, **self.cache.stats()}
+
+    # ------------------------------------------------------------- updating
+    def _build_snapshot(self, state: dict, prev: CatalogSnapshot | None,
+                        bumped, step: int | None) -> CatalogSnapshot:
+        thetas, quality, position_cov, field_of = \
+            pipeline.flatten_slabs(state)
+        catalog = infer.infer_catalog(jnp.asarray(thetas))
+        catalog = type(catalog)(*[np.asarray(l) for l in catalog])
+        pos = np.asarray(catalog.pos, np.float64).reshape(-1, 2)
+        counts = np.asarray(state["count"], np.int64)
+        offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        versions = dict(prev.cell_versions) if prev is not None else {}
+        for cell in bumped:
+            versions[cell] = versions.get(cell, 0) + 1
+        index = CatalogIndex(pos, self.cell_size, field_of=field_of,
+                             field_offsets=offsets, versions=versions,
+                             cache=self.cache)
+        return CatalogSnapshot(
+            state=state, thetas=thetas, quality=quality,
+            position_cov=position_cov, field_of=field_of,
+            field_offsets=offsets, catalog=catalog, pos=pos, index=index,
+            version=(prev.version + 1 if prev is not None else 0),
+            cell_versions=versions, step=step)
+
+    def _bumped_cells(self, field_idx: int):
+        """Every cell within ``BUMP_MARGIN_CELLS`` of the field's
+        rectangle — the cells whose cached blocks an update of this
+        field can invalidate."""
+        lo, hi = self.geometry.field_rect(field_idx)
+        c = self.cell_size
+        lo_cell = np.floor(lo / c).astype(np.int64) - BUMP_MARGIN_CELLS
+        hi_cell = np.floor(hi / c).astype(np.int64) + BUMP_MARGIN_CELLS
+        return [(r, col)
+                for r in range(int(lo_cell[0]), int(hi_cell[0]) + 1)
+                for col in range(int(lo_cell[1]), int(hi_cell[1]) + 1)]
+
+    def update_field(self, field_idx: int, images, metas, *,
+                     warm: bool = True,
+                     priors: Priors | None = None,
+                     detect_threshold: float = 5.0, min_sep: int = 4,
+                     commit: bool = True,
+                     pre_commit_hook=None,
+                     pre_swap_hook=None) -> UpdateReport:
+        """Refit one field from a new epoch and atomically swap it in.
+
+        ``warm=True`` (with a previously-fitted field) skips detection
+        and seeds the fit from the served posterior: the slab's stored
+        ``seed_pos`` anchors the patch windows and neighbor backgrounds
+        (so the warm objective is the *same function* the original fit
+        maximized — on an unchanged epoch the served theta is already
+        its optimum and converges at entry), slab thetas ride in as
+        ``init_thetas``, and ``warm_radius`` of the stored covariance
+        as ``init_radius``.  ``warm=False`` (or an empty field) runs
+        the pipeline's cold path: detect → ownership filter →
+        heuristic seed → fit.
+
+        The commit (when a checkpointer is attached and ``commit``)
+        lands BEFORE the in-memory pointer flip, at the next step
+        number, so a kill at any point leaves a committed slab that is
+        either wholly old or wholly new.  ``pre_commit_hook(service)``
+        and ``pre_swap_hook(service)`` fire just before those two
+        transitions — test seams for kill-and-resume and interleaved
+        readers; a hook may raise to abort (readers keep the old
+        snapshot; an abort after commit is healed by the next restore,
+        which serves the committed slab).
+        """
+        if not 0 <= field_idx < self.geometry.num_fields:
+            raise IndexError(f"field {field_idx} outside grid "
+                             f"{self.geometry.grid}")
+        with self._writer_lock:
+            snap = self._snapshot
+            state = snap.state
+            cap = state["thetas"].shape[1]
+            n_old = int(state["count"][field_idx])
+            pri = priors if priors is not None else self.priors
+            t0 = time.perf_counter()
+            if warm and n_old > 0:
+                # same seeds → same patch corners, same heuristic
+                # neighbor catalog, same (refit) priors: the identical
+                # objective the slab theta maximized
+                seeds = state["seed_pos"][field_idx, :n_old]
+                photo, seed_pri = pipeline.seed_catalog(
+                    images, metas, jnp.asarray(seeds), pri,
+                    patch=min(16, self.geometry.field))
+                thetas_f, istats = infer.run_inference(
+                    images, metas, photo, seed_pri,
+                    init_thetas=state["thetas"][field_idx, :n_old],
+                    init_radius=warm_radius(
+                        state["pos_cov"][field_idx, :n_old]),
+                    objective=self._objective(metas, seed_pri),
+                    **self.fit_kw)
+                n = n_old
+            else:
+                det = detect.detect_sources(
+                    images, metas, threshold=detect_threshold,
+                    min_sep=min_sep, max_sources=2 * cap)
+                own = pipeline.ownership_mask(
+                    det.positions, self.geometry.origin(field_idx),
+                    field=self.geometry.field,
+                    overlap=self.geometry.overlap,
+                    extent=self.geometry.extent, grid=self.geometry.grid)
+                seeds = det.positions[own][:cap]
+                n = int(seeds.shape[0])
+                if n:
+                    photo, seed_pri = pipeline.seed_catalog(
+                        images, metas, seeds, pri,
+                        patch=min(16, self.geometry.field))
+                    thetas_f, istats = infer.run_inference(
+                        images, metas, photo, seed_pri,
+                        objective=self._objective(metas, seed_pri),
+                        **self.fit_kw)
+                else:
+                    thetas_f = jnp.zeros((0, elbo.THETA_DIM), jnp.float32)
+                    istats = None
+            fit_seconds = time.perf_counter() - t0
+
+            new_state = {k: v.copy() for k, v in state.items()}
+            new_state["count"][field_idx] = n
+            for key in ("thetas", "pos_cov", "quality", "seed_pos"):
+                new_state[key][field_idx] = 0
+            if n:
+                new_state["thetas"][field_idx, :n] = np.asarray(thetas_f)
+                new_state["pos_cov"][field_idx, :n] = \
+                    np.asarray(istats.position_cov)
+                new_state["quality"][field_idx, :n] = \
+                    np.asarray(istats.quality)
+                new_state["seed_pos"][field_idx, :n] = \
+                    np.asarray(seeds, np.float32)
+
+            if pre_commit_hook is not None:
+                pre_commit_hook(self)
+            step = self._step
+            if commit and self._ckpt is not None:
+                step = (self._step or 0) + 1
+                self._ckpt.save(step, new_state, blocking=True)
+
+            t1 = time.perf_counter()
+            bumped = self._bumped_cells(field_idx)
+            new_snap = self._build_snapshot(new_state, prev=snap,
+                                            bumped=bumped, step=step)
+            if pre_swap_hook is not None:
+                pre_swap_hook(self)
+            # THE atomic swap: one reference assignment; every reader
+            # holds either `snap` or `new_snap`, never pieces of both
+            self._snapshot = new_snap
+            self._step = step
+            self.updates_applied += 1
+            swap_seconds = time.perf_counter() - t1
+            return UpdateReport(
+                field_idx=field_idx, warm=bool(warm and n_old > 0),
+                n_sources=n,
+                converged=int(istats.converged) if istats else 0,
+                total_iters=(int(istats.iters.sum()) if istats else 0),
+                fit_seconds=fit_seconds, swap_seconds=swap_seconds,
+                cells_bumped=len(bumped), version=new_snap.version,
+                step=step)

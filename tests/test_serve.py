@@ -1,0 +1,321 @@
+"""Catalog-serving tests (src/repro/serve/): warm-start refit parity,
+atomic build-aside snapshot swaps (readers see old XOR new, never a
+mix), kill-and-resume during an update, the versioned hot-cell cache,
+and the read-only checkpoint API the service restores from."""
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (Checkpointer,
+                                           CheckpointCorruptError)
+from repro.core import pipeline, synthetic
+from repro.data.images import SurveyStore
+from repro.serve import (CatalogService, LRUCache, SurveyGeometry,
+                         warm_radius)
+
+FIT_KW = dict(patch=16, batch=8, max_iters=30)
+
+
+@pytest.fixture(scope="module")
+def fitted(tmp_path_factory):
+    """One fitted 2x2 survey with a committed checkpoint directory
+    (read-only for tests — services open copies)."""
+    ckdir = str(tmp_path_factory.mktemp("slab") / "ck")
+    survey = synthetic.sample_survey(
+        jax.random.PRNGKey(0), grid=(2, 2), field=96, overlap=24,
+        sources_per_field=6)
+    pipeline.run_pipeline(survey, checkpoint_dir=ckdir, **FIT_KW)
+    store = SurveyStore(survey)
+    images, metas = store.fetch(0)
+    return survey, ckdir, images, metas
+
+
+def _service(fitted, tmp_path, **kw):
+    survey, ckdir, _, _ = fitted
+    copy = str(tmp_path / "ck")
+    shutil.copytree(ckdir, copy)
+    kw.setdefault("fit_kw", FIT_KW)
+    return CatalogService.from_checkpoint(copy, SurveyGeometry.of(survey),
+                                          **kw), copy
+
+
+@pytest.fixture(scope="module")
+def svc(fitted, tmp_path_factory):
+    """A shared service for the non-destructive tests (unchanged-epoch
+    warm updates leave the served catalog bit-identical)."""
+    service, _ = _service(fitted, tmp_path_factory.mktemp("svc"))
+    return service
+
+
+# ---------------------------------------------------------------------------
+# Warm-start refit parity
+# ---------------------------------------------------------------------------
+
+
+def test_warm_refit_reproduces_served_catalog(fitted, svc):
+    """Re-fitting an UNCHANGED epoch warm (slab thetas + seed_pos-
+    anchored objective + covariance-derived trust radius) reproduces
+    the served catalog within rtol 1e-4 and swaps a new version in."""
+    _, _, images, metas = fitted
+    snap0 = svc.snapshot()
+    f0, f1 = snap0.field_offsets[0], snap0.field_offsets[1]
+    ref = snap0.thetas[f0:f1].copy()
+    assert ref.shape[0] > 0
+
+    rep = svc.update_field(0, images, metas, warm=True)
+    snap1 = svc.snapshot()
+    got = snap1.thetas[snap1.field_offsets[0]:snap1.field_offsets[1]]
+    assert rep.warm and rep.n_sources == ref.shape[0]
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-6)
+    assert snap1.version == snap0.version + 1
+    assert snap1 is not snap0           # build-aside, not in-place
+    # other fields' rows are untouched bit-for-bit
+    np.testing.assert_array_equal(snap1.thetas[f1:], snap0.thetas[f1:])
+
+
+def test_warm_radius_clips_to_cold_default():
+    cov = np.array([[[1e-6, 0.0], [0.0, 1e-6]],      # razor-sharp → lo
+                    [[0.01, 0.0], [0.0, 0.04]],      # in-range
+                    [[25.0, 0.0], [0.0, 25.0]]])     # loose → hi (cold)
+    r = warm_radius(cov, scale=4.0, lo=0.05, hi=1.0)
+    np.testing.assert_allclose(r, [0.05, 0.8, 1.0], rtol=1e-5)
+
+
+def test_survey_geometry(fitted):
+    survey, _, _, _ = fitted
+    g = SurveyGeometry.of(survey)
+    assert g.num_fields == 4
+    stride = g.field - g.overlap
+    np.testing.assert_array_equal(g.origin(0), [0, 0])
+    np.testing.assert_array_equal(g.origin(3), [stride, stride])
+    lo, hi = g.field_rect(1)
+    np.testing.assert_array_equal(lo, [0, stride])
+    np.testing.assert_array_equal(hi, [g.field, stride + g.field])
+
+
+# ---------------------------------------------------------------------------
+# Atomic swap: readers see old XOR new, never a mix
+# ---------------------------------------------------------------------------
+
+
+def test_swap_is_all_or_nothing(fitted, svc):
+    """A pre-swap reader still sees the old snapshot; a concurrent
+    reader thread observes ONLY complete snapshots (identity old or
+    new), and every observed snapshot is internally consistent."""
+    _, _, images, metas = fitted
+    old = svc.snapshot()
+    seen_in_hook = []
+    stop = threading.Event()
+    observed = []
+
+    torn = []
+
+    def reader():
+        while not stop.is_set():
+            snap = svc.snapshot()
+            if observed and observed[-1] is snap:
+                continue
+            # consistency: pieces of ONE snapshot always agree
+            # (thread asserts don't reach pytest — record instead)
+            if not (snap.thetas.shape[0] == snap.n
+                    and int(snap.field_offsets[-1]) == snap.n
+                    and snap.index.n == snap.n):
+                torn.append(snap)
+            observed.append(snap)
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        rep = svc.update_field(
+            0, images, metas, warm=True,
+            pre_swap_hook=lambda s: seen_in_hook.append(s.snapshot()))
+    finally:
+        stop.set()
+        t.join()
+    new = svc.snapshot()
+    assert seen_in_hook == [old]        # before the flip: still old
+    assert new is not old and rep.version == new.version
+    assert not torn
+    assert observed and all(s is old or s is new for s in observed)
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-resume during an update
+# ---------------------------------------------------------------------------
+
+
+class Boom(Exception):
+    pass
+
+
+def _boom(_svc):
+    raise Boom()
+
+
+def test_kill_during_update_leaves_consistent_catalog(fitted, tmp_path):
+    """Commit lands BEFORE the flip: a kill before the commit is a
+    no-op (old slab committed, old snapshot served); a kill between
+    commit and flip serves old in-memory but the NEW slab is committed,
+    so a restart heals forward."""
+    survey, _, images, metas = fitted
+    svc, ckdir = _service(fitted, tmp_path)
+    geom = SurveyGeometry.of(survey)
+    snap0 = svc.snapshot()
+    step0 = Checkpointer(ckdir).latest_step()
+
+    # ---- kill BEFORE the commit: nothing happened ----
+    with pytest.raises(Boom):
+        svc.update_field(0, images, metas, warm=True,
+                         pre_commit_hook=_boom)
+    assert svc.snapshot() is snap0
+    assert Checkpointer(ckdir).latest_step() == step0
+    restored = CatalogService.from_checkpoint(ckdir, geom)
+    np.testing.assert_array_equal(restored.snapshot().thetas,
+                                  snap0.thetas)
+
+    # ---- kill AFTER the commit, before the flip ----
+    with pytest.raises(Boom):
+        svc.update_field(0, images, metas, warm=True,
+                         pre_swap_hook=_boom)
+    assert svc.snapshot() is snap0          # readers kept the old view
+    step1 = Checkpointer(ckdir).latest_step()
+    assert step1 == step0 + 1               # ...but the commit landed
+    healed = CatalogService.from_checkpoint(ckdir, geom)
+    assert healed.snapshot().step == step1
+    # unchanged epoch: the healed (new) slab reproduces the catalog
+    np.testing.assert_allclose(healed.snapshot().thetas, snap0.thetas,
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_from_checkpoint_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        CatalogService.from_checkpoint(
+            str(tmp_path / "nope"),
+            SurveyGeometry(grid=(1, 1), field=8, overlap=0,
+                           extent=(8, 8)))
+
+
+# ---------------------------------------------------------------------------
+# Queries + the versioned hot-cell cache
+# ---------------------------------------------------------------------------
+
+
+def test_cached_queries_match_vectorized(svc):
+    snap = svc.snapshot()
+    rng = np.random.default_rng(3)
+    centers = rng.uniform(0, 160, size=(40, 2))
+    iv, ov, dv = snap.cone(centers, 7.5, cached=False)
+    ic, oc, dc = snap.cone(centers, 7.5, cached=True)
+    np.testing.assert_array_equal(ic, iv)
+    np.testing.assert_array_equal(oc, ov)
+    np.testing.assert_allclose(dc, dv)
+    assert iv.size > 0
+
+    lo = rng.uniform(0, 120, size=(10, 2))
+    hi = lo + 25.0
+    bv, obv = snap.box(lo, hi, cached=False)
+    bc, obc = snap.box(lo, hi, cached=True)
+    np.testing.assert_array_equal(bc, bv)
+    np.testing.assert_array_equal(obc, obv)
+
+
+def test_lru_cache_counters_and_eviction():
+    c = LRUCache(capacity=2)
+    assert c.get("a") is None and c.misses == 1
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1 and c.hits == 1
+    c.put("d", 4)                      # evicts "b" (a was touched)
+    assert c.evictions == 1
+    assert c.get("b") is None and len(c) == 2
+    assert c.stats()["hit_rate"] == pytest.approx(1 / 3)
+    c.clear(reset_counters=True)
+    assert len(c) == 0 and c.hits == c.misses == 0
+    with pytest.raises(ValueError):
+        LRUCache(capacity=0)
+
+
+def test_cache_hits_and_carry_forward_across_update(fitted, svc):
+    """Repeat queries hit; an update bumps versions ONLY near the
+    updated field, so far-away cells stay hot across the swap while
+    near cells rebuild."""
+    _, _, images, metas = fitted
+    snap = svc.snapshot()
+    extent = np.asarray(svc.geometry.extent, float)
+    far = extent - 5.0                 # deep inside the last field
+    near = np.array([5.0, 5.0])        # inside field 0
+
+    svc.cache.clear(reset_counters=True)
+    svc.cone_search(far[None], 4.0, cached=True)
+    svc.cone_search(near[None], 4.0, cached=True)
+    misses0 = svc.cache.misses
+    r1 = svc.cone_search(far[None], 4.0, cached=True)
+    assert svc.cache.misses == misses0          # pure hits on repeat
+    assert svc.cache.hits > 0
+
+    rep = svc.update_field(0, images, metas, warm=True)
+    new = svc.snapshot()
+    # versions bumped only within the margin of field 0's rect
+    lo, hi = svc.geometry.field_rect(0)
+    margin = 2 * svc.cell_size
+    for cell in new.cell_versions:
+        center = (np.asarray(cell, float) + 0.5) * svc.cell_size
+        assert np.all(center >= lo - margin - svc.cell_size)
+        assert np.all(center <= hi + margin + svc.cell_size)
+    assert rep.cells_bumped == len(new.cell_versions)
+
+    hits0, misses1 = svc.cache.hits, svc.cache.misses
+    r2 = svc.cone_search(far[None], 4.0, cached=True)
+    assert svc.cache.hits > hits0               # far cells: still hot
+    assert svc.cache.misses == misses1
+    np.testing.assert_array_equal(r2[0], r1[0])
+    svc.cone_search(near[None], 4.0, cached=True)
+    assert svc.cache.misses > misses1           # bumped cells: rebuild
+
+
+# ---------------------------------------------------------------------------
+# Read-only checkpoint API + slab validation
+# ---------------------------------------------------------------------------
+
+
+def test_read_arrays_verifies_and_read_latest_skips_corrupt(fitted,
+                                                            tmp_path):
+    _, ckdir, _, _ = fitted
+    copy = str(tmp_path / "ck")
+    shutil.copytree(ckdir, copy)
+    ck = Checkpointer(copy)
+    top = ck.latest_step()
+    leaves, manifest = ck.read_arrays(top)
+    assert len(leaves) == 5            # the v3 slab
+
+    # flip one byte in the newest step: read_arrays raises...
+    victim = os.path.join(copy, f"step_{top}", "arr_0.npy")
+    with open(victim, "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        last = f.read(1)[0]
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([last ^ 0xFF]))
+    with pytest.raises(CheckpointCorruptError):
+        ck.read_arrays(top)
+    # ...and read_latest skips to the previous committed step,
+    # WITHOUT renaming the corrupt one (read-only consumer)
+    got = ck.read_latest()
+    assert got is not None
+    _, _, step = got
+    assert step < top
+    assert os.path.isdir(os.path.join(copy, f"step_{top}"))
+
+
+def test_slab_from_leaves_rejects_foreign_layouts():
+    with pytest.raises(ValueError, match="5-leaf"):
+        CatalogService._slab_from_leaves(
+            [np.zeros((2,), np.int32)] * 4)      # v2-era: 4 leaves
+    bad = [np.zeros((2,), np.int32), np.zeros((2, 4, 2, 2), np.float32),
+           np.zeros((2, 4), np.int8), np.zeros((2, 4, 3), np.float32),
+           np.zeros((2, 4, 27), np.float32)]     # seed_pos wrong width
+    with pytest.raises(ValueError, match="v3 slab"):
+        CatalogService._slab_from_leaves(bad)

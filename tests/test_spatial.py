@@ -1,0 +1,235 @@
+"""Property tests for the shared cell-grid spatial index
+(core/spatial.py): cone/box queries and radius pair hashing must match
+brute-force O(N·Q) / O(N²) references exactly — including points ON
+cell boundaries and empty results — and the association-stage delegates
+(`associate.near_pairs` / `associate.cross_pairs`) must stay in parity
+with the one shared implementation."""
+import numpy as np
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - tiny deterministic fallback
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import associate, spatial
+
+
+def _random_catalog(seed: int, n: int, extent: float = 100.0,
+                    cell: float = 8.0) -> np.ndarray:
+    """Random positions with a deliberate fraction snapped EXACTLY onto
+    cell boundaries (multiples of the cell side) — the worst case for
+    floor-based bucketing — plus a few duplicated points."""
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(-0.25 * extent, extent, size=(n, 2))
+    if n == 0:
+        return pos
+    n_snap = max(1, n // 5)
+    snap = rng.integers(0, n, size=n_snap)
+    axis = rng.integers(0, 2, size=n_snap)
+    pos[snap, axis] = np.round(pos[snap, axis] / cell) * cell
+    if n >= 4:
+        pos[-1] = pos[0]                 # exact duplicate
+        pos[-2] = pos[1] + [cell, 0.0]   # exactly one cell apart
+    return pos
+
+
+def _brute_cone(pos, centers, radius):
+    """Reference CSR cone result by dense distances."""
+    rad = np.broadcast_to(np.asarray(radius, float), (len(centers),))
+    idx_parts, offsets = [], [0]
+    for c, r in zip(centers, rad):
+        d = np.linalg.norm(pos - c, axis=-1)
+        rows = np.flatnonzero(d <= r)
+        idx_parts.append(rows)
+        offsets.append(offsets[-1] + rows.size)
+    return (np.concatenate(idx_parts) if idx_parts
+            else np.zeros(0, np.int64)), np.asarray(offsets)
+
+
+def _brute_box(pos, lo, hi):
+    idx_parts, offsets = [], [0]
+    for l, h in zip(lo, hi):
+        rows = np.flatnonzero(np.all((pos >= l) & (pos <= h), axis=1))
+        idx_parts.append(rows)
+        offsets.append(offsets[-1] + rows.size)
+    return (np.concatenate(idx_parts) if idx_parts
+            else np.zeros(0, np.int64)), np.asarray(offsets)
+
+
+def _brute_pairs(pos, radius):
+    d = np.linalg.norm(pos[:, None] - pos[None, :], axis=-1)
+    ii, jj = np.nonzero(np.triu(d <= radius, k=1))
+    return ii, jj
+
+
+# ---------------------------------------------------------------------------
+# Cone search vs brute force
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(0, 120),
+       radius=st.floats(0.1, 25.0))
+def test_cone_matches_brute_force(seed, n, radius):
+    """Batched cone == dense-distance reference: same rows (ascending
+    per query), same CSR offsets, same distances — per-query radii,
+    boundary points and empty result sets included."""
+    rng = np.random.default_rng(seed + 1)
+    pos = _random_catalog(seed, n)
+    grid = spatial.CellGrid.build(pos, cell_size=8.0)
+    nq = int(rng.integers(1, 12))
+    centers = rng.uniform(-30.0, 130.0, size=(nq, 2))
+    centers[0] = pos[0] if n else [8.0, 16.0]  # dead-center / boundary
+    rad = np.full(nq, radius)
+    rad[nq // 2:] = rng.uniform(0.1, 25.0)     # mixed per-query radii
+
+    rows, offsets, dist = grid.cone(centers, rad)
+    ref_rows, ref_off = _brute_cone(pos, centers, rad)
+    np.testing.assert_array_equal(offsets, ref_off)
+    for q in range(nq):
+        got = rows[offsets[q]:offsets[q + 1]]
+        np.testing.assert_array_equal(got, np.sort(got))  # ascending
+        np.testing.assert_array_equal(
+            got, ref_rows[ref_off[q]:ref_off[q + 1]])
+    if n:
+        np.testing.assert_allclose(
+            dist, np.linalg.norm(pos[rows] - np.repeat(
+                centers, np.diff(offsets), axis=0), axis=-1))
+
+
+def test_cone_boundary_is_inclusive():
+    """A source at EXACTLY ``radius`` from the center is returned
+    (``dist <= radius``), independent of cell alignment."""
+    pos = np.array([[0.0, 0.0], [3.0, 0.0], [0.0, 4.0], [3.0, 4.0]])
+    grid = spatial.CellGrid.build(pos, cell_size=2.0)
+    rows, offsets, dist = grid.cone(np.array([[0.0, 0.0]]), 3.0)
+    np.testing.assert_array_equal(rows, [0, 1])
+    assert dist[1] == 3.0
+
+
+def test_cone_empty_grid_and_empty_results():
+    grid = spatial.CellGrid.build(np.zeros((0, 2)), cell_size=4.0)
+    rows, offsets, dist = grid.cone(np.array([[5.0, 5.0]]), 10.0)
+    assert rows.size == 0 and dist.size == 0
+    np.testing.assert_array_equal(offsets, [0, 0])
+
+    grid = spatial.CellGrid.build(np.array([[100.0, 100.0]]), 4.0)
+    rows, offsets, _ = grid.cone(np.array([[0.0, 0.0]]), 1.0)
+    assert rows.size == 0
+    np.testing.assert_array_equal(offsets, [0, 0])
+
+
+# ---------------------------------------------------------------------------
+# Box queries vs brute force
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(0, 120),
+       side=st.floats(0.5, 40.0))
+def test_box_matches_brute_force(seed, n, side):
+    """Batched closed-box == dense reference, degenerate (point) boxes
+    and inverted (empty) boxes included."""
+    rng = np.random.default_rng(seed + 2)
+    pos = _random_catalog(seed, n)
+    grid = spatial.CellGrid.build(pos, cell_size=8.0)
+    nq = int(rng.integers(1, 10))
+    lo = rng.uniform(-30.0, 120.0, size=(nq, 2))
+    hi = lo + rng.uniform(0.0, side, size=(nq, 2))
+    if n:
+        lo[0] = hi[0] = pos[0]        # degenerate box ON a source
+    hi[-1] = lo[-1] - 1.0             # inverted → empty
+
+    rows, offsets = grid.box(lo, hi)
+    ref_rows, ref_off = _brute_box(pos, lo, hi)
+    np.testing.assert_array_equal(offsets, ref_off)
+    np.testing.assert_array_equal(rows, ref_rows)
+    if n:
+        assert 0 in rows[offsets[0]:offsets[1]]  # degenerate box hits
+    assert offsets[-1] == offsets[-2]            # inverted box is empty
+
+
+def test_box_closed_on_both_ends():
+    pos = np.array([[0.0, 0.0], [8.0, 8.0], [8.0, 8.0001]])
+    grid = spatial.CellGrid.build(pos, cell_size=8.0)
+    rows, offsets = grid.box(np.array([[0.0, 0.0]]),
+                             np.array([[8.0, 8.0]]))
+    np.testing.assert_array_equal(rows, [0, 1])
+
+
+# ---------------------------------------------------------------------------
+# Radius pair hashing vs brute force + associate delegation parity
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(0, 80),
+       radius=st.floats(0.2, 20.0))
+def test_radius_pairs_match_brute_force(seed, n, radius):
+    pos = _random_catalog(seed, n, cell=radius)
+    ii, jj, dist = spatial.radius_pairs(pos, radius)
+    ref_ii, ref_jj = _brute_pairs(pos, radius)
+    np.testing.assert_array_equal(ii, ref_ii)
+    np.testing.assert_array_equal(jj, ref_jj)
+    assert np.all(ii < jj)
+    np.testing.assert_allclose(
+        dist, np.linalg.norm(pos[ii] - pos[jj], axis=-1))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), na=st.integers(0, 60),
+       nb=st.integers(0, 60), radius=st.floats(0.2, 20.0))
+def test_cross_radius_pairs_match_brute_force(seed, na, nb, radius):
+    pos_a = _random_catalog(seed, na, cell=radius)
+    pos_b = _random_catalog(seed + 77, nb, cell=radius)
+    ii, jj, dist = spatial.cross_radius_pairs(pos_a, pos_b, radius)
+    if na and nb:
+        d = np.linalg.norm(pos_a[:, None] - pos_b[None, :], axis=-1)
+        ref_ii, ref_jj = np.nonzero(d <= radius)
+    else:
+        ref_ii = ref_jj = np.zeros(0, np.int64)
+    np.testing.assert_array_equal(ii, ref_ii)
+    np.testing.assert_array_equal(jj, ref_jj)
+    np.testing.assert_allclose(
+        dist, np.linalg.norm(pos_a[ii] - pos_b[jj], axis=-1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(0, 80),
+       radius=st.floats(0.2, 15.0))
+def test_associate_delegates_to_shared_hash(seed, n, radius):
+    """The stitcher's candidate generators ARE the shared
+    implementation: identical (ii, jj, dist) for identical inputs."""
+    pos = _random_catalog(seed, n, cell=radius)
+    pos_b = _random_catalog(seed + 5, max(0, n // 2), cell=radius)
+    for got, ref in zip(associate.near_pairs(pos, radius),
+                        spatial.radius_pairs(pos, radius)):
+        np.testing.assert_array_equal(got, ref)
+    for got, ref in zip(associate.cross_pairs(pos, pos_b, radius),
+                        spatial.cross_radius_pairs(pos, pos_b, radius)):
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_morton_fallback_for_huge_spans():
+    """A grid wider than 2^16 cells per axis falls back to row-major
+    codes but answers identically."""
+    pos = np.array([[0.0, 0.0], [0.5, 0.5], [1e6, 1e6], [1e6, 1e6 + 0.4]])
+    grid = spatial.CellGrid.build(pos, cell_size=1.0)
+    assert not grid.morton
+    rows, offsets, _ = grid.cone(np.array([[0.0, 0.0], [1e6, 1e6]]), 1.0)
+    np.testing.assert_array_equal(rows, [0, 1, 2, 3])
+    np.testing.assert_array_equal(offsets, [0, 2, 4])
+    ii, jj, _ = spatial.radius_pairs(pos, 1.0)
+    np.testing.assert_array_equal(np.stack([ii, jj], 1),
+                                  [[0, 1], [2, 3]])
+
+
+def test_cell_members_and_occupied_cells():
+    pos = np.array([[1.0, 1.0], [1.5, 1.2], [9.0, 9.0]])
+    grid = spatial.CellGrid.build(pos, cell_size=4.0)
+    np.testing.assert_array_equal(
+        grid.cell_members(np.array([0, 0])), [0, 1])
+    np.testing.assert_array_equal(
+        grid.cell_members(np.array([2, 2])), [2])
+    assert grid.cell_members(np.array([50, 50])).size == 0   # out of range
+    occ = {tuple(c) for c in grid.occupied_cells()}
+    assert occ == {(0, 0), (2, 2)}

@@ -18,7 +18,7 @@ from tools.analyze.base import LEGACY_PREFIX, Finding, Repo, SourceFile
 
 PASS_ID = "dead_code"
 
-ROOT_PACKAGES = ("repro.core", "repro.kernels")
+ROOT_PACKAGES = ("repro.core", "repro.kernels", "repro.serve")
 ENTRY_DIRS = ("examples/", "benchmarks/")
 
 
@@ -82,7 +82,7 @@ def run(repo: Repo) -> list[Finding]:
 
     for name, sf in modules.items():
         if name.startswith(ROOT_PACKAGES) and name in (
-            "repro.core", "repro.kernels"
+            "repro.core", "repro.kernels", "repro.serve"
         ):
             reachable.add(name)
             frontier.append(name)
@@ -109,7 +109,7 @@ def run(repo: Repo) -> list[Finding]:
         if name.startswith(LEGACY_PREFIX) or name == "repro":
             continue
         if name.startswith(ROOT_PACKAGES) and name in (
-            "repro.core", "repro.kernels"
+            "repro.core", "repro.kernels", "repro.serve"
         ):
             continue
         if name not in reachable:

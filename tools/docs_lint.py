@@ -43,11 +43,11 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(ROOT, "src"))
 
 TOP_DIRS = ("core", "data", "runtime", "parallel", "kernels", "checkpoint",
-            "launch", "optim", "models", "analysis", "configs", "src",
-            "benchmarks", "examples", "tests", "docs", "tools")
+            "serve", "launch", "optim", "models", "analysis", "configs",
+            "src", "benchmarks", "examples", "tests", "docs", "tools")
 REPRO_PKGS = ("core", "data", "runtime", "parallel", "kernels",
-              "checkpoint", "launch", "optim", "models", "analysis",
-              "configs")
+              "checkpoint", "serve", "launch", "optim", "models",
+              "analysis", "configs")
 
 INLINE_CODE = re.compile(r"`([^`\n]+)`")
 FENCE = re.compile(r"^(```|~~~)")
